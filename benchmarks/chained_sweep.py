@@ -1,0 +1,31 @@
+"""Paper Fig. 9: chained-functions latency vs input size (8->128 MB) for
+Direct/KVS/S3 x {baseline, truffle} + the improvement panel (Fig. 9d)."""
+from __future__ import annotations
+
+from benchmarks.common import MB, chained_workflow, emit, run_once
+
+SIZES_MB = (8, 32, 64, 128)
+
+
+def run(sizes=SIZES_MB):
+    rows = []
+    for storage in ("direct", "kvs", "s3"):
+        best = 0.0
+        for size in sizes:
+            b = run_once(chained_workflow, size * MB, use_truffle=False,
+                         storage=storage)
+            t = run_once(chained_workflow, size * MB, use_truffle=True,
+                         storage=storage)
+            imp = 1 - t["total"] / max(b["total"], 1e-9)
+            best = max(best, imp)
+            rows.append((f"fig9.chained.{storage}.{size}mb", b["total"],
+                         f"baseline={b['total']:.3f}s truffle={t['total']:.3f}s "
+                         f"improvement={imp:.0%}"))
+        rows.append((f"fig9d.best_improvement.{storage}", 0.0,
+                     f"up_to={best:.0%}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Figs. 7+8: total chained-workflow latency at 128 MB with lifecycle
+phases, and the I/O-latency share — Truffle vs Direct/KVS/S3 baselines.
+Claim under test: Truffle cuts the I/O impact by up to ~77% and total
+latency by up to ~46%."""
+from __future__ import annotations
+
+from benchmarks.common import MB, chained_workflow, emit, run_once
+
+
+def run(size_mb: int = 128):
+    rows, results = [], {}
+    for storage in ("direct", "kvs", "s3"):
+        for mode in (False, True):
+            r = run_once(chained_workflow, size_mb * MB, use_truffle=mode,
+                         storage=storage)
+            results[(storage, mode)] = r
+            label = "truffle" if mode else "baseline"
+            rows.append((f"fig7.total.{storage}.{label}", r["total"],
+                         f"io={r['io_total']:.2f}s cold={r['cold_start']:.2f}s"))
+    for storage in ("direct", "kvs", "s3"):
+        b, t = results[(storage, False)], results[(storage, True)]
+        io_red = 1 - t["io_total"] / max(b["io_total"], 1e-9)
+        tot_red = 1 - t["total"] / max(b["total"], 1e-9)
+        rows.append((f"fig8.io_impact.{storage}", b["io_total"],
+                     f"io_reduction={io_red:.0%} total_reduction={tot_red:.0%}"))
+        emit([rows[-1]])
+    emit([r for r in rows if r[0].startswith("fig7")])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 11: added cold-start delay sweep at fixed input size.
+
+The paper's regime has data transfer LONGER than the base cold start
+(their Fig. 11 Truffle curve stays flat until ~4-6 s of added delay): the
+input is sized so the S3 read ≈ 6 s (δ > β). Claims under test: baseline
+latency grows linearly with the delay from 0; Truffle's stays flat while the
+transfer still masks (absolute gain grows ≈ linearly, up to δ), so functions
+with longer cold starts profit more — then both grow linearly once the
+transfer is fully hidden."""
+from __future__ import annotations
+
+from benchmarks.common import MB, chained_workflow, emit, run_once
+
+DELAYS_S = (0.0, 2.0, 4.0, 6.0, 8.0, 10.0)
+SIZE_MB = 384  # S3 read ~6.1 s at 0.5 Gbit/s — the paper's δ > β regime
+
+
+def run(size_mb: int = SIZE_MB, delays=DELAYS_S):
+    rows = []
+    for storage in ("s3", "kvs"):
+        gains, imps = [], []
+        for d in delays:
+            b = run_once(chained_workflow, size_mb * MB, use_truffle=False,
+                         storage=storage, extra_cold_s=d)
+            t = run_once(chained_workflow, size_mb * MB, use_truffle=True,
+                         storage=storage, extra_cold_s=d)
+            gain = b["total"] - t["total"]
+            imp = gain / max(b["total"], 1e-9)
+            gains.append(gain)
+            imps.append(imp)
+            rows.append((f"fig11.coldstart.{storage}.delay{d:g}s", b["total"],
+                         f"baseline={b['total']:.3f}s truffle={t['total']:.3f}s "
+                         f"gain={gain:.2f}s improvement={imp:.0%}"))
+        rows.append((f"fig11.long_vs_short.{storage}", 0.0,
+                     f"gain@0s={gains[0]:.2f}s max_gain={max(gains):.2f}s "
+                     f"extra_masking={max(gains) - gains[0]:.2f}s "
+                     f"long_profit_x{max(gains) / max(gains[0], 1e-9):.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Shared benchmark utilities: paper-calibrated clusters and workflows.
+
+Calibration (EXPERIMENTS.md §Calibration): Knative-ish cold start
+β = ν(1.45s) + η(0.30s), scheduling α ≈ 0.15s + ingress 0.30s for
+payload-carrying requests, VM-to-VM goodput 0.45 Gbit/s — fitted to the
+paper's Fig. 9 absolute ranges. ``BENCH_SCALE`` shrinks simulated time
+uniformly (default 0.5); all reported numbers are unscaled sim-seconds."""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.runtime.clock import Clock                      # noqa: E402
+from repro.runtime.cluster import Cluster                  # noqa: E402
+from repro.runtime.function import FunctionSpec            # noqa: E402
+from repro.runtime.workflow import (Stage, Workflow,       # noqa: E402
+                                    WorkflowRunner, WorkflowTrace)
+
+MB = 1 << 20
+SCALE = float(os.environ.get("BENCH_SCALE", "0.5"))
+PAPER_COLD = {"provision_s": 1.30, "startup_s": 0.25}
+
+
+def make_clock() -> Clock:
+    return Clock(scale=SCALE)
+
+
+def make_cluster(clock: Clock) -> Cluster:
+    return Cluster(node_specs=[("edge-0", "edge"), ("edge-1", "edge"),
+                               ("edge-2", "edge"), ("cloud-0", "cloud")],
+                   clock=clock)
+
+
+def _producer(size: int):
+    def handler(data, inv):
+        return bytes(size)
+    return handler
+
+
+def _identity(data, inv):
+    return data
+
+
+def chained_workflow(size: int, *, extra_cold_s: float = 0.0,
+                     tag: str = "") -> Workflow:
+    """Paper §VI: two sequential data-intensive functions a -> b."""
+    a = FunctionSpec(f"chain-a{tag}", _producer(size), exec_s=0.05,
+                     affinity="edge-0", **PAPER_COLD)
+    b = FunctionSpec(f"chain-b{tag}", _identity, exec_s=0.05,
+                     affinity="edge-1", extra_cold_start_s=extra_cold_s,
+                     **PAPER_COLD)
+    return Workflow("chained", {"a": Stage(a), "b": Stage(b, deps=["a"])})
+
+
+def video_workflow(size: int, fanout: int = 2, tag: str = "") -> Workflow:
+    """Paper §VI: Video Streaming -> Decoder (fan-out) -> Image Recognition
+    (fan-in) — the dominant serverless invocation patterns."""
+    stages: Dict[str, Stage] = {
+        "stream": Stage(FunctionSpec(f"v-stream{tag}", _producer(size),
+                                     exec_s=0.08, affinity="edge-0",
+                                     **PAPER_COLD))}
+    seg = max(size // fanout, 1)
+    for i in range(fanout):
+        stages[f"dec{i}"] = Stage(
+            FunctionSpec(f"v-dec{i}{tag}", _producer(seg), exec_s=0.10,
+                         affinity=f"edge-{1 + i % 2}", **PAPER_COLD),
+            deps=["stream"])
+    stages["recog"] = Stage(
+        FunctionSpec(f"v-recog{tag}", _identity, exec_s=0.15,
+                     affinity="cloud-0", **PAPER_COLD),
+        deps=[f"dec{i}" for i in range(fanout)])
+    return Workflow("video", stages)
+
+
+def run_once(wf_builder, size: int, *, use_truffle: bool, storage: str,
+             extra_cold_s: float = 0.0, **wf_kw) -> Dict[str, float]:
+    clock = make_clock()
+    cluster = make_cluster(clock)
+    tag = f"-{storage}-{int(use_truffle)}-{size}-{extra_cold_s}"
+    if wf_builder is chained_workflow:
+        wf = wf_builder(size, extra_cold_s=extra_cold_s, tag=tag, **wf_kw)
+    else:
+        wf = wf_builder(size, tag=tag, **wf_kw)
+    runner = WorkflowRunner(cluster, use_truffle=use_truffle, storage=storage,
+                            prewarm_roots=True)
+    tr = runner.run(wf, b"trigger", source_node="edge-0")
+    phases = {k: clock.elapsed_sim(v) for k, v in tr.phase_totals().items()}
+    return {"total": clock.elapsed_sim(tr.total), **phases,
+            "io_total": phases["io"] + phases["put"]}
+
+
+def emit(rows: List[tuple]) -> None:
+    """CSV contract: name,us_per_call,derived."""
+    for name, seconds, derived in rows:
+        print(f"{name},{seconds * 1e6:.0f},{derived}")

@@ -1,0 +1,106 @@
+"""§Roofline: build the three-term roofline table from the dry-run artifacts.
+
+Terms (TPU v5e targets): per-device seconds —
+  compute    = HLO_FLOPs_per_device / 197e12 (bf16 peak)
+  memory     = HLO_bytes_per_device / 819e9  (HBM bw)
+  collective = collective_bytes_per_device / 50e9 (per-link ICI)
+Cost-analysis numbers use the unrolled-probe extrapolation (flops_est, ...)
+which corrects XLA's count-while-bodies-once undercount; ``model_flops`` is
+the analytic 6ND reference. mfu_est = useful-time / dominant-term — the
+static upper bound on MFU this program can reach on the target."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> List[dict]:
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def roofline_terms(rec: dict) -> Optional[Dict[str, float]]:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    flops = rec.get("flops_est") or rec.get("flops", 0.0)
+    byts = rec.get("bytes_accessed_est") or rec.get("bytes_accessed", 0.0)
+    coll = rec.get("collective_bytes_est") or rec.get("collective_bytes", 0.0)
+    n_dev = rec.get("num_devices", 256)
+    compute = flops / PEAK_FLOPS
+    memory = byts / HBM_BW
+    collective = coll / LINK_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    useful = rec.get("model_flops", 0.0) / (n_dev * PEAK_FLOPS)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant[0], "dominant_s": dominant[1],
+        "useful_s": useful,
+        "mfu_est": useful / dominant[1] if dominant[1] > 0 else 0.0,
+        "useful_flops_ratio": rec.get("useful_flops_ratio", 0.0),
+        "extrapolated": "flops_est" in rec,
+    }
+
+
+def table(mesh: str = "single", tag: str = "") -> List[dict]:
+    rows = []
+    for rec in load_cells(mesh, tag):
+        t = roofline_terms(rec)
+        row = {"arch": rec["arch"], "shape": rec["shape"], "kind": rec.get("kind")}
+        if rec.get("skipped"):
+            row["status"] = "skipped"
+            row["note"] = rec.get("reason", "")
+        elif not rec.get("ok"):
+            row["status"] = "FAILED"
+            row["note"] = rec.get("error", "")[:100]
+        else:
+            row.update(status="ok", **t)
+        rows.append(row)
+    return rows
+
+
+def run():
+    rows = table()
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,mfu_est,"
+          "useful_flops_ratio")
+    out_rows = []
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},,,,{r['status']},,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.4g},"
+              f"{r['memory_s']:.4g},{r['collective_s']:.4g},{r['dominant']},"
+              f"{r['mfu_est']:.3f},{r['useful_flops_ratio']:.3f}")
+        out_rows.append((f"roofline.{r['arch']}.{r['shape']}", r["dominant_s"],
+                         f"dominant={r['dominant']} mfu_est={r['mfu_est']:.3f}"))
+    csv = DRYRUN_DIR.parent / "roofline.csv"
+    with open(csv, "w") as f:
+        f.write("arch,shape,status,compute_s,memory_s,collective_s,dominant,"
+                "mfu_est,useful_flops_ratio,note\n")
+        for r in rows:
+            if r["status"] == "ok":
+                f.write(f"{r['arch']},{r['shape']},ok,{r['compute_s']:.6g},"
+                        f"{r['memory_s']:.6g},{r['collective_s']:.6g},"
+                        f"{r['dominant']},{r['mfu_est']:.4f},"
+                        f"{r['useful_flops_ratio']:.4f},\n")
+            else:
+                f.write(f"{r['arch']},{r['shape']},{r['status']},,,,,,,"
+                        f"\"{r.get('note', '')}\"\n")
+    print(f"# wrote {csv}")
+    return out_rows
+
+
+if __name__ == "__main__":
+    run()

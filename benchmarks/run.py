@@ -1,0 +1,61 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  fig1        lifecycle phase breakdown (D/KVS/S3, 128 MB)
+  fig7/fig8   chained workflow totals + IO-impact reduction
+  fig9        chained latency vs input size (+9d improvements)
+  fig10       video-analytics latency sweep (+10d)
+  fig11       added-cold-start-delay sweep
+  eq4         analytic-model validation
+  train.*     SDP overlap on a real-compile training cold start
+  serve.*     CSP overlap on a prefill->decode KV handoff
+  roofline.*  three-term roofline per dry-run cell (reads experiments/)
+
+Env: BENCH_SCALE (default 0.5) shrinks simulated time; BENCH_FAST=1 runs a
+reduced grid; BENCH_SKIP=ml skips the real-compile ML benches."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    t0 = time.time()
+    fast = os.environ.get("BENCH_FAST") == "1"
+    skip = set(os.environ.get("BENCH_SKIP", "").split(","))
+
+    from benchmarks import (chained_sweep, chained_total, coldstart_sweep,
+                            lifecycle, model_validation, roofline,
+                            video_analytics)
+
+    print("# --- paper figures ---")
+    lifecycle.run(size_mb=32 if fast else 128)
+    chained_total.run(size_mb=32 if fast else 128)
+    chained_sweep.run(sizes=(8, 32) if fast else (8, 32, 64, 128))
+    video_analytics.run(sizes=(8, 32) if fast else (8, 32, 64, 128))
+    coldstart_sweep.run(size_mb=64 if fast else coldstart_sweep.SIZE_MB,
+                        delays=(0.0, 4.0) if fast else
+                        (0.0, 2.0, 4.0, 6.0, 8.0, 10.0))
+    model_validation.run()
+
+    if "ml" not in skip:
+        print("# --- ML-framework integration (real XLA compile) ---")
+        from benchmarks import serve_handoff, train_coldstart
+        train_coldstart.run()
+        serve_handoff.run()
+
+    print("# --- roofline (from dry-run artifacts) ---")
+    try:
+        roofline.run()
+    except Exception as e:  # noqa: BLE001 — dry-run may not have run yet
+        print(f"# roofline skipped: {e}")
+
+    print(f"# total benchmark wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""The paper's §II illustrative scenario: real-time fire detection for smart
+cities across the Edge-Cloud Continuum.
+
+Ingest -> Extract-Frames (edge) -> Object-Detection (edge, fan-out) ->
+{Alarm-Trigger (edge), Prepare-Dataset -> cloud training ingest (cloud)}.
+
+Edge stages pass large video chunks with CSP during downstream cold starts;
+the cloud hop (slow WAN link) benefits the most from overlap.
+
+  PYTHONPATH=src python examples/fire_detection_workflow.py [--scale 0.1]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+MB = 1 << 20
+
+
+def build_workflow(tag: str) -> Workflow:
+    def frames(data, inv):
+        return bytes(48 * MB)          # extracted frames from a video chunk
+
+    def detect(data, inv):
+        return data[:24 * MB]          # detected-region crops
+
+    def alarm(data, inv):
+        return b"ALARM" if len(data) > MB else b"ok"
+
+    def prep(data, inv):
+        return data[:16 * MB]          # training samples for the cloud
+
+    cold = {"provision_s": 1.3, "startup_s": 0.25}
+    return Workflow("fire-detection", {
+        "extract": Stage(FunctionSpec(f"extract{tag}", frames, exec_s=0.2,
+                                      affinity="edge-0", **cold)),
+        "detect0": Stage(FunctionSpec(f"detect0{tag}", detect, exec_s=0.3,
+                                      affinity="edge-1", **cold),
+                         deps=["extract"]),
+        "detect1": Stage(FunctionSpec(f"detect1{tag}", detect, exec_s=0.3,
+                                      affinity="edge-2", **cold),
+                         deps=["extract"]),
+        "alarm": Stage(FunctionSpec(f"alarm{tag}", alarm, exec_s=0.05,
+                                    affinity="edge-0", **cold),
+                       deps=["detect0", "detect1"]),
+        "prep": Stage(FunctionSpec(f"prep{tag}", prep, exec_s=0.2,
+                                   affinity="cloud-0", **cold),
+                      deps=["detect0", "detect1"]),
+    })
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1)
+    args = ap.parse_args()
+
+    for use_truffle in (False, True):
+        clock = Clock(scale=args.scale)
+        cluster = Cluster(node_specs=[("edge-0", "edge"), ("edge-1", "edge"),
+                                      ("edge-2", "edge"), ("cloud-0", "cloud")],
+                          clock=clock)
+        runner = WorkflowRunner(cluster, use_truffle=use_truffle,
+                                storage="direct", prewarm_roots=True)
+        tr = runner.run(build_workflow(f"-{use_truffle}"), b"video-chunk")
+        mode = "truffle " if use_truffle else "baseline"
+        print(f"\n{mode}: end-to-end {clock.elapsed_sim(tr.total):6.2f}s "
+              f"(alarm={tr.stages['alarm'].output.decode()})")
+        for name, sr in tr.stages.items():
+            ph = {k: round(clock.elapsed_sim(v), 2)
+                  for k, v in sr.record.phases().items()}
+            print(f"  {name:9s} on {sr.record.node:8s} {ph}")
+
+
+if __name__ == "__main__":
+    main()

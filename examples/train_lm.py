@@ -1,0 +1,42 @@
+"""Training example: train an LM with the Truffle-overlapped cold start,
+async checkpointing, failure injection and elastic restart — a thin wrapper
+over launch/train.py presets.
+
+Default runs a reduced xlstm-125m config for speed on CPU; ``--full`` trains
+the real 125M-parameter configuration (slow on CPU — sized for the TPU
+target).
+
+  PYTHONPATH=src python examples/train_lm.py
+  PYTHONPATH=src python examples/train_lm.py --full --steps 300
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-smoke) architecture config")
+    ap.add_argument("--inject-failure", type=int, default=15)
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--ckpt-every", "10",
+            "--ckpt-dir", "/tmp/repro-train-example",
+            "--inject-failure", str(args.inject_failure)]
+    if args.full:
+        argv += ["--no-smoke", "--batch", "4", "--seq", "512"]
+    out = train.main(argv)
+    print(f"example done: trained to step {out['final_step']} across "
+          f"{out['incarnation'] + 1} incarnation(s) with checkpoint/restart")
+
+
+if __name__ == "__main__":
+    main()

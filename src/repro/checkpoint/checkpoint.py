@@ -1,0 +1,165 @@
+"""Sharded checkpointing: save/restore pytrees as npz shards + manifest,
+async (background-thread) saves, rotation, and CSP-streamed restore.
+
+Fault-tolerance contract (exercised by launch/train.py --inject-failure):
+  * saves are atomic (tmp dir + rename);
+  * restore picks the latest complete step;
+  * elastic restarts may restore onto a different mesh — values are host
+    numpy, resharding happens at device_put against the new topology.
+"""
+from __future__ import annotations
+
+import io
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+_NPZ_SAVABLE = {"float64", "float32", "float16", "int64", "int32", "int16",
+                "int8", "uint8", "uint16", "uint32", "uint64", "bool"}
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        v = np.asarray(leaf)
+        if str(v.dtype) not in _NPZ_SAVABLE:   # bf16 etc. -> widen for npz
+            v = v.astype(np.float32)
+        flat[key] = v
+    return flat
+
+
+def _unflatten_into(like: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    paths = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        leaves.append(flat[key].astype(leaf.dtype) if hasattr(leaf, "dtype")
+                      else flat[key])
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+def serialize(tree: PyTree) -> bytes:
+    """Whole-tree bytes (CSP payloads, storage uploads)."""
+    buf = io.BytesIO()
+    np.savez(buf, **_flatten(tree))
+    return buf.getvalue()
+
+
+def deserialize(data: bytes, like: PyTree) -> PyTree:
+    with np.load(io.BytesIO(data)) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten_into(like, flat)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 shard_bytes: int = 512 << 20):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.shard_bytes = shard_bytes
+        self._inflight: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: PyTree) -> None:
+        flat = _flatten(state)
+        tmp = self.dir / f".tmp-{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "shards": [], "time": time.time()}
+        shard, size, idx = {}, 0, 0
+
+        def flush():
+            nonlocal shard, size, idx
+            if not shard:
+                return
+            name = f"shard-{idx:04d}.npz"
+            with open(tmp / name, "wb") as f:
+                np.savez(f, **shard)
+            manifest["shards"].append({"file": name, "keys": list(shard)})
+            shard, size = {}, 0
+            idx += 1
+
+        for k, v in flat.items():
+            shard[k] = v
+            size += v.nbytes
+            if size >= self.shard_bytes:
+                flush()
+        flush()
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = self.dir / f"step-{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                   # atomic publish
+        self._rotate()
+
+    def save_async(self, step: int, state: PyTree) -> threading.Thread:
+        """Snapshot to host (blocking, cheap) then write in the background."""
+        host_state = jax.tree.map(np.asarray, state)
+        self.wait()
+        t = threading.Thread(target=self.save, args=(step, host_state),
+                             daemon=True, name=f"ckpt-save-{step}")
+        t.start()
+        self._inflight = t
+        return t
+
+    def wait(self) -> None:
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
+
+    def _rotate(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step-{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step-*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: PyTree, step: Optional[int] = None
+                ) -> Tuple[PyTree, int]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step-{step:08d}"
+        flat: Dict[str, np.ndarray] = {}
+        manifest = json.loads((d / "manifest.json").read_text())
+        for sh in manifest["shards"]:
+            with np.load(d / sh["file"]) as z:
+                for k in z.files:
+                    flat[k] = z[k]
+        return _unflatten_into(like, flat), step
+
+    def read_bytes(self, step: Optional[int] = None) -> bytes:
+        """Raw checkpoint bytes (for CSP streaming to a restarting worker)."""
+        step = step if step is not None else self.latest_step()
+        d = self.dir / f"step-{step:08d}"
+        buf = io.BytesIO()
+        import zipfile
+        with zipfile.ZipFile(buf, "w") as zf:
+            for p in sorted(d.iterdir()):
+                zf.write(p, p.name)
+        return buf.getvalue()

@@ -1,0 +1,229 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The layer stack
+is described by a repeating *superblock* pattern (``block_pattern``) so that
+heterogeneous stacks (Jamba's 1:7 attn:mamba interleave, xLSTM's m/s pattern)
+lower to a single ``lax.scan`` over ``num_layers // len(block_pattern)``
+periods — compile time stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    d_expert: int = 0              # expert FFN hidden size (0 -> use d_ff)
+    num_shared: int = 0            # shared (always-on) experts, each d_expert wide
+    capacity_factor: float = 1.25  # train-time token capacity per expert
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+    chunk: int = 256               # scan chunk (memory/parallelism trade-off)
+    # §Perf: compute SSM params (A_bar/Bx) per chunk inside the scan (True)
+    # vs materializing them for the full sequence (False, paper-naive).
+    perchunk_params: bool = True
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    # positions (mod len(block_pattern)) handled via block_pattern entries
+    mlstm_proj_factor: float = 2.0
+    slstm_ffn_factor: float = 4.0 / 3.0
+    chunk: int = 128               # mLSTM chunkwise-parallel chunk length
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec models (whisper). Frontend is a STUB:
+    ``input_specs`` supplies precomputed frame embeddings."""
+    num_layers: int = 24
+    num_frames: int = 1500         # whisper-medium: 30 s -> 1500 frames
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """VLM frontend STUB: precomputed patch embeddings + M-RoPE sections."""
+    num_image_tokens: int = 1024
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w over head_dim/2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+
+    # --- attention ---
+    attention_type: str = "gqa"    # gqa | mla
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    partial_rotary: float = 1.0    # fraction of head_dim that is rotated
+    mla: Optional[MLAConfig] = None
+
+    # --- layer stack ---
+    # One *superblock* period; each entry is (mixer, mlp):
+    #   mixer in {attn, mamba, mlstm, slstm}; mlp in {mlp, moe, none, glu}
+    # Dense default: (("attn", "mlp"),)
+    block_pattern: Tuple[Tuple[str, str], ...] = (("attn", "mlp"),)
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    act: str = "silu"              # silu (SwiGLU MLP) | gelu (plain MLP)
+    tie_embeddings: bool = False
+
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encoder: Optional[EncoderConfig] = None   # != None -> enc-dec (whisper)
+    vision: Optional[VisionConfig] = None     # != None -> VLM (qwen2-vl)
+
+    # --- numerics / performance knobs (hillclimb levers) ---
+    dtype: str = "bfloat16"        # activation/compute dtype
+    param_dtype: str = "float32"   # canonical parameter dtype
+    remat: str = "dots"            # none | dots | full  (train-time only)
+    loss_chunk: int = 2048         # vocab-loss computed over seq chunks (memory)
+    scan_layers: bool = True       # lax.scan over superblocks (vs unrolled)
+    unroll_scans: bool = False     # unroll inner seq-chunk scans (probe compiles)
+    kv_cache_dtype: str = "model"  # model | int8 (quantized decode cache)
+    attention_impl: str = "xla"    # xla | pallas | pallas_interpret
+
+    # Sub-quadratic? (drives long_500k applicability)
+    @property
+    def subquadratic(self) -> bool:
+        mixers = {m for m, _ in self.block_pattern}
+        return bool(mixers & {"mamba", "mlstm", "slstm"})
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        assert self.num_layers % self.period == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"block_pattern period={self.period}")
+        return self.num_layers // self.period
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter count (for 6ND model-flops accounting) ----
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count (embedding included once)."""
+        d, h = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            if self.attention_type == "mla":
+                m = self.mla
+                qdim = n_q * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                return (d * m.q_lora_rank + m.q_lora_rank * qdim
+                        + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                        + m.kv_lora_rank * n_q * (m.qk_nope_head_dim + m.v_head_dim)
+                        + n_q * m.v_head_dim * d)
+            return d * (n_q * h) + 2 * d * (n_kv * h) + (n_q * h) * d
+
+        def mlp_params(dff: int) -> int:
+            n_mat = 3 if self.act == "silu" else 2
+            return n_mat * d * dff
+
+        def moe_params(active: bool) -> int:
+            m = self.moe
+            dff = m.d_expert or self.d_ff
+            n_e = (m.top_k if active else m.num_experts) + m.num_shared
+            return n_e * mlp_params(dff) + d * m.num_experts
+
+        def mamba_params() -> int:
+            mc = self.mamba
+            d_in = mc.expand * d
+            dt_rank = mc.dt_rank or -(-d // 16)
+            return (d * 2 * d_in + mc.d_conv * d_in
+                    + d_in * (dt_rank + 2 * mc.d_state) + dt_rank * d_in
+                    + d_in * mc.d_state + d_in + d_in * d)
+
+        def mlstm_params() -> int:
+            d_in = int(self.xlstm.mlstm_proj_factor * d)
+            # up(2x), q/k/v, gates (i,f,o from x), down
+            return d * 2 * d_in + 3 * d_in * d_in + 3 * d_in + d_in * d
+
+        def slstm_params() -> int:
+            dff = int(self.xlstm.slstm_ffn_factor * d)
+            # 4 gates x (input + recurrent) + GLU ffn
+            return 4 * (d * d + d * d // max(self.num_heads, 1)) + 3 * d * dff
+
+        per_period = 0
+        for mixer, mlp in self.block_pattern:
+            per_period += {"attn": attn_params, "mamba": mamba_params,
+                           "mlstm": mlstm_params, "slstm": slstm_params}[mixer]()
+            if mlp == "mlp":
+                per_period += mlp_params(self.d_ff)
+            elif mlp == "moe":
+                per_period += moe_params(active_only)
+            elif mlp == "glu":
+                per_period += mlp_params(int(self.xlstm.slstm_ffn_factor * d)) if self.xlstm else mlp_params(self.d_ff)
+        total += per_period * self.num_periods
+
+        if self.encoder is not None:  # whisper: encoder self-attn + mlp, decoder cross-attn
+            enc = self.encoder.num_layers * (attn_params() + mlp_params(self.d_ff))
+            xattn = self.num_layers * attn_params()
+            total += enc + xattn
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to the LM family (all 10 archs share this grid).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; reason if skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k skipped: pure full-attention arch (quadratic)"
+    return True, ""

@@ -1,0 +1,27 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2. Mamba+attn 1:7 interleave (attn period 8 offset 4),
+MoE every 2nd layer (offset 1). No positional encoding on attention layers.
+[arXiv:2403.19887]"""
+from repro.configs.base import MambaConfig, MoEConfig, ModelConfig
+
+_PATTERN = tuple(
+    ("attn" if i == 4 else "mamba", "moe" if i % 2 == 1 else "mlp")
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=65536, head_dim=128,
+    partial_rotary=0.0,  # Jamba attention layers use no positional encoding
+    block_pattern=_PATTERN,
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=14336),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2, chunk=256),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=8, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, loss_chunk=0,
+    moe=MoEConfig(num_experts=4, top_k=2, d_expert=128),
+    mamba=MambaConfig(d_state=4, d_conv=4, expand=2, chunk=16),
+)

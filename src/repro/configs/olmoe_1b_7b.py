@@ -1,0 +1,18 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (kv=16) expert d_ff=1024
+vocab=50304, MoE 64e top-8 on every layer, QK-norm. [arXiv:2409.02060]"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1024, vocab_size=50304, head_dim=128,
+    qk_norm=True,
+    block_pattern=(("attn", "moe"),),
+    moe=MoEConfig(num_experts=64, top_k=8, d_expert=1024),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, loss_chunk=0,
+    moe=MoEConfig(num_experts=8, top_k=2, d_expert=128),
+)

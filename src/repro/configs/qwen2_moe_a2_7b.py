@@ -1,0 +1,19 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (kv=16) routed expert
+d_ff=1408 vocab=151936, 60 routed experts top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=151936, head_dim=128,
+    qkv_bias=True,
+    block_pattern=(("attn", "moe"),),
+    moe=MoEConfig(num_experts=60, top_k=4, d_expert=1408, num_shared=4),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, loss_chunk=0,
+    moe=MoEConfig(num_experts=6, top_k=2, d_expert=64, num_shared=2),
+)

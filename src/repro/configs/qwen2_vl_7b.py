@@ -1,0 +1,19 @@
+"""qwen2-vl-7b [vlm] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064. M-RoPE (t/h/w sections 16/24/24 over head_dim/2). Vision
+frontend is a STUB: input_specs supplies precomputed patch embeddings and
+M-RoPE position ids. [arXiv:2409.12191]"""
+from repro.configs.base import ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    d_ff=18944, vocab_size=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1e6,
+    vision=VisionConfig(num_image_tokens=1024, mrope_sections=(16, 24, 24)),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, loss_chunk=0,
+    vision=VisionConfig(num_image_tokens=8, mrope_sections=(2, 3, 3)),
+)

@@ -1,0 +1,16 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H (MHA kv=32) d_ff=5632
+vocab=100352. Partial rotary 0.25, LayerNorm. [hf:stabilityai/stablelm-2-1_6b;
+unverified tier]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b", family="dense",
+    num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=5632, vocab_size=100352, head_dim=64,
+    partial_rotary=0.25, norm="layernorm", qkv_bias=True,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, loss_chunk=0,
+)

@@ -1,0 +1,18 @@
+"""whisper-medium [audio] — enc-dec, 24L each, d_model=1024 16H (MHA)
+d_ff=4096 vocab=51865. Conv/log-mel frontend is a STUB: input_specs supplies
+precomputed frame embeddings [B, 1500, 1024]. [arXiv:2212.04356; unverified]"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=51865, head_dim=64,
+    norm="layernorm", act="gelu", qkv_bias=True, tie_embeddings=True,
+    encoder=EncoderConfig(num_layers=24, num_frames=1500),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, loss_chunk=0,
+    encoder=EncoderConfig(num_layers=2, num_frames=24),
+)

@@ -1,0 +1,24 @@
+"""xlstm-125m [ssm] — 12L d_model=768 4H vocab=50304, d_ff=0 (block-internal
+projections only). sLSTM blocks at layers 3 and 9 (period-6 pattern), mLSTM
+elsewhere; mLSTM proj factor 2.0, sLSTM GLU-FFN factor 4/3.
+[arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+_PATTERN = (
+    ("mlstm", "none"), ("mlstm", "none"), ("mlstm", "none"),
+    ("slstm", "glu"), ("mlstm", "none"), ("mlstm", "none"),
+)
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", family="ssm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304, head_dim=192,
+    block_pattern=_PATTERN, tie_embeddings=True,
+    xlstm=XLSTMConfig(mlstm_proj_factor=2.0, slstm_ffn_factor=4.0 / 3.0, chunk=128),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=6, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    vocab_size=512, loss_chunk=0,
+    xlstm=XLSTMConfig(mlstm_proj_factor=2.0, slstm_ffn_factor=4.0 / 3.0, chunk=8),
+)

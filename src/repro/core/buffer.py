@@ -1,0 +1,88 @@
+"""Truffle Buffer: per-node content store holding input data until the
+target function is fully provisioned (paper §III-B.1e).
+
+Local by design (high-speed in-memory access next to the function); capacity
+bounded with LRU eviction of unpinned entries; ``wait_for`` lets a starting
+function block until its input lands (the CSP/SDP rendezvous point)."""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class BufferEntry:
+    key: str
+    data: bytes
+    created: float
+    pinned: bool = False
+
+
+class Buffer:
+    def __init__(self, capacity_bytes: int = 2 << 30, name: str = "buffer"):
+        self.name = name
+        self.capacity = capacity_bytes
+        self._entries: "OrderedDict[str, BufferEntry]" = OrderedDict()
+        self._size = 0
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self.stats = {"puts": 0, "gets": 0, "waits": 0, "evictions": 0}
+
+    def set(self, key: str, data: bytes, pinned: bool = False) -> None:
+        with self._cond:
+            if key in self._entries:
+                self._size -= len(self._entries[key].data)
+            self._entries[key] = BufferEntry(key, data, time.monotonic(), pinned)
+            self._entries.move_to_end(key)
+            self._size += len(data)
+            self.stats["puts"] += 1
+            self._evict_locked()
+            self._cond.notify_all()
+
+    def get(self, key: str, pop: bool = False) -> Optional[bytes]:
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return None
+            self.stats["gets"] += 1
+            if pop:
+                del self._entries[key]
+                self._size -= len(e.data)
+            else:
+                self._entries.move_to_end(key)
+            return e.data
+
+    def wait_for(self, key: str, timeout: Optional[float] = None,
+                 pop: bool = False) -> Optional[bytes]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            self.stats["waits"] += 1
+            while key not in self._entries:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._cond.wait(remaining)
+        return self.get(key, pop=pop)
+
+    def _evict_locked(self) -> None:
+        while self._size > self.capacity:
+            for k, e in self._entries.items():
+                if not e.pinned:
+                    del self._entries[k]
+                    self._size -= len(e.data)
+                    self.stats["evictions"] += 1
+                    break
+            else:
+                return  # everything pinned
+
+    @property
+    def size(self) -> int:
+        with self._lock:
+            return self._size
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._entries

@@ -1,0 +1,65 @@
+"""Cold Start Pass (paper §IV-B, Fig. 6 + Algorithm 2).
+
+Inter-function data passing: the source function hands its output to the
+local Truffle, which (1) triggers the target function with a reference key,
+(2a) listens for the target's host assignment, and (6a) ships the payload
+source-node → target-node the moment placement is known — i.e. during the
+target's cold start. The target handler reads from its local buffer."""
+from __future__ import annotations
+
+import threading
+import uuid
+from typing import Optional, Tuple
+
+from repro.runtime.function import ContentRef, LifecycleRecord, Request
+
+
+class CSP:
+    def __init__(self, truffle):
+        self.truffle = truffle
+
+    def pass_data(self, target_fn: str, data: bytes,
+                  exec_after: Optional[float] = None,
+                  ) -> Tuple[bytes, LifecycleRecord]:
+        """Algorithm 2 from the source node's Truffle. Returns the target's
+        result + lifecycle record."""
+        t = self.truffle
+        cluster = t.cluster
+        clock = cluster.clock
+        inv_id = uuid.uuid4().hex
+        buf_key = f"truffle/{target_fn}/{inv_id[:8]}"
+
+        fwd = Request(fn=target_fn,
+                      content_ref=ContentRef("truffle", buf_key, size=len(data)),
+                      source_node=t.node.name, meta={"invocation": inv_id})
+        rec = LifecycleRecord(fn=target_fn, mode="truffle")
+        rec.t_request = clock.now()
+
+        # (2) reference-key trigger to the platform ...
+        fut, rec = cluster.platform.invoke_async(fwd, lightweight_trigger=True,
+                                                 record=rec)
+        errbox = []
+
+        # (2a) ... while listening for the target host; (6a) early transfer.
+        def transfer_path():
+            try:
+                rec.t_transfer_start = clock.now()
+                target_name = t.watcher.resolve_host(target_fn, inv_id)
+                if target_name != t.node.name:
+                    target = cluster.node(target_name)
+                    cluster.transfer(t.node, target, data)   # during cold start
+                    target.buffer.set(buf_key, data)
+                else:
+                    t.node.buffer.set(buf_key, data)
+                rec.t_transfer_end = clock.now()
+            except BaseException as e:  # noqa: BLE001
+                errbox.append(e)
+
+        th = threading.Thread(target=transfer_path, daemon=True,
+                              name=f"csp-{target_fn}-{inv_id[:6]}")
+        th.start()
+        result = fut.result()
+        th.join(timeout=60)
+        if errbox:
+            raise errbox[0]
+        return result, rec

@@ -1,0 +1,50 @@
+"""Data Engine (paper §III-B.1c + Algorithm 1): identifies the storage type
+of incoming function data via an adapter registry, retrieves it, and stores
+it in the node-local Buffer. Extensible: ``register_adapter`` adds storage
+types / providers without touching callers."""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.runtime.function import ContentRef
+
+
+class StorageAdapter:
+    """Adapter facade over a storage service (aws-sdk / go-redis analogue)."""
+
+    def __init__(self, type_name: str, service):
+        self.type_name = type_name
+        self.service = service
+
+    def get(self, key: str) -> Tuple[bytes, float]:
+        return self.service.get(key)
+
+    def put(self, key: str, data: bytes) -> float:
+        return self.service.put(key, data)
+
+
+class DataEngine:
+    def __init__(self, node, cluster):
+        self.node = node
+        self.cluster = cluster
+        self._adapters: Dict[str, StorageAdapter] = {}
+        for name, svc in cluster.storage.items():
+            self.register_adapter(StorageAdapter(name, svc))
+
+    def register_adapter(self, adapter: StorageAdapter) -> None:
+        self._adapters[adapter.type_name] = adapter
+
+    def adapter_for(self, ref: ContentRef) -> StorageAdapter:
+        """Algorithm 1 lines 8-12: resolve the storage client by type."""
+        if ref.storage_type not in self._adapters:
+            raise KeyError(f"no storage adapter for {ref.storage_type!r} "
+                           f"(have: {list(self._adapters)})")
+        return self._adapters[ref.storage_type]
+
+    def fetch(self, ref: ContentRef, buffer_key: Optional[str] = None) -> bytes:
+        """Algorithm 1: resolve adapter → get(content_ref) → buffer.set."""
+        sc = self.adapter_for(ref)
+        data, _ = sc.get(ref.key)                 # line 13: C <- SC.get(C_R)
+        self.node.buffer.set(buffer_key or ref.key, data)   # line 14: B.set(C)
+        return data

@@ -1,0 +1,65 @@
+"""Truffle analytic latency model (paper §III-A, Eqs. 1-5).
+
+Used three ways:
+  * planner: decide whether engaging Truffle helps (hot functions: Δ=0 → proxy)
+  * validation: benchmarks compare measured vs. predicted Δ (Eq. 4)
+  * capacity: expected workflow latency for scheduling decisions
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List
+
+
+@dataclass(frozen=True)
+class PhaseEstimate:
+    alpha: float      # scheduling
+    nu: float         # infrastructure setup
+    eta: float        # runtime startup
+    delta: float      # input data transfer
+    gamma: float      # function execution
+
+    @property
+    def beta(self) -> float:
+        """Eq. 1: cold start β = ν + η."""
+        return self.nu + self.eta
+
+
+def overlap_window(p: PhaseEstimate) -> float:
+    """Eq. 2: φ = max(β, δ) — cold start and transfer run concurrently."""
+    return max(p.beta, p.delta)
+
+
+def truffle_time(p: PhaseEstimate) -> float:
+    """Eq. 3 (single function): τ = α + max(ν+η, δ) + γ."""
+    return p.alpha + overlap_window(p) + p.gamma
+
+
+def baseline_time(p: PhaseEstimate) -> float:
+    """State-of-the-art sequential lifecycle: τ = α + β + δ + γ."""
+    return p.alpha + p.beta + p.delta + p.gamma
+
+
+def improvement(p: PhaseEstimate) -> float:
+    """Eq. 4: Δ = (β + δ) − max(β, δ) = min(β, δ)."""
+    return (p.beta + p.delta) - overlap_window(p)
+
+
+def workflow_time(phases: Iterable[PhaseEstimate], use_truffle: bool = True) -> float:
+    """Eq. 3/5: end-to-end over a function chain."""
+    f = truffle_time if use_truffle else baseline_time
+    return sum(f(p) for p in phases)
+
+
+def should_engage(p: PhaseEstimate, is_warm: bool) -> bool:
+    """Planner: hot functions gain nothing (β=0 → Δ=0); Truffle degrades to a
+    transparent proxy (paper §III-B). Engage when predicted Δ > 0."""
+    if is_warm:
+        return False
+    return improvement(p) > 0.0
+
+
+def optimal_order(phase_sets: List[List[PhaseEstimate]]) -> int:
+    """Eq. 5: pick the plan minimizing Σ (α + max(β,δ) + γ)."""
+    times = [workflow_time(ps) for ps in phase_sets]
+    return times.index(min(times))

@@ -1,0 +1,59 @@
+"""TruffleInstance: the per-node daemon (paper §V: DaemonSet) wiring
+Listener → Ingress → {SDP, CSP} over the shared Buffer / Data Engine /
+Watcher components. The public surface mirrors the paper's architecture:
+
+  handle_request(request)      — SDP: client/event ingress with prefetch
+  pass_data(target_fn, data)   — CSP: inter-function cold-start pass
+  proxy(request)               — hot-function transparent pass-through
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core import model as tmodel
+from repro.core.csp import CSP
+from repro.core.data_engine import DataEngine
+from repro.core.sdp import SDP
+from repro.core.watcher import Watcher
+from repro.runtime.function import LifecycleRecord, Request
+
+
+class TruffleInstance:
+    def __init__(self, node, cluster):
+        self.node = node
+        self.cluster = cluster
+        self.engine = DataEngine(node, cluster)
+        self.watcher = Watcher(cluster)
+        self.sdp = SDP(self)
+        self.csp = CSP(self)
+
+    # ------------------------------------------------------------------ SDP
+    def handle_request(self, request: Request) -> Tuple[bytes, LifecycleRecord]:
+        """Ingress entry (Listener → Ingress). Hot functions take the proxy
+        path (paper §III-B: Truffle only passes the data through)."""
+        if self.cluster.platform.warm_instances(request.fn):
+            return self.proxy(request)
+        return self.sdp.handle(request)
+
+    # ------------------------------------------------------------------ CSP
+    def pass_data(self, target_fn: str, data: bytes) -> Tuple[bytes, LifecycleRecord]:
+        if self.cluster.platform.warm_instances(target_fn):
+            return self.proxy(Request(fn=target_fn, payload=data,
+                                      source_node=self.node.name))
+        return self.csp.pass_data(target_fn, data)
+
+    # ---------------------------------------------------------------- proxy
+    def proxy(self, request: Request) -> Tuple[bytes, LifecycleRecord]:
+        """Transparent pass-through for warm targets: no overlap to exploit,
+        so forward unmodified (payload travels with the request)."""
+        if request.source_node is None:
+            request.source_node = self.node.name
+        out, rec = self.cluster.platform.invoke(request)
+        rec.mode = "truffle-proxy"
+        return out, rec
+
+    # ------------------------------------------------------------- planning
+    def plan(self, estimate: tmodel.PhaseEstimate, fn: str) -> bool:
+        """Eq. 4 planner: engage only when predicted Δ > 0 and fn is cold."""
+        warm = bool(self.cluster.platform.warm_instances(fn))
+        return tmodel.should_engage(estimate, warm)

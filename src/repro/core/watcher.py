@@ -1,0 +1,33 @@
+"""Watcher (paper §III-B.1d + Algorithm 2): subscribes to the orchestrator's
+live scheduling events and resolves the target host for a function the
+moment placement happens — i.e. *before* the sandbox exists. Hot functions
+(already placed) resolve immediately from the warm pool."""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class Watcher:
+    def __init__(self, cluster):
+        self.cluster = cluster
+
+    def resolve_host(self, function: str, invocation: Optional[str] = None,
+                     timeout: float = 120.0) -> str:
+        """Algorithm 2: scan current placements / wait for the event; returns
+        the node name. ``invocation`` pins a specific scale-up."""
+        # Hot path: function already has an assigned worker.
+        if invocation is None:
+            warm = self.cluster.platform.warm_instances(function)
+            if warm:
+                return warm[0].node.name
+
+        def match(e: dict) -> bool:
+            return (e["function"] == function
+                    and (invocation is None or e["invocation"] == invocation))
+
+        ev = self.cluster.bus.wait_for("scheduling.placed", match,
+                                       timeout=timeout)
+        if ev is None:
+            raise TimeoutError(f"watcher: no placement for {function!r} "
+                               f"within {timeout}s")
+        return ev["node"]

@@ -1,0 +1,74 @@
+"""Gradient compression for the DP all-reduce: int8 quantized
+reduce-scatter + all-gather with per-tensor scales and error feedback.
+
+Wire bytes vs fp32 ring all-reduce: ~4x less (1B/elem each way + scalar
+scales). Used inside a ``shard_map`` over the DP axes
+(``steps.build_train_step(..., dp_mode="shardmap_int8")`` lowers it in the
+dry-run so the collective-term reduction is visible in the §Perf log)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize(x: jax.Array, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor quantization -> (int8 codes, fp32 scale)."""
+    assert bits == 8, "int8 path only"
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantization_error(x: jax.Array) -> jax.Array:
+    """Residual for error feedback: x - dequant(quant(x))."""
+    q, s = quantize(x)
+    return x - dequantize(q, s)
+
+
+def compressed_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over ``axis_name`` using int8 RS+AG (call inside shard_map).
+
+    Stage 1 (reduce-scatter): all_to_all int8 chunks; each device dequantizes
+    its chunk from every peer (per-peer scales via a tiny fp32 all_gather)
+    and reduces in fp32. Stage 2 (all-gather): requantize the reduced chunk
+    and gather codes+scales."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    size = x.size
+    chunk = -(-size // n)
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, chunk * n - size))
+    xs = flat.reshape(n, chunk)
+
+    q, s = quantize(xs)
+    qt = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                            tiled=False)              # [n, chunk] peers' rows
+    ss = jax.lax.all_gather(s, axis_name)             # [n]
+    mine = jnp.sum(dequantize(qt, ss[:, None, None] if qt.ndim == 3
+                              else ss[:, None]), axis=0) / n
+
+    q2, s2 = quantize(mine)
+    qg = jax.lax.all_gather(q2, axis_name)            # [n, chunk]
+    sg = jax.lax.all_gather(s2, axis_name)            # [n]
+    out = dequantize(qg, sg[:, None]).reshape(-1)[:size]
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def compressed_grad_sync(grads: PyTree, axis_name: str) -> PyTree:
+    """Apply compressed_mean leaf-wise (large leaves only; small ones go
+    fp32 — scales/biases are latency- not bandwidth-bound)."""
+    def sync(g):
+        if g.size < 16384:
+            return jax.lax.pmean(g, axis_name)
+        return compressed_mean(g, axis_name)
+    return jax.tree.map(sync, grads)

@@ -1,0 +1,161 @@
+"""Logical-axis sharding: rules map logical names -> mesh axes (GSPMD).
+
+Rules are plain dicts ``{logical_axis: mesh_axis | tuple | None}``. Spec
+construction checks divisibility — an axis that does not divide evenly falls
+back to replication (e.g. glm4's 2 KV heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDef
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+def default_rules(multi_pod: bool = False, *, seq_shard_decode: bool = False) -> Dict[str, Any]:
+    """Megatron-style TP over 'model', DP over ('pod','data').
+
+    ``seq_shard_decode``: shard long KV caches over the *data* axis
+    (flash-decode sequence parallelism) — used by decode/long shapes where
+    the cache, not the weights, is the resident giant.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    rules: Dict[str, Any] = {
+        # --- parameters ---
+        "vocab": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "expert": "model",
+        "mamba_inner": "model",
+        "layers": None,
+        "lora": None,
+        # --- activations ---
+        "batch": dp,
+        "dp_groups": dp,          # MoE shard-local dispatch groups
+        "seq": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        # --- kv cache ---
+        "cache_batch": dp,
+        "cache_seq": "data" if seq_shard_decode else None,
+        "cache_heads": "model" if not seq_shard_decode else None,
+    }
+    return rules
+
+
+def dp_axes(rules: Dict[str, Any]) -> Tuple[str, ...]:
+    b = rules["batch"]
+    return tuple(b) if isinstance(b, (tuple, list)) else (b,)
+
+
+def rules_for_shape(kind: str, *, multi_pod: bool = False,
+                    global_batch: int = 0, seq_len: int = 0) -> Dict[str, Any]:
+    """Per-shape rule presets.
+
+    train/prefill: Megatron TP + DP.
+    decode: KV cache sequence-sharded over 'model' (flash-decode layout) —
+      robust to tiny KV-head counts (glm4 kv=2, qwen2-vl kv=4) and keeps the
+      resident cache, not the weights, as the sharded giant.
+    long-context decode (batch=1): cache sequence sharded over ALL axes.
+    """
+    rules = default_rules(multi_pod)
+    if kind == "decode":
+        if global_batch == 1:
+            rules["cache_batch"] = None
+            rules["batch"] = None
+            rules["cache_seq"] = (("pod", "data", "model") if multi_pod
+                                  else ("data", "model"))
+        else:
+            rules["cache_seq"] = "model"
+        rules["cache_heads"] = None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def spec_for_axes(mesh: Optional[Mesh], rules: Dict[str, Any],
+                  shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+    """PartitionSpec for (shape, logical axes) under rules; divisibility-safe."""
+    if mesh is None:
+        return P()
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name is not None else None
+        if mesh_axis is None:
+            entries.append(None)
+            continue
+        key = tuple(mesh_axis) if isinstance(mesh_axis, (tuple, list)) else (mesh_axis,)
+        if used & set(key):  # a mesh axis can shard only one dim
+            entries.append(None)
+            continue
+        if dim % _mesh_axis_size(mesh, mesh_axis) != 0:
+            entries.append(None)
+            continue
+        used |= set(key)
+        entries.append(tuple(key) if len(key) > 1 else key[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def specs_for(defs: PyTree, mesh: Optional[Mesh], rules: Dict[str, Any]) -> PyTree:
+    """PartitionSpec tree mirroring a ParamDef tree."""
+    def f(d: ParamDef) -> P:
+        return spec_for_axes(mesh, rules, d.shape, d.axes)
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def shardings_for(defs: PyTree, mesh: Optional[Mesh], rules: Dict[str, Any]) -> PyTree:
+    specs = specs_for(defs, mesh, rules)
+    if mesh is None:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints — threaded through model code as a context object.
+# ---------------------------------------------------------------------------
+
+class ShardCtx:
+    """Carries (mesh, rules) into model forward code; no-op off-mesh."""
+
+    def __init__(self, mesh: Optional[Mesh] = None, rules: Optional[Dict[str, Any]] = None):
+        self.mesh = mesh
+        self.rules = rules or {}
+
+    def constrain(self, x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = spec_for_axes(self.mesh, self.rules, x.shape, axes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        return _mesh_axis_size(self.mesh, self.rules.get(logical))
+
+
+NULL_CTX = ShardCtx()

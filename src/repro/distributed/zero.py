@@ -1,0 +1,46 @@
+"""ZeRO-1: shard optimizer state over the DP axes.
+
+Each (m, v) tensor inherits its parameter's TP sharding, then its largest
+still-unsharded, divisible dimension is additionally sharded over the DP
+axes. GSPMD inserts the reduce-scatter/all-gather pair around the update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDef
+from repro.distributed.sharding import specs_for, dp_axes, _mesh_axis_size
+
+PyTree = Any
+
+
+def zero1_spec(param_spec: P, shape: Tuple[int, ...], mesh: Mesh,
+               dp: Tuple[str, ...]) -> P:
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    # pick the largest unsharded dim divisible by |DP|
+    best, best_dim = -1, -1
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % dp_size == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        entries[best] = tuple(dp) if len(dp) > 1 else dp[0]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero1_specs(defs: PyTree, mesh: Mesh, rules: Dict[str, Any]) -> PyTree:
+    """Spec tree for optimizer-moment tensors mirroring a ParamDef tree."""
+    base = specs_for(defs, mesh, rules)
+    dp = dp_axes(rules)
+
+    def f(d: ParamDef, spec: P) -> P:
+        return zero1_spec(spec, d.shape, mesh, dp)
+
+    return jax.tree.map(f, defs, base, is_leaf=lambda x: isinstance(x, ParamDef))

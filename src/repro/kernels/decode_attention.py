@@ -1,0 +1,94 @@
+"""Flash-decode: single-query attention against a long KV cache (the serving
+hot spot that Truffle's CSP feeds).
+
+Grid: (batch, kv_head, kv_block); the GQA query group for that kv head
+([G, d]) stays VMEM-resident while KV tiles stream; running (m, l, acc)
+persist in VMEM scratch across the kv-block grid dim. ``kv_len`` arrives via
+scalar-prefetch SMEM so block masking is known before the tile loads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+DEFAULT_BLOCK_K = 256
+
+
+def _decode_kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_k: int, num_kv_blocks: int,
+                   scale: float):
+    j = pl.program_id(2)
+    kv_len = kv_len_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j * block_k < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)                    # [Bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, Bk]
+        cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array, *, block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False) -> jax.Array:
+    """q [B,Hq,d]; k/v [B,Hkv,S,d]; kv_len scalar int32 -> [B,Hq,d]."""
+    B, Hq, d = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    qg = q.reshape(B, Hkv, G, d)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               num_kv_blocks=nk, scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, *_: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, *_: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, d), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), qg, k, v)
+    return out.reshape(B, Hq, d)

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Layout contract with the model code: attention tensors arrive [B, S, H, D]
+(model layout) and are transposed to the kernels' [B, H, S, D]. Backward
+passes go through ``jax.custom_vjp`` with the reference implementation's
+gradient (recompute — standard flash-attention training setup).
+Dispatch: impl='pallas' on real TPUs, 'pallas_interpret' in CPU tests,
+'xla' for dry-run lowering (TPU pallas_call cannot lower to host)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rmsnorm import rmsnorm_2d
+
+
+# ---------------------------------------------------------------- attention
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
+    """q [B,S,Hq,D]; k/v [B,S,Hkv,D] -> [B,S,Hq,D]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _fa_fwd(q, k, v, causal, interpret):
+    return flash_attention(q, k, v, causal, interpret), (q, k, v)
+
+
+def _fa_bwd(causal, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_, causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def decode_attention(q, k, v, kv_len, interpret: bool = False):
+    """q [B,1,Hq,D]; k/v [B,S,Hkv,D] (cache); kv_len scalar -> [B,1,Hq,D]."""
+    q3 = q[:, 0]                                   # [B,Hq,D]
+    kt = jnp.swapaxes(k, 1, 2)                     # [B,Hkv,S,D]
+    vt = jnp.swapaxes(v, 1, 2)
+    out = decode_attention_bhd(q3, kt, vt, kv_len, interpret=interpret)
+    return out[:, None]
+
+
+# ------------------------------------------------------------------ rmsnorm
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = False):
+    """x [..., D]; scale [D]."""
+    shape = x.shape
+    out = rmsnorm_2d(x.reshape(-1, shape[-1]), scale, eps=eps,
+                     interpret=interpret)
+    return out.reshape(shape)

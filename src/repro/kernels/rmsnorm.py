@@ -1,0 +1,38 @@
+"""Fused RMSNorm (row-blocked): one VMEM pass computes the rsqrt(mean-square)
+and applies the learned scale — no separate mean/normalize HBM round-trips."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    o_ref[...] = (x * r * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_2d(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+               block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = False) -> jax.Array:
+    """x [N, D]; scale [D] -> [N, D]."""
+    N, D = x.shape
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0, (N, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(N // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, scale)
+    return out

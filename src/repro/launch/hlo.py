@@ -1,0 +1,72 @@
+"""Post-SPMD HLO analysis: collective inventory for the roofline's third term.
+
+``compiled.as_text()`` shapes are per-device (post-partitioning). For each
+collective op we take its *result* byte size as the per-device traffic proxy
+(all-reduce is counted twice: ring RS+AG moves ~2x). EXPERIMENTS.md §Roofline
+documents this convention.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "all-reduce-scatter")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} (per-device result sizes;
+    all-reduce counted at 2x for ring RS+AG)."""
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count -start only
+        prefix = hlo_text[max(0, m.start() - 120):m.end()]
+        if f"{kind}-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_str)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b * factor
+    return dict(out)
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["bytes"] for v in stats.values())
+
+
+def remat_duplication(hlo_text: str) -> Dict[str, int]:
+    """Count fusion/dot ops as a coarse redundancy signal."""
+    return {
+        "dots": len(re.findall(r"\bdot\(", hlo_text)),
+        "fusions": len(re.findall(r"= \S+ fusion\(", hlo_text)),
+        "while_ops": len(re.findall(r"\bwhile\(", hlo_text)),
+    }

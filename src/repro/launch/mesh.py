@@ -1,0 +1,24 @@
+"""Production meshes. A function (not a module constant) so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def host_device_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = n_data * n_model
+    assert n <= len(jax.devices()), (n, len(jax.devices()))
+    return make_mesh((n_data, n_model), ("data", "model"))

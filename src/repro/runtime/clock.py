@@ -1,0 +1,27 @@
+"""Simulation clock: scale factor for *simulated* delays (provisioning,
+network). Benchmarks run at scale=1.0 (faithful seconds); unit tests shrink
+simulated time without changing orderings."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class Clock:
+    scale: float = 1.0
+
+    def sleep(self, sim_seconds: float) -> None:
+        if sim_seconds > 0:
+            time.sleep(sim_seconds * self.scale)
+
+    def now(self) -> float:
+        """Wall-clock seconds (monotonic)."""
+        return time.monotonic()
+
+    def elapsed_sim(self, wall_delta: float) -> float:
+        """Convert a measured wall delta back to simulated seconds."""
+        return wall_delta / self.scale if self.scale else wall_delta
+
+
+DEFAULT_CLOCK = Clock(1.0)

@@ -1,0 +1,62 @@
+"""Cluster: nodes (edge/cloud tiers), network fabric, storage services,
+event bus, scheduler, platform, and one Truffle instance per node
+(the DaemonSet deployment model of the paper §V)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.buffer import Buffer
+from repro.runtime.clock import Clock, DEFAULT_CLOCK
+from repro.runtime.events import EventBus
+from repro.runtime.netsim import NetworkFabric
+from repro.storage.base import StorageService, make_kvs, make_object_store
+
+
+@dataclass
+class Node:
+    name: str
+    tier: str = "edge"            # edge | cloud
+    buffer: Buffer = None
+    truffle: object = None        # TruffleInstance, attached by Cluster
+
+    def __post_init__(self):
+        if self.buffer is None:
+            self.buffer = Buffer(name=f"{self.name}.buffer")
+
+
+class Cluster:
+    def __init__(self, node_specs: Optional[List[tuple]] = None, *,
+                 clock: Optional[Clock] = None, with_truffle: bool = True,
+                 scheduling_s: float = 0.15):
+        from repro.core.truffle import TruffleInstance
+        from repro.runtime.platform import Platform
+        from repro.runtime.scheduler import Scheduler
+
+        self.clock = clock or DEFAULT_CLOCK
+        node_specs = node_specs or [("edge-0", "edge"), ("edge-1", "edge"),
+                                    ("cloud-0", "cloud")]
+        self.nodes: Dict[str, Node] = {
+            name: Node(name, tier) for name, tier in node_specs}
+        self.network = NetworkFabric(clock=self.clock)
+        self.bus = EventBus()
+        self.storage: Dict[str, StorageService] = {
+            "kvs": make_kvs(self.clock),
+            "s3": make_object_store(self.clock),
+        }
+        self.scheduler = Scheduler(self, scheduling_s=scheduling_s)
+        self.platform = Platform(self)
+        if with_truffle:
+            for node in self.nodes.values():
+                node.truffle = TruffleInstance(node, self)
+
+    @property
+    def node_list(self) -> List[Node]:
+        return list(self.nodes.values())
+
+    def node(self, name: str) -> Node:
+        return self.nodes[name]
+
+    def transfer(self, src: Node, dst: Node, payload: bytes) -> float:
+        """Move bytes between nodes over the fabric (blocking)."""
+        return self.network.channel(src, dst).transfer(payload)

@@ -1,0 +1,54 @@
+"""In-process event bus — the Kubernetes API / etcd watch-stream analogue.
+
+The Truffle Watcher subscribes here exactly as the paper's Watcher subscribes
+to Kube pod events (DESIGN §2: assumption change — no external etcd)."""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional
+
+
+class EventBus:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._subs: Dict[str, List[Callable[[dict], None]]] = defaultdict(list)
+        self._log: List[tuple] = []  # (topic, event) history for late joiners
+
+    def publish(self, topic: str, event: dict) -> None:
+        with self._cond:
+            self._log.append((topic, event))
+            subs = list(self._subs.get(topic, ()))
+            self._cond.notify_all()
+        for cb in subs:
+            cb(event)
+
+    def subscribe(self, topic: str, callback: Callable[[dict], None]) -> None:
+        with self._lock:
+            self._subs[topic].append(callback)
+
+    def wait_for(self, topic: str, predicate: Callable[[dict], bool],
+                 timeout: Optional[float] = None,
+                 include_history: bool = True) -> Optional[dict]:
+        """Block until an event on ``topic`` satisfies ``predicate``."""
+        import time as _t
+        deadline = None if timeout is None else _t.monotonic() + timeout
+        with self._cond:
+            idx = 0 if include_history else len(self._log)
+            while True:
+                while idx < len(self._log):
+                    t, e = self._log[idx]
+                    idx += 1
+                    if t == topic and predicate(e):
+                        return e
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - _t.monotonic()
+                    if remaining <= 0:
+                        return None
+                self._cond.wait(remaining)
+
+    def history(self, topic: str) -> List[dict]:
+        with self._lock:
+            return [e for t, e in self._log if t == topic]

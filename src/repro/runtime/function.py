@@ -1,0 +1,149 @@
+"""Serverless function model: spec, instance lifecycle, timing records.
+
+Lifecycle (paper Fig. 2): scheduling (α) → infrastructure setup (ν) →
+runtime startup (η) → [input fetch (δ)] → execution (γ). The whole point of
+Truffle is reordering δ to overlap ν+η; every instance keeps a
+``LifecycleRecord`` so benchmarks can reconstruct each phase exactly."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclass
+class ContentRef:
+    storage_type: str            # kvs | s3 | direct | truffle
+    key: str
+    size: int = 0
+
+
+@dataclass
+class Request:
+    fn: str
+    payload: Optional[bytes] = None          # direct-passing body
+    content_ref: Optional[ContentRef] = None
+    source_node: Optional[str] = None        # originating node name
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class FunctionSpec:
+    name: str
+    handler: Callable[[bytes, "Invocation"], bytes]
+    provision_s: float = 1.4      # ν: infrastructure setup (sandbox, image)
+    startup_s: float = 0.2        # η: language runtime startup...
+    startup_fn: Optional[Callable[[], None]] = None  # ...or REAL work (XLA compile)
+    exec_s: float = 0.05          # γ floor (simulated compute)
+    input_storage: str = "direct"
+    affinity: Optional[str] = None
+    extra_cold_start_s: float = 0.0  # Fig. 11 sweep: added cold-start delay
+
+
+@dataclass
+class LifecycleRecord:
+    fn: str
+    node: str = ""
+    mode: str = "baseline"        # baseline | truffle
+    cold: bool = True
+    t_request: float = 0.0
+    t_placed: float = 0.0         # end of scheduling (host known!)
+    t_prov_end: float = 0.0       # ν done
+    t_startup_end: float = 0.0    # η done — Fn start
+    t_transfer_start: float = 0.0
+    t_transfer_end: float = 0.0   # input data landed (wherever it lands)
+    t_input_ready: float = 0.0    # function actually holds its input
+    t_exec_start: float = 0.0
+    t_exec_end: float = 0.0
+
+    # --- derived phases (seconds) ---
+    @property
+    def scheduling(self) -> float:
+        return max(self.t_placed - self.t_request, 0.0)
+
+    @property
+    def cold_start(self) -> float:
+        return max(self.t_startup_end - self.t_placed, 0.0) if self.cold else 0.0
+
+    @property
+    def io_visible(self) -> float:
+        """I/O time the function actually waits for (not hidden in cold start)."""
+        return max(self.t_input_ready - max(self.t_startup_end, self.t_request), 0.0)
+
+    @property
+    def execution(self) -> float:
+        return max(self.t_exec_end - self.t_exec_start, 0.0)
+
+    @property
+    def total(self) -> float:
+        return max(self.t_exec_end - self.t_request, 0.0)
+
+    def phases(self) -> Dict[str, float]:
+        return {"scheduling": self.scheduling, "cold_start": self.cold_start,
+                "io": self.io_visible, "execution": self.execution,
+                "total": self.total}
+
+
+class Invocation:
+    """Handed to the handler: where to get input / put output."""
+
+    def __init__(self, request: Request, node, cluster, record: LifecycleRecord):
+        self.request = request
+        self.node = node
+        self.cluster = cluster
+        self.record = record
+
+    def get_input(self, timeout: float = 120.0) -> bytes:
+        """Resolve the input: truffle buffer, storage fetch, or inline body.
+        Called by the handler at execution time — in baseline mode this is
+        where the (visible) I/O happens."""
+        ref = self.request.content_ref
+        if ref is None:
+            self.record.t_input_ready = self.cluster.clock.now()
+            return self.request.payload or b""
+        if ref.storage_type == "truffle":
+            data = self.node.buffer.wait_for(ref.key, timeout=timeout)
+            if data is None:
+                raise TimeoutError(f"{self.request.fn}: input {ref.key} never arrived")
+            self.record.t_input_ready = self.cluster.clock.now()
+            return data
+        svc = self.cluster.storage[ref.storage_type]
+        data, _ = svc.get(ref.key)
+        self.record.t_input_ready = self.cluster.clock.now()
+        return data
+
+
+class FunctionInstance:
+    COLD, PROVISIONING, WARM, EXECUTING = range(4)
+
+    def __init__(self, spec: FunctionSpec, node, cluster):
+        self.spec = spec
+        self.node = node
+        self.cluster = cluster
+        self.state = self.COLD
+        self._lock = threading.Lock()
+
+    def provision(self, record: LifecycleRecord) -> None:
+        """ν + η (+ any Fig.11 extra delay). Real startup_fn runs unscaled."""
+        clock = self.cluster.clock
+        self.state = self.PROVISIONING
+        clock.sleep(self.spec.provision_s + self.spec.extra_cold_start_s)
+        record.t_prov_end = clock.now()
+        if self.spec.startup_fn is not None:
+            self.spec.startup_fn()          # real work: e.g. jit compile
+        clock.sleep(self.spec.startup_s)
+        record.t_startup_end = clock.now()
+        self.state = self.WARM
+
+    def invoke(self, request: Request, record: LifecycleRecord) -> bytes:
+        clock = self.cluster.clock
+        with self._lock:
+            self.state = self.EXECUTING
+            inv = Invocation(request, self.node, self.cluster, record)
+            data = inv.get_input()
+            record.t_exec_start = clock.now()
+            clock.sleep(self.spec.exec_s)
+            out = self.spec.handler(data, inv)
+            record.t_exec_end = clock.now()
+            self.state = self.WARM
+            return out

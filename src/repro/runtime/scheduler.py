@@ -1,0 +1,47 @@
+"""Placement scheduler (Kubernetes analogue). Emits ``scheduling.placed``
+events on the bus — the Truffle Watcher's entire CSP mechanism hangs off
+the fact that the host is known HERE, long before the sandbox is up."""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.runtime.function import FunctionSpec
+
+
+class Scheduler:
+    def __init__(self, cluster, scheduling_s: float = 0.15):
+        self.cluster = cluster
+        self.scheduling_s = scheduling_s   # α: activator + kube-scheduler path
+        self._rr = itertools.cycle(range(1 << 30))
+        self._lock = threading.Lock()
+        self._load: Dict[str, int] = {}
+
+    def schedule(self, spec: FunctionSpec, invocation_id: str):
+        """Blocks for α, picks a node, publishes the placement event."""
+        clock = self.cluster.clock
+        clock.sleep(self.scheduling_s)
+        node = self._pick(spec)
+        with self._lock:
+            self._load[node.name] = self._load.get(node.name, 0) + 1
+        self.cluster.bus.publish("scheduling.placed", {
+            "function": spec.name, "node": node.name,
+            "invocation": invocation_id, "t": clock.now(),
+        })
+        return node
+
+    def _pick(self, spec: FunctionSpec):
+        nodes = self.cluster.node_list
+        if spec.affinity:
+            for n in nodes:
+                if n.name == spec.affinity:
+                    return n
+            raise KeyError(f"affinity node {spec.affinity!r} not in cluster")
+        with self._lock:
+            return min(nodes, key=lambda n: self._load.get(n.name, 0))
+
+    def release(self, node_name: str) -> None:
+        with self._lock:
+            self._load[node_name] = max(0, self._load.get(node_name, 0) - 1)

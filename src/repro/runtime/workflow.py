@@ -1,0 +1,215 @@
+"""Workflow DAG + executor.
+
+Reproduces the paper's two evaluation workflows (Chained Functions;
+Video Analytics with fan-out/fan-in) under four data-passing strategies:
+  baseline x {direct, kvs, s3}  — sequential lifecycle (Fig. 2)
+  truffle  x {direct, kvs, s3}  — SDP/CSP overlap (Figs. 5/6)
+
+Also provides speculative straggler mitigation: a stage exceeding
+``straggler_factor`` x its predicted time is re-dispatched and the first
+finisher wins (duplicate results are idempotent by construction here)."""
+from __future__ import annotations
+
+import threading
+import uuid
+from concurrent.futures import Future, ThreadPoolExecutor, FIRST_COMPLETED, wait
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.model import PhaseEstimate, baseline_time, truffle_time
+from repro.runtime.function import ContentRef, FunctionSpec, LifecycleRecord, Request
+
+
+@dataclass
+class Stage:
+    spec: FunctionSpec
+    deps: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Workflow:
+    name: str
+    stages: Dict[str, Stage]
+
+    def topo_order(self) -> List[str]:
+        order, seen = [], set()
+
+        def visit(n):
+            if n in seen:
+                return
+            for d in self.stages[n].deps:
+                visit(d)
+            seen.add(n)
+            order.append(n)
+
+        for n in self.stages:
+            visit(n)
+        return order
+
+    def roots(self) -> List[str]:
+        return [n for n, s in self.stages.items() if not s.deps]
+
+
+@dataclass
+class StageResult:
+    name: str
+    output: bytes
+    record: LifecycleRecord
+    put_s: float = 0.0            # storage write time (kvs/s3 passing)
+    speculated: bool = False
+
+
+@dataclass
+class WorkflowTrace:
+    workflow: str
+    mode: str                     # baseline | truffle
+    storage: str                  # direct | kvs | s3
+    stages: Dict[str, StageResult] = field(default_factory=dict)
+    t_start: float = 0.0
+    t_end: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.t_end - self.t_start
+
+    def phase_totals(self) -> Dict[str, float]:
+        tot = {"scheduling": 0.0, "cold_start": 0.0, "io": 0.0,
+               "execution": 0.0, "put": 0.0}
+        for sr in self.stages.values():
+            for k, v in sr.record.phases().items():
+                if k != "total":
+                    tot[k] = tot.get(k, 0.0) + v
+            tot["put"] += sr.put_s
+        return tot
+
+    @property
+    def io_total(self) -> float:
+        return self.phase_totals()["io"] + self.phase_totals()["put"]
+
+
+class WorkflowRunner:
+    def __init__(self, cluster, *, use_truffle: bool, storage: str = "direct",
+                 straggler_factor: float = 0.0, prewarm_roots: bool = False,
+                 estimates: Optional[Dict[str, PhaseEstimate]] = None):
+        self.cluster = cluster
+        self.use_truffle = use_truffle
+        self.storage = storage
+        self.straggler_factor = straggler_factor
+        self.prewarm_roots = prewarm_roots
+        self.estimates = estimates or {}
+
+    # ------------------------------------------------------------------ run
+    def run(self, wf: Workflow, input_data: bytes,
+            source_node: str = None) -> WorkflowTrace:
+        cluster = self.cluster
+        for st in wf.stages.values():
+            cluster.platform.register(st.spec)
+        source_node = source_node or cluster.node_list[0].name
+        if self.prewarm_roots:
+            # the paper's latency metric starts at the *source* function's
+            # send; warm the roots so measurement covers the passing path
+            for name in wf.roots():
+                cluster.platform.invoke(Request(fn=wf.stages[name].spec.name,
+                                                payload=b"",
+                                                source_node=source_node))
+        trace = WorkflowTrace(wf.name, "truffle" if self.use_truffle else "baseline",
+                              self.storage)
+        trace.t_start = cluster.clock.now()
+
+        results: Dict[str, StageResult] = {}
+        lock = threading.Lock()
+        done_cv = threading.Condition(lock)
+        errbox: List[BaseException] = []
+
+        def stage_input(name: str) -> Tuple[bytes, str]:
+            st = wf.stages[name]
+            if not st.deps:
+                return input_data, source_node
+            outs = [results[d].output for d in st.deps]
+            src = results[st.deps[-1]].record.node or source_node
+            return b"".join(outs), src
+
+        def run_stage(name: str):
+            try:
+                data, src = stage_input(name)
+                sr = self._dispatch(name, wf.stages[name], data, src)
+                with done_cv:
+                    results[name] = sr
+                    done_cv.notify_all()
+            except BaseException as e:  # noqa: BLE001
+                with done_cv:
+                    errbox.append(e)
+                    done_cv.notify_all()
+
+        order = wf.topo_order()
+        started = set()
+        with done_cv:
+            while len(results) < len(order) and not errbox:
+                for name in order:
+                    if name in started:
+                        continue
+                    if all(d in results for d in wf.stages[name].deps):
+                        started.add(name)
+                        threading.Thread(target=run_stage, args=(name,),
+                                         daemon=True).start()
+                done_cv.wait(timeout=300)
+        if errbox:
+            raise errbox[0]
+
+        trace.t_end = cluster.clock.now()
+        trace.stages = results
+        return trace
+
+    # ------------------------------------------------------- stage dispatch
+    def _dispatch(self, name: str, stage: Stage, data: bytes,
+                  source_node: str) -> StageResult:
+        def attempt() -> StageResult:
+            return self._invoke_once(name, stage, data, source_node)
+
+        est = self.estimates.get(name)
+        if self.straggler_factor and est is not None:
+            budget = self.straggler_factor * (
+                truffle_time(est) if self.use_truffle else baseline_time(est))
+            budget *= self.cluster.clock.scale      # sim -> wall seconds
+            pool = ThreadPoolExecutor(max_workers=2)
+            first = pool.submit(attempt)
+            done, _ = wait([first], timeout=budget)
+            if done:
+                return first.result()
+            backup = pool.submit(attempt)        # speculative duplicate
+            done, _ = wait([first, backup], return_when=FIRST_COMPLETED)
+            sr = next(iter(done)).result()
+            sr.speculated = sr is not (first.result() if first.done() else None)
+            return sr
+        return attempt()
+
+    def _invoke_once(self, name: str, stage: Stage, data: bytes,
+                     source_node: str) -> StageResult:
+        cluster = self.cluster
+        fn = stage.spec.name
+        put_s = 0.0
+
+        if self.storage in ("kvs", "s3"):
+            # producer writes to the storage service first (both modes — the
+            # storage flavor defines where the data lives; paper Fig. 9b/9c)
+            key = f"{fn}/{uuid.uuid4().hex[:8]}"
+            t0 = cluster.clock.now()
+            cluster.storage[self.storage].put(key, data)
+            put_s = cluster.clock.now() - t0
+            req = Request(fn=fn, content_ref=ContentRef(self.storage, key,
+                                                        len(data)),
+                          source_node=source_node)
+            if self.use_truffle:
+                truffle = cluster.node(source_node).truffle
+                out, rec = truffle.handle_request(req)       # SDP
+            else:
+                out, rec = cluster.platform.invoke(req)      # fetch after start
+        else:  # direct
+            if self.use_truffle:
+                truffle = cluster.node(source_node).truffle
+                out, rec = truffle.pass_data(fn, data)       # CSP
+            else:
+                req = Request(fn=fn, payload=data, source_node=source_node)
+                out, rec = cluster.platform.invoke(req)      # body held at ingress
+
+        return StageResult(name=name, output=out, record=rec, put_s=put_s)

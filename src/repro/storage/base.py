@@ -1,0 +1,71 @@
+"""Storage services: in-process Direct / KVS / Object-store with calibrated
+latency+bandwidth. Real bytes move; measured time = modeled time.
+
+Calibration targets the paper's testbed (4-core Xeon VMs, MicroK8s LAN +
+AWS S3): KVS reads fast / writes slower (paper Fig 9b: Truffle gains only
+~5% on KVS because little read time is left to mask), S3 slow both ways
+(Fig 9c: ~18% gain). See EXPERIMENTS.md §Calibration."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.runtime.clock import Clock, DEFAULT_CLOCK
+from repro.runtime.netsim import Channel, GBPS
+
+
+class StorageError(KeyError):
+    pass
+
+
+@dataclass
+class StorageService:
+    """Key-value blob service with asymmetric put/get channels."""
+    type_name: str = "generic"
+    put_bandwidth: float = 1.0 * GBPS
+    get_bandwidth: float = 1.0 * GBPS
+    latency: float = 0.001
+    clock: Clock = field(default_factory=lambda: DEFAULT_CLOCK)
+
+    def __post_init__(self) -> None:
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self._put_ch = Channel(f"{self.type_name}.put", self.put_bandwidth,
+                               self.latency, self.clock)
+        self._get_ch = Channel(f"{self.type_name}.get", self.get_bandwidth,
+                               self.latency, self.clock)
+
+    def put(self, key: str, data: bytes) -> float:
+        t = self._put_ch.transfer(data)
+        with self._lock:
+            self._data[key] = data
+        return t
+
+    def get(self, key: str) -> Tuple[bytes, float]:
+        with self._lock:
+            if key not in self._data:
+                raise StorageError(f"{self.type_name}: no object {key!r}")
+            data = self._data[key]
+        t = self._get_ch.transfer(data)
+        return data, t
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+
+def make_kvs(clock: Clock = DEFAULT_CLOCK) -> StorageService:
+    """Redis-like: sub-ms latency, fast reads, slower writes (AOF/replication)."""
+    return StorageService("kvs", put_bandwidth=0.40 * GBPS,
+                          get_bandwidth=2.50 * GBPS, latency=0.001, clock=clock)
+
+
+def make_object_store(clock: Clock = DEFAULT_CLOCK) -> StorageService:
+    """S3-like: tens-of-ms latency, moderate bandwidth both ways."""
+    return StorageService("s3", put_bandwidth=0.35 * GBPS,
+                          get_bandwidth=0.50 * GBPS, latency=0.030, clock=clock)

@@ -1,0 +1,24 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in a
+# separate process); fail fast if something polluted the env.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+from repro.runtime.clock import Clock  # noqa: E402
+
+
+@pytest.fixture()
+def fast_clock():
+    """Simulated delays shrunk 100x — orderings preserved, tests fast."""
+    return Clock(scale=0.01)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,78 @@
+"""Checkpointing: roundtrip equality, atomicity/rotation, async saves,
+restore-latest, byte-stream serialize (the CSP payload path)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (CheckpointManager, deserialize,
+                                         serialize)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "blocks": {"scale": jnp.ones((4,), jnp.bfloat16)}},
+        "opt": {"m": jnp.zeros((8, 16)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    s = _state()
+    mgr.save(3, s)
+    restored, step = mgr.restore(_state(seed=9))
+    assert step == 3
+    _assert_tree_equal(s, restored)
+
+
+def test_latest_and_rotation(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _state(step))
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]          # rotated
+    restored, step = mgr.restore(_state())
+    _assert_tree_equal(_state(4), restored)
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = mgr.save_async(5, _state(5))
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    restored, _ = mgr.restore(_state())
+    _assert_tree_equal(_state(5), restored)
+
+
+def test_sharded_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, shard_bytes=128)  # force many shards
+    s = _state()
+    mgr.save(1, s)
+    d = mgr.dir / "step-00000001"
+    assert len(list(d.glob("shard-*.npz"))) > 1
+    restored, _ = mgr.restore(_state(2))
+    _assert_tree_equal(s, restored)
+
+
+def test_serialize_bytes_roundtrip():
+    s = _state()
+    data = serialize(s)
+    assert isinstance(data, bytes) and len(data) > 100
+    restored = deserialize(data, _state(1))
+    _assert_tree_equal(s, restored)
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state())

@@ -1,0 +1,57 @@
+"""Registry + config integrity: all 10 assigned archs, param counts vs
+published sizes, shape applicability grid (40 cells)."""
+import pytest
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import get_config, iter_cells, list_archs
+
+PUBLISHED_B = {  # (total, active) billions from the papers / model cards
+    "glm4-9b": (9.4, 9.4),
+    "minicpm3-4b": (4.1, 4.1),
+    "qwen3-4b": (4.0, 4.0),
+    "stablelm-1.6b": (1.6, 1.6),
+    "jamba-v0.1-52b": (52.0, 12.0),
+    "olmoe-1b-7b": (6.9, 1.3),
+    "qwen2-moe-a2.7b": (14.3, 2.7),
+    "whisper-medium": (0.77, 0.77),
+    "xlstm-125m": (0.16, 0.16),
+    "qwen2-vl-7b": (7.6, 7.6),
+}
+
+
+def test_all_archs_present():
+    assert len(list_archs()) == 10
+    assert set(list_archs()) == set(PUBLISHED_B)
+
+
+@pytest.mark.parametrize("arch", list(PUBLISHED_B))
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    total, active = PUBLISHED_B[arch]
+    assert cfg.param_count() / 1e9 == pytest.approx(total, rel=0.15)
+    assert cfg.param_count(active_only=True) / 1e9 == pytest.approx(active, rel=0.15)
+
+
+@pytest.mark.parametrize("arch", list(PUBLISHED_B))
+def test_smoke_config_valid(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_periods >= 1
+    assert cfg.d_model <= 128  # genuinely reduced
+
+
+def test_cell_grid_is_40():
+    cells = list(iter_cells())
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    # long_500k only for the two sub-quadratic archs
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8
+    assert all(s[1].name == "long_500k" for s in skipped)
+    assert len(runnable) == 32
+
+
+def test_long_context_applicability():
+    assert shape_applicable(get_config("jamba-v0.1-52b"), SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("xlstm-125m"), SHAPES["long_500k"])[0]
+    ok, why = shape_applicable(get_config("glm4-9b"), SHAPES["long_500k"])
+    assert not ok and "full-attention" in why

@@ -1,0 +1,62 @@
+"""Unit tests for the dry-run analysis stack: HLO collective parser and the
+analytic FLOPs model (no 512-device compile here — that's the sweep's job)."""
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.launch.flops import model_flops
+from repro.launch.hlo import collective_stats, total_collective_bytes
+
+HLO_SAMPLE = """
+  %all-reduce.5 = bf16[16,4096,2560]{2,1,0} all-reduce(%fusion.1), replica_groups={...}
+  %all-gather.2 = f32[512,1024]{1,0} all-gather(%param.3), dimensions={0}
+  %rs = f32[64,128]{1,0} reduce-scatter(%x), dimensions={0}
+  %a2a = (s8[8,64]{1,0}, s8[8,64]{1,0}) all-to-all(%q, %r)
+  %cp = bf16[32]{0} collective-permute(%y), source_target_pairs={{0,1}}
+  %ar-start = bf16[128]{0} all-reduce-start(%z)
+  %dot.1 = f32[10,10]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_parser_kinds():
+    stats = collective_stats(HLO_SAMPLE)
+    assert stats["all-reduce"]["count"] >= 1
+    assert stats["all-gather"]["count"] == 1
+    assert stats["reduce-scatter"]["count"] == 1
+    assert stats["all-to-all"]["count"] == 1
+    assert stats["collective-permute"]["count"] == 1
+
+
+def test_collective_parser_bytes():
+    stats = collective_stats(HLO_SAMPLE)
+    # all-gather result: 512*1024*4 bytes
+    assert stats["all-gather"]["bytes"] == 512 * 1024 * 4
+    # all-reduce counted 2x (ring RS+AG)
+    assert stats["all-reduce"]["bytes"] >= 16 * 4096 * 2560 * 2 * 2
+    # tuple result (all-to-all): both operands counted
+    assert stats["all-to-all"]["bytes"] == 2 * 8 * 64
+    assert total_collective_bytes(stats) > 0
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "olmoe-1b-7b", "jamba-v0.1-52b",
+                                  "whisper-medium", "xlstm-125m"])
+def test_model_flops_sane(arch):
+    cfg = get_config(arch)
+    train = model_flops(cfg, SHAPES["train_4k"])
+    prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    decode = model_flops(cfg, SHAPES["decode_32k"])
+    assert train > 0 and prefill > 0 and decode > 0
+    # train is 3x prefill per token; prefill >= as many tokens here
+    assert prefill >= train / 3.1
+    # decode processes B tokens vs B*S: orders less compute (whisper keeps
+    # per-token cross-attention against 1500 frames -> looser bound)
+    assert decode < prefill / 50
+
+
+def test_model_flops_6nd_consistency():
+    """Dense train FLOPs ~ 6*N*D within the attention-term margin."""
+    cfg = get_config("qwen3-4b")
+    shape = SHAPES["train_4k"]
+    six_nd = 6 * cfg.param_count() * shape.seq_len * shape.global_batch
+    got = model_flops(cfg, shape)
+    assert six_nd * 0.8 < got < six_nd * 1.6

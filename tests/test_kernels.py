@@ -1,0 +1,96 @@
+"""Per-kernel validation (assignment requirement): sweep shapes/dtypes in
+interpret mode and assert_allclose against the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype, scale=0.3):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 128, 8, 1, 128),    # MQA, MXU-width head
+    (2, 64, 4, 2, 32),      # small
+])
+def test_flash_attention_sweep(B, S, Hq, Hkv, D, dtype):
+    key = jax.random.PRNGKey(0)
+    q = _rand(key, (B, S, Hq, D), dtype)
+    k = _rand(jax.random.fold_in(key, 1), (B, S, Hkv, D), dtype)
+    v = _rand(jax.random.fold_in(key, 2), (B, S, Hkv, D), dtype, 1.0)
+    out = ops.flash_attention(q, k, v, True, True)
+    want = ref.flash_attention_ref(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+def test_flash_attention_noncausal():
+    key = jax.random.PRNGKey(1)
+    q = _rand(key, (1, 128, 4, 64), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (1, 128, 4, 64), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (1, 128, 4, 64), jnp.float32, 1.0)
+    out = ops.flash_attention(q, k, v, False, True)
+    want = ref.flash_attention_ref(q, k, v, False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_backward():
+    key = jax.random.PRNGKey(2)
+    q = _rand(key, (1, 128, 4, 64), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (1, 128, 2, 64), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (1, 128, 2, 64), jnp.float32, 1.0)
+    g1 = jax.grad(lambda a, b, c: ops.flash_attention(a, b, c, True, True).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda a, b, c: ref.flash_attention_ref(a, b, c, True).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                                   rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kv_len", [1, 63, 256, 511, 512])
+def test_decode_attention_lengths(kv_len, dtype):
+    key = jax.random.PRNGKey(3)
+    B, S, Hq, Hkv, D = 2, 512, 8, 2, 64
+    q = _rand(key, (B, 1, Hq, D), dtype)
+    k = _rand(jax.random.fold_in(key, 1), (B, S, Hkv, D), dtype)
+    v = _rand(jax.random.fold_in(key, 2), (B, S, Hkv, D), dtype, 1.0)
+    out = ops.decode_attention(q, k, v, jnp.asarray(kv_len), True)
+    want = ref.decode_attention_ref(q[:, 0], k, v, jnp.asarray(kv_len))[:, None]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.sampled_from([64, 128, 256]),
+       d=st.sampled_from([128, 256, 512]),
+       dt=st.sampled_from(["float32", "bfloat16"]))
+def test_rmsnorm_property(rows, d, dt):
+    dtype = jnp.dtype(dt)
+    key = jax.random.PRNGKey(rows * 7 + d)
+    x = _rand(key, (rows, d), dtype, 1.0)
+    s = _rand(jax.random.fold_in(key, 1), (d,), jnp.float32, 1.0)
+    out = ops.rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    atol = 2e-5 if dt == "float32" else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol,
+                               rtol=atol)
+    # scale-equivariance: rmsnorm(c*x) == rmsnorm(x) for c > 0
+    out2 = ops.rmsnorm(x * 3.0, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(out2, np.float32),
+                               np.asarray(out, np.float32), atol=5e-2,
+                               rtol=5e-2)

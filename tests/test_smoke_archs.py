@@ -1,0 +1,63 @@
+"""Per-arch smoke tests (assignment requirement): instantiate the REDUCED
+config, run one forward/train step on CPU, assert output shapes + no NaNs;
+plus prefill/decode for every arch (all have a decode step — none are
+encoder-only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config, list_archs
+from repro.models import api
+
+TRAIN = ShapeConfig("smoke_train", 32, 2, "train")
+PREFILL = ShapeConfig("smoke_prefill", 32, 2, "prefill")
+DECODE = ShapeConfig("smoke_decode", 32, 2, "decode")
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch, smoke=True)
+            cache[arch] = (cfg, api.init(cfg, jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_finite(arch, arch_state):
+    cfg, params = arch_state(arch)
+    batch = api.concrete_inputs(cfg, TRAIN)["batch"]
+    loss, metrics = api.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss)), f"{arch} loss NaN"
+    assert float(loss) > 0
+    grads = jax.grad(lambda p: api.loss_fn(cfg, p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch} grad NaN/zero"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_shapes(arch, arch_state):
+    cfg, params = arch_state(arch)
+    batch = api.concrete_inputs(cfg, PREFILL)["batch"]
+    logits, cache = api.prefill(cfg, params, batch)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert cache is not None
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_step(arch, arch_state):
+    cfg, params = arch_state(arch)
+    inp = api.concrete_inputs(cfg, DECODE)
+    logits, new_cache = api.decode_step(cfg, params, inp["cache"], inp["token"],
+                                        jnp.asarray(3, jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # cache structure preserved
+    assert jax.tree.structure(new_cache) == jax.tree.structure(inp["cache"])

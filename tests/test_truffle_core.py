@@ -1,0 +1,159 @@
+"""Unit tests for the paper's core components: Buffer, Data Engine
+(Algorithm 1), Watcher (Algorithm 2), and the Eq. 1-5 latency model —
+including hypothesis property tests on the model's invariants."""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import model as tm
+from repro.core.buffer import Buffer
+from repro.core.data_engine import DataEngine, StorageAdapter
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import ContentRef, FunctionSpec, Request
+
+
+# ------------------------------------------------------------------- buffer
+def test_buffer_set_get_wait():
+    b = Buffer()
+    assert b.get("x") is None
+    b.set("x", b"abc")
+    assert b.get("x") == b"abc"
+
+    got = {}
+
+    def waiter():
+        got["v"] = b.wait_for("later", timeout=5)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    b.set("later", b"xyz")
+    t.join(timeout=5)
+    assert got["v"] == b"xyz"
+
+
+def test_buffer_wait_timeout():
+    b = Buffer()
+    assert b.wait_for("never", timeout=0.05) is None
+
+
+def test_buffer_eviction_respects_pins():
+    b = Buffer(capacity_bytes=100)
+    b.set("pinned", b"x" * 60, pinned=True)
+    b.set("a", b"y" * 60)            # over capacity -> evict "a"? no: LRU unpinned
+    assert "pinned" in b
+    b.set("c", b"z" * 60)
+    assert "pinned" in b             # pinned survives all evictions
+    assert b.size <= 180
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.text(min_size=1, max_size=4),
+                          st.integers(1, 50)), min_size=1, max_size=30))
+def test_buffer_capacity_invariant(ops):
+    """Property: unpinned-only buffer never exceeds capacity after a put."""
+    b = Buffer(capacity_bytes=120)
+    for key, size in ops:
+        b.set(key, bytes(size))
+        assert b.size <= 120 or len(b._entries) == 1
+
+
+# -------------------------------------------------------------- data engine
+def test_data_engine_algorithm1(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    node = cluster.node_list[0]
+    eng = node.truffle.engine
+    cluster.storage["kvs"].put("k1", b"hello")
+    data = eng.fetch(ContentRef("kvs", "k1"))
+    assert data == b"hello"
+    assert node.buffer.get("k1") == b"hello"     # B.set(C)
+
+
+def test_data_engine_unknown_storage(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    eng = cluster.node_list[0].truffle.engine
+    with pytest.raises(KeyError, match="no storage adapter"):
+        eng.fetch(ContentRef("ipfs", "x"))
+
+
+def test_data_engine_adapter_extension(fast_clock):
+    """The adapter registry is open (paper: multi-provider extensibility)."""
+    cluster = Cluster(clock=fast_clock)
+    eng = cluster.node_list[0].truffle.engine
+
+    class Dummy:
+        def get(self, key):
+            return b"dummy:" + key.encode(), 0.0
+
+        def put(self, key, data):
+            return 0.0
+
+    eng.register_adapter(StorageAdapter("custom", Dummy()))
+    assert eng.fetch(ContentRef("custom", "k")) == b"dummy:k"
+
+
+# ------------------------------------------------------------------ watcher
+def test_watcher_resolves_placement_event(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    w = cluster.node_list[0].truffle.watcher
+    box = {}
+
+    def resolver():
+        box["node"] = w.resolve_host("fn-x", "inv1", timeout=5)
+
+    t = threading.Thread(target=resolver)
+    t.start()
+    time.sleep(0.02)
+    cluster.bus.publish("scheduling.placed",
+                        {"function": "fn-x", "node": "edge-1",
+                         "invocation": "inv1"})
+    t.join(timeout=5)
+    assert box["node"] == "edge-1"
+
+
+def test_watcher_hot_function(fast_clock):
+    """Warm instances resolve immediately — the paper's proxy case."""
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("hot-fn", lambda d, inv: d, provision_s=0.1,
+                        startup_s=0.05)
+    cluster.platform.register(spec)
+    cluster.platform.invoke(Request(fn="hot-fn", payload=b"x",
+                                    source_node="edge-0"))
+    w = cluster.node_list[0].truffle.watcher
+    node = w.resolve_host("hot-fn", None, timeout=1)
+    assert node in cluster.nodes
+
+
+# ------------------------------------------------------- latency model (Eqs)
+def test_eq1_to_eq4():
+    p = tm.PhaseEstimate(alpha=0.1, nu=1.0, eta=0.5, delta=0.8, gamma=0.2)
+    assert p.beta == pytest.approx(1.5)                      # Eq. 1
+    assert tm.overlap_window(p) == pytest.approx(1.5)        # Eq. 2
+    assert tm.truffle_time(p) == pytest.approx(0.1 + 1.5 + 0.2)   # Eq. 3
+    assert tm.baseline_time(p) == pytest.approx(0.1 + 1.5 + 0.8 + 0.2)
+    assert tm.improvement(p) == pytest.approx(0.8)           # Eq. 4 = min(β,δ)
+
+
+@settings(max_examples=100, deadline=None)
+@given(alpha=st.floats(0, 5), nu=st.floats(0, 10), eta=st.floats(0, 10),
+       delta=st.floats(0, 20), gamma=st.floats(0, 5))
+def test_model_invariants(alpha, nu, eta, delta, gamma):
+    """Properties: Truffle never loses; Δ = min(β, δ); Δ grows with overlap."""
+    p = tm.PhaseEstimate(alpha, nu, eta, delta, gamma)
+    assert tm.truffle_time(p) <= tm.baseline_time(p) + 1e-9
+    assert tm.improvement(p) == pytest.approx(min(p.beta, delta), abs=1e-9)
+    assert tm.improvement(p) >= -1e-9
+    # longer cold starts profit more (paper §VI-D) while transfer unmasked
+    p2 = tm.PhaseEstimate(alpha, nu + 1.0, eta, delta, gamma)
+    assert tm.improvement(p2) >= tm.improvement(p) - 1e-9
+
+
+def test_planner_proxy_for_warm():
+    p = tm.PhaseEstimate(0.1, 1.0, 0.5, 2.0, 0.2)
+    assert tm.should_engage(p, is_warm=False)
+    assert not tm.should_engage(p, is_warm=True)
+    z = tm.PhaseEstimate(0.1, 0.0, 0.0, 2.0, 0.2)   # no cold start -> no gain
+    assert not tm.should_engage(z, is_warm=False)

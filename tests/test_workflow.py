@@ -1,0 +1,85 @@
+"""Workflow DAG executor: topology, fan-out/fan-in, straggler mitigation,
+and trace accounting."""
+import pytest
+
+from repro.core.model import PhaseEstimate
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+
+def _spec(name, exec_s=0.02, **kw):
+    kw.setdefault("provision_s", 0.2)
+    kw.setdefault("startup_s", 0.05)
+    return FunctionSpec(name, lambda d, inv: d + name.encode()[-1:],
+                        exec_s=exec_s, **kw)
+
+
+def test_topo_order():
+    wf = Workflow("w", {
+        "c": Stage(_spec("c"), deps=["a", "b"]),
+        "a": Stage(_spec("a")),
+        "b": Stage(_spec("b"), deps=["a"]),
+    })
+    order = wf.topo_order()
+    assert order.index("a") < order.index("b") < order.index("c")
+    assert wf.roots() == ["a"]
+
+
+def test_diamond_dag_executes_once_each(fast_clock):
+    calls = []
+
+    def make(name):
+        def h(d, inv):
+            calls.append(name)
+            return d
+        return FunctionSpec(name, h, provision_s=0.2, startup_s=0.05,
+                            exec_s=0.01)
+
+    wf = Workflow("diamond", {
+        "src": Stage(make("src")),
+        "l": Stage(make("l"), deps=["src"]),
+        "r": Stage(make("r"), deps=["src"]),
+        "sink": Stage(make("sink"), deps=["l", "r"]),
+    })
+    cluster = Cluster(clock=fast_clock)
+    tr = WorkflowRunner(cluster, use_truffle=True, storage="direct").run(
+        wf, b"x")
+    assert sorted(calls) == ["l", "r", "sink", "src"]
+    assert len(tr.stages) == 4
+    assert tr.total > 0
+
+
+def test_straggler_speculative_dispatch(fast_clock):
+    """A stage that stalls far beyond its estimate gets a backup dispatch."""
+    import itertools
+    stall = itertools.count()
+
+    def slow_once(d, inv):
+        if next(stall) == 0:
+            inv.cluster.clock.sleep(30.0)  # first attempt: pathological
+        return d
+
+    spec = FunctionSpec("strag", slow_once, provision_s=0.1, startup_s=0.05,
+                        exec_s=0.01)
+    wf = Workflow("w", {"s": Stage(spec)})
+    est = {"s": PhaseEstimate(alpha=0.15, nu=0.1, eta=0.05, delta=0.01,
+                              gamma=0.01)}
+    cluster = Cluster(clock=fast_clock)
+    runner = WorkflowRunner(cluster, use_truffle=False, storage="direct",
+                            straggler_factor=3.0, estimates=est)
+    tr = runner.run(wf, b"x")
+    # backup finished long before the 30s-sim straggler would have
+    assert fast_clock.elapsed_sim(tr.total) < 10.0
+
+
+def test_trace_phase_totals(fast_clock):
+    wf = Workflow("w", {"a": Stage(_spec("wf-a")),
+                        "b": Stage(_spec("wf-b"), deps=["a"])})
+    cluster = Cluster(clock=fast_clock)
+    tr = WorkflowRunner(cluster, use_truffle=False, storage="kvs").run(wf, b"x")
+    pt = tr.phase_totals()
+    assert set(pt) == {"scheduling", "cold_start", "io", "execution", "put"}
+    assert pt["cold_start"] > 0          # both stages were cold
+    assert pt["put"] > 0                 # kvs passing wrote to storage
+    assert tr.io_total == pytest.approx(pt["io"] + pt["put"])
