@@ -92,7 +92,35 @@ def run_once(wf_builder, size: int, *, use_truffle: bool, storage: str,
             "io_total": phases["io"] + phases["put"]}
 
 
+#: every emit() call also lands here so drivers can dump a machine-readable
+#: BENCH_truffle.json at the end of a run (perf trajectory across PRs)
+EMITTED: List[dict] = []
+
+
+def _parse_derived(derived: str) -> Dict[str, float]:
+    """Best-effort numeric parse of 'k=v' pairs in a derived string
+    (strips trailing 's'/'x' units; '%' scaled to a fraction)."""
+    out: Dict[str, float] = {}
+    for part in derived.split():
+        if "=" not in part:
+            continue
+        k, _, v = part.partition("=")
+        scale = 1.0
+        if v.endswith("%"):
+            v, scale = v[:-1], 0.01
+        elif v.endswith(("s", "x")):
+            v = v[:-1]
+        try:
+            out[k] = float(v) * scale
+        except ValueError:
+            pass
+    return out
+
+
 def emit(rows: List[tuple]) -> None:
-    """CSV contract: name,us_per_call,derived."""
+    """CSV contract: name,us_per_call,derived (also recorded in EMITTED)."""
     for name, seconds, derived in rows:
         print(f"{name},{seconds * 1e6:.0f},{derived}")
+        EMITTED.append({"name": name, "us_per_call": seconds * 1e6,
+                        "derived": derived,
+                        "metrics": _parse_derived(derived)})

@@ -6,13 +6,15 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig9        chained latency vs input size (+9d improvements)
   fig10       video-analytics latency sweep (+10d)
   fig11       added-cold-start-delay sweep
-  eq4         analytic-model validation
+  eq4         analytic-model validation (+ pipelined-transfer extension)
+  stream.*    chunked-streaming sweep: blob vs stream vs dedup fan-out
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
 
 Env: BENCH_SCALE (default 0.5) shrinks simulated time; BENCH_FAST=1 runs a
-reduced grid; BENCH_SKIP=ml skips the real-compile ML benches."""
+reduced grid; BENCH_SKIP=ml skips the real-compile ML benches; BENCH_JSON
+sets the machine-readable output path (default BENCH_truffle.json in cwd)."""
 from __future__ import annotations
 
 import os
@@ -30,7 +32,7 @@ def main() -> None:
 
     from benchmarks import (chained_sweep, chained_total, coldstart_sweep,
                             lifecycle, model_validation, roofline,
-                            video_analytics)
+                            streaming_sweep, video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -41,6 +43,11 @@ def main() -> None:
                         delays=(0.0, 4.0) if fast else
                         (0.0, 2.0, 4.0, 6.0, 8.0, 10.0))
     model_validation.run()
+
+    print("# --- chunked streaming data plane ---")
+    streaming_sweep.run(sizes=(32,) if fast else (32, 128),
+                        tiers=("edge-edge",) if fast
+                        else ("edge-edge", "edge-cloud"))
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")
@@ -54,7 +61,25 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001 — dry-run may not have run yet
         print(f"# roofline skipped: {e}")
 
+    _dump_json(t0)
     print(f"# total benchmark wall time: {time.time() - t0:.0f}s")
+
+
+def _dump_json(t0: float) -> None:
+    """Machine-readable results (per-benchmark us_per_call + parsed derived
+    metrics) so the perf trajectory is trackable across PRs."""
+    import json
+
+    from benchmarks.common import EMITTED, SCALE
+
+    path = os.environ.get("BENCH_JSON", "BENCH_truffle.json")
+    doc = {"schema": 1,
+           "bench_scale": SCALE,
+           "wall_seconds": round(time.time() - t0, 1),
+           "benchmarks": EMITTED}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(EMITTED)} benchmark rows to {path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Chunked streaming data-plane sweep (paper §IV extension).
+
+Compares three CSP data-passing modes across payload sizes and edge/cloud
+tiers, with identical total compute (γ) in every mode:
+
+  blob      whole-blob Truffle: transfer overlaps cold start only; the
+            function waits for the last byte (visible IO = max(0, δ − β))
+  stream    chunk-granular pipeline: the function consumes at first-chunk
+            arrival, per-chunk compute overlaps the remaining transfer
+            (visible IO ≈ max(0, δ − β − γ_overlap), Eq. 4 extension)
+  fanout    content-addressed dedup: the same payload passed to N sinks on
+            one node — the first pass pays the transfer, the rest alias the
+            resident chunks (near-zero transfer after placement)
+
+Emits (benchmarks/common.emit CSV + the BENCH_truffle.json registry):
+  stream.csp.<tier>.<size>mb.{blob,stream}   visible IO + totals
+  stream.csp.<tier>.<size>mb.reduction       visible-IO reduction (>= 30%
+                                             target at 128 MB edge-edge)
+  stream.fanout.<tier>.<size>mb.pass<i>      per-pass transfer-after-placement
+"""
+from __future__ import annotations
+
+from benchmarks.common import MB, PAPER_COLD, SCALE, emit
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+
+EXEC_TOTAL_S = 0.6          # γ: same simulated compute in every mode
+CHUNK_BYTES = 1 << 20
+
+TIERS = {
+    "edge-edge": ("edge-0", "edge-1"),
+    "edge-cloud": ("edge-0", "cloud-0"),
+}
+
+
+def _mk_cluster(scale: float) -> Cluster:
+    return Cluster(node_specs=[("edge-0", "edge"), ("edge-1", "edge"),
+                               ("cloud-0", "cloud")], clock=Clock(scale))
+
+
+def _blob_spec(name: str, target: str) -> FunctionSpec:
+    return FunctionSpec(name, lambda d, inv: str(len(d)).encode(),
+                        exec_s=EXEC_TOTAL_S, affinity=target, **PAPER_COLD)
+
+
+def _stream_spec(name: str, target: str, n_chunks: int) -> FunctionSpec:
+    eps = EXEC_TOTAL_S / max(n_chunks, 1)   # n chunks x eps = blob's exec_s
+
+    def handler(_, inv):
+        pacer = inv.cluster.clock.pacer()
+        total = 0
+        for chunk in inv.get_input_stream():
+            pacer.sleep(eps)           # per-chunk compute overlaps transfer
+            total += len(chunk)
+        return str(total).encode()
+
+    return FunctionSpec(name, handler, streaming=True, affinity=target,
+                        **PAPER_COLD)
+
+
+def csp_once(size: int, tier: str, mode: str, *, scale: float = SCALE,
+             tag: str = "") -> dict:
+    """One cold CSP pass; returns sim-seconds metrics. ``mode``: blob|stream."""
+    src_name, dst_name = TIERS[tier]
+    cluster = _mk_cluster(scale)
+    clock = cluster.clock
+    fn = f"sw-{mode}-{tier}-{size >> 20}mb{tag}"
+    n_chunks = max(size // CHUNK_BYTES, 1)
+    spec = (_stream_spec(fn, dst_name, n_chunks) if mode == "stream"
+            else _blob_spec(fn, dst_name))
+    cluster.platform.register(spec)
+    truffle = cluster.node(src_name).truffle
+    _, rec = truffle.pass_data(fn, bytes(size), stream=(mode == "stream"),
+                               chunk_bytes=CHUNK_BYTES)
+    return {
+        "io_visible": clock.elapsed_sim(rec.io_visible),
+        "total": clock.elapsed_sim(rec.total),
+        "transfer_after_place": clock.elapsed_sim(
+            max(0.0, rec.t_transfer_end - rec.t_placed)),
+    }
+
+
+def fanout_once(size: int, tier: str, n_sinks: int = 3, *,
+                scale: float = SCALE) -> list:
+    """Same payload to ``n_sinks`` cold functions on one node, dedup on:
+    pass 0 ships the bytes; passes 1.. alias the content-addressed entry."""
+    src_name, dst_name = TIERS[tier]
+    cluster = _mk_cluster(scale)
+    clock = cluster.clock
+    for i in range(n_sinks):
+        cluster.platform.register(
+            FunctionSpec(f"fo-{tier}-{i}", lambda d, inv: str(len(d)).encode(),
+                         exec_s=0.05, affinity=dst_name, **PAPER_COLD))
+    truffle = cluster.node(src_name).truffle
+    payload = bytes(size)
+    out = []
+    for i in range(n_sinks):
+        _, rec = truffle.pass_data(f"fo-{tier}-{i}", payload, dedup=True)
+        out.append({
+            "dedup_hit": rec.dedup_hit,
+            "transfer_after_place": clock.elapsed_sim(
+                max(0.0, rec.t_transfer_end - rec.t_placed)),
+            "io_visible": clock.elapsed_sim(rec.io_visible),
+        })
+    return out
+
+
+def run(sizes=(32, 128), tiers=("edge-edge", "edge-cloud")):
+    rows = []
+    for tier in tiers:
+        for size_mb in sizes:
+            r = {m: csp_once(size_mb * MB, tier, m) for m in ("blob", "stream")}
+            for m in ("blob", "stream"):
+                rows.append((f"stream.csp.{tier}.{size_mb}mb.{m}",
+                             r[m]["io_visible"],
+                             f"total={r[m]['total']:.3f}s "
+                             f"transfer={r[m]['transfer_after_place']:.3f}s"))
+            if r["blob"]["io_visible"] < 0.01:   # δ < β: nothing left to hide
+                red_s = "n/a(io_already_hidden)"
+            else:
+                red_s = "{:.0%}".format(
+                    1 - r["stream"]["io_visible"] / r["blob"]["io_visible"])
+            rows.append((f"stream.csp.{tier}.{size_mb}mb.reduction",
+                         r["blob"]["io_visible"] - r["stream"]["io_visible"],
+                         f"io_reduction={red_s} "
+                         f"blob_io={r['blob']['io_visible']:.3f}s "
+                         f"stream_io={r['stream']['io_visible']:.3f}s"))
+        size_mb = max(sizes)
+        for i, p in enumerate(fanout_once(size_mb * MB, tier)):
+            rows.append((f"stream.fanout.{tier}.{size_mb}mb.pass{i}",
+                         p["transfer_after_place"],
+                         f"dedup_hit={p['dedup_hit']} "
+                         f"io_visible={p['io_visible']:.3f}s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -3,22 +3,104 @@ target function is fully provisioned (paper §III-B.1e).
 
 Local by design (high-speed in-memory access next to the function); capacity
 bounded with LRU eviction of unpinned entries; ``wait_for`` lets a starting
-function block until its input lands (the CSP/SDP rendezvous point)."""
+function block until its input lands (the CSP/SDP rendezvous point).
+
+Streaming entries (chunked data plane): ``open_stream`` creates an in-flight
+entry, ``append_chunk`` lands chunks as they arrive off the wire, and
+``close_stream`` seals it. ``open_reader`` returns a :class:`BufferReader`
+that blocks *per chunk*, so a cold-starting function begins consuming its
+input at first-chunk arrival instead of last-byte. In-flight streams are
+never evicted; a whole-blob ``set`` is just a one-chunk stream.
+
+Content addressing: complete entries may carry a digest
+(:func:`content_digest`, BLAKE2b-128) registered in a per-buffer index.
+``alias`` lets fan-out workflows and repeated inputs reuse the stored chunks
+under a new invocation key with zero copy and zero transfer (dedup hit).
+
+Knobs: ``capacity_bytes`` bounds resident bytes (LRU over complete unpinned
+entries, O(1) amortized eviction); chunk size is chosen by the writer.
+"""
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
+
+
+def content_digest(data) -> str:
+    """Content address of a payload (BLAKE2b-128: fast, ample for dedup)."""
+    return hashlib.blake2b(bytes(data), digest_size=16).hexdigest()
 
 
 @dataclass
 class BufferEntry:
     key: str
-    data: bytes
     created: float
     pinned: bool = False
+    digest: Optional[str] = None
+    chunks: List[bytes] = field(default_factory=list)
+    complete: bool = True
+    aborted: bool = False
+    size: int = 0
+    _joined: Optional[bytes] = None     # cached join of chunks
+
+    @property
+    def data(self) -> bytes:
+        if self._joined is None:
+            if len(self.chunks) == 1 and isinstance(self.chunks[0], bytes):
+                self._joined = self.chunks[0]
+            else:                       # joins bytes and memoryview chunks
+                self._joined = b"".join(self.chunks)
+        return self._joined
+
+
+class BufferReader:
+    """Chunk iterator over a (possibly in-flight) entry.
+
+    ``__next__`` blocks until the next chunk lands or the stream completes;
+    holding a reference to the entry keeps its chunks alive across eviction.
+    """
+
+    def __init__(self, buffer: "Buffer", key: str,
+                 timeout: Optional[float] = None):
+        self._buffer = buffer
+        self._key = key
+        self._timeout = timeout
+        self._entry: Optional[BufferEntry] = None
+        self._idx = 0
+
+    def __iter__(self) -> "BufferReader":
+        return self
+
+    def __next__(self) -> bytes:
+        buf = self._buffer
+        deadline = (None if self._timeout is None
+                    else time.monotonic() + self._timeout)
+        with buf._cond:
+            while True:
+                if self._entry is None:
+                    self._entry = buf._entries.get(self._key)
+                e = self._entry
+                if e is not None:
+                    if e.aborted:          # writer failed mid-stream
+                        raise IOError(
+                            f"{buf.name}: stream {self._key!r} aborted")
+                    if self._idx < len(e.chunks):
+                        chunk = e.chunks[self._idx]
+                        self._idx += 1
+                        return chunk
+                    if e.complete:
+                        raise StopIteration
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{buf.name}: chunk {self._idx} of {self._key!r} "
+                        f"never arrived")
+                buf._cond.wait(remaining)
 
 
 class Buffer:
@@ -26,57 +108,246 @@ class Buffer:
         self.name = name
         self.capacity = capacity_bytes
         self._entries: "OrderedDict[str, BufferEntry]" = OrderedDict()
+        # Evictable keys (complete + unpinned) in LRU order; front = oldest.
+        self._lru: "OrderedDict[str, None]" = OrderedDict()
+        self._digests: Dict[str, str] = {}       # digest -> key
         self._size = 0
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self.stats = {"puts": 0, "gets": 0, "waits": 0, "evictions": 0}
+        self.stats = {"puts": 0, "gets": 0, "waits": 0, "evictions": 0,
+                      "dedup_hits": 0, "streams": 0}
 
-    def set(self, key: str, data: bytes, pinned: bool = False) -> None:
+    # ------------------------------------------------------------ whole blob
+    def set(self, key: str, data: bytes, pinned: bool = False,
+            digest: Optional[str] = None) -> None:
         with self._cond:
-            if key in self._entries:
-                self._size -= len(self._entries[key].data)
-            self._entries[key] = BufferEntry(key, data, time.monotonic(), pinned)
-            self._entries.move_to_end(key)
-            self._size += len(data)
+            self._drop_locked(key)
+            e = BufferEntry(key, time.monotonic(), pinned, digest,
+                            chunks=[data], complete=True, size=len(data))
+            self._insert_locked(e)
             self.stats["puts"] += 1
-            self._evict_locked()
+            self._evict_locked(exempt=key)
             self._cond.notify_all()
 
     def get(self, key: str, pop: bool = False) -> Optional[bytes]:
         with self._lock:
             e = self._entries.get(key)
-            if e is None:
+            if e is None or not e.complete:
                 return None
             self.stats["gets"] += 1
             if pop:
-                del self._entries[key]
-                self._size -= len(e.data)
+                self._drop_locked(key)
             else:
-                self._entries.move_to_end(key)
+                self._touch_locked(e)
             return e.data
 
     def wait_for(self, key: str, timeout: Optional[float] = None,
                  pop: bool = False) -> Optional[bytes]:
+        """Block until ``key`` is present AND complete (streams included)."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
             self.stats["waits"] += 1
-            while key not in self._entries:
+            while True:
+                e = self._entries.get(key)
+                if e is not None and e.complete:
+                    break
                 remaining = None if deadline is None else deadline - time.monotonic()
                 if remaining is not None and remaining <= 0:
                     return None
                 self._cond.wait(remaining)
         return self.get(key, pop=pop)
 
-    def _evict_locked(self) -> None:
-        while self._size > self.capacity:
-            for k, e in self._entries.items():
+    # ------------------------------------------------------------- streaming
+    def open_stream(self, key: str, pinned: bool = False) -> None:
+        """Create an in-flight entry; chunks land via ``append_chunk``.
+        Incomplete streams are invisible to get/wait_for and never evicted."""
+        with self._cond:
+            self._drop_locked(key)
+            e = BufferEntry(key, time.monotonic(), pinned,
+                            chunks=[], complete=False, size=0)
+            self._insert_locked(e)
+            self.stats["streams"] += 1
+            self._cond.notify_all()
+
+    def append_chunk(self, key: str, chunk: bytes) -> None:
+        with self._cond:
+            e = self._entries.get(key)
+            if e is None or e.complete:
+                raise KeyError(f"{self.name}: no open stream {key!r}")
+            self._append_entry_locked(e, chunk)
+            self._cond.notify_all()
+
+    def _append_entry_locked(self, e: BufferEntry, chunk: bytes) -> None:
+        if e.aborted or e.complete:
+            raise IOError(f"{self.name}: stream {e.key!r} no longer open")
+        e.chunks.append(chunk)
+        e.size += len(chunk)
+        if self._entries.get(e.key) is e:
+            self._size += len(chunk)
+
+    def abort_stream(self, key: str) -> None:
+        """Drop an in-flight entry (writer failed mid-stream). Without this
+        the incomplete entry — invisible to get/wait_for and exempt from
+        eviction — would leak its appended chunks forever. Blocked readers
+        wake with an IOError rather than seeing a truncated input."""
+        with self._cond:
+            e = self._entries.get(key)
+            if e is not None and not e.complete:
+                self._drop_locked(key)
+            self._cond.notify_all()
+
+    def close_stream(self, key: str, digest: Optional[str] = None) -> None:
+        with self._cond:
+            e = self._entries.get(key)
+            if e is None or e.complete:
+                raise KeyError(f"{self.name}: no open stream {key!r}")
+            e.complete = True
+            e.digest = digest
+            if digest is not None:
+                self._digests.setdefault(digest, key)
+            if not e.pinned:
+                self._lru[key] = None           # becomes evictable now
+            self.stats["puts"] += 1
+            self._evict_locked(exempt=key)
+            self._cond.notify_all()
+
+    def ingest(self, key: str, chunks, digest: Optional[str] = None) -> int:
+        """Stream an iterable of chunks into a new entry: open → append as
+        each chunk arrives → close. Writer-safe under same-key races: this
+        writer holds its own entry, so if another open/set displaces it the
+        writer fails (IOError) instead of interleaving chunks into the
+        successor. On any failure the entry is aborted (readers wake with
+        IOError) and the error re-raised. Returns the bytes ingested."""
+        with self._cond:
+            self._drop_locked(key)
+            e = BufferEntry(key, time.monotonic(), False,
+                            chunks=[], complete=False, size=0)
+            self._insert_locked(e)
+            self.stats["streams"] += 1
+            self._cond.notify_all()
+        n = 0
+        try:
+            for chunk in chunks:
+                with self._cond:
+                    self._append_entry_locked(e, chunk)
+                    self._cond.notify_all()
+                n += len(chunk)
+            with self._cond:
+                if e.aborted:
+                    raise IOError(f"{self.name}: stream {key!r} displaced")
+                e.complete = True
+                e.digest = digest
+                if digest is not None:
+                    self._digests.setdefault(digest, key)
                 if not e.pinned:
-                    del self._entries[k]
-                    self._size -= len(e.data)
-                    self.stats["evictions"] += 1
-                    break
-            else:
-                return  # everything pinned
+                    self._lru[key] = None
+                self.stats["puts"] += 1
+                self._evict_locked(exempt=key)
+                self._cond.notify_all()
+        except BaseException:
+            with self._cond:
+                if self._entries.get(key) is e:
+                    self._drop_locked(key)
+                else:
+                    e.aborted = True          # wake readers bound to us
+                self._cond.notify_all()
+            raise
+        return n
+
+    def open_reader(self, key: str,
+                    timeout: Optional[float] = None) -> BufferReader:
+        """Chunk-granular reader; works on in-flight streams and complete
+        entries alike (a ``set`` blob reads as one chunk)."""
+        return BufferReader(self, key, timeout)
+
+    # ------------------------------------------------- content addressing
+    def find_digest(self, digest: Optional[str]) -> Optional[str]:
+        """Key currently holding this content, if any."""
+        if digest is None:
+            return None
+        with self._lock:
+            key = self._digests.get(digest)
+            if key is None:
+                return None
+            e = self._entries.get(key)
+            return key if e is not None and e.complete else None
+
+    def alias(self, new_key: str, digest: Optional[str],
+              pinned: bool = False) -> bool:
+        """Dedup hit: expose existing content under ``new_key`` without
+        copying or re-shipping bytes. Returns True if the digest was found.
+
+        Aliases share the source's chunk list, so they are charged size 0
+        against capacity (the bytes are counted once, on the source entry;
+        if the source is evicted first the aliases keep the chunks alive
+        uncharged — an accepted undercount, cheaper than refcounting)."""
+        if digest is None:
+            return False
+        with self._cond:
+            src_key = self._digests.get(digest)
+            src = self._entries.get(src_key) if src_key else None
+            if src is None or not src.complete:
+                return False
+            if src_key == new_key:            # content already under this key
+                self.stats["dedup_hits"] += 1
+                return True
+            self._drop_locked(new_key)
+            e = BufferEntry(new_key, time.monotonic(), pinned, digest,
+                            chunks=src.chunks, complete=True, size=0)
+            e._joined = src._joined
+            self._insert_locked(e)
+            self.stats["dedup_hits"] += 1
+            self._cond.notify_all()
+            return True
+
+    # -------------------------------------------------------------- internal
+    def _insert_locked(self, e: BufferEntry) -> None:
+        self._entries[e.key] = e
+        self._size += e.size
+        if e.complete:
+            if e.digest is not None:
+                # don't repoint an existing mapping (e.g. an alias's digest
+                # keeps resolving to the charged source entry)
+                self._digests.setdefault(e.digest, e.key)
+            if not e.pinned:
+                self._lru[e.key] = None
+        # in-flight / pinned entries stay out of the LRU
+
+    def _drop_locked(self, key: str) -> None:
+        e = self._entries.pop(key, None)
+        if e is None:
+            return
+        if not e.complete:
+            # an in-flight stream displaced (abort, same-key re-open, or
+            # replacement): its writer and any bound readers must fail fast,
+            # not interleave into / hang on the successor entry
+            e.aborted = True
+        self._size -= e.size
+        self._lru.pop(key, None)
+        if e.digest is not None and self._digests.get(e.digest) == key:
+            del self._digests[e.digest]
+
+    def _touch_locked(self, e: BufferEntry) -> None:
+        self._entries.move_to_end(e.key)
+        if e.key in self._lru:
+            self._lru.move_to_end(e.key)
+
+    def _evict_locked(self, exempt: Optional[str] = None) -> None:
+        """O(1) amortized: pop the LRU evictable key; pinned and in-flight
+        entries are never in ``_lru``, so no scanning past them. ``exempt``
+        protects the entry just inserted: evicting it would strand the
+        function that is about to wait_for it (it is the newest entry, so
+        it surfaces only once everything else evictable is gone)."""
+        while self._size > self.capacity and self._lru:
+            key = next(iter(self._lru))
+            if key == exempt:
+                return                        # only the new entry is left
+            del self._lru[key]
+            e = self._entries.pop(key)
+            self._size -= e.size
+            if e.digest is not None and self._digests.get(e.digest) == key:
+                del self._digests[e.digest]
+            self.stats["evictions"] += 1
 
     @property
     def size(self) -> int:

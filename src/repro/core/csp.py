@@ -4,22 +4,37 @@ Inter-function data passing: the source function hands its output to the
 local Truffle, which (1) triggers the target function with a reference key,
 (2a) listens for the target's host assignment, and (6a) ships the payload
 source-node → target-node the moment placement is known — i.e. during the
-target's cold start. The target handler reads from its local buffer."""
+target's cold start. The target handler reads from its local buffer.
+
+Knobs (``pass_data`` kwargs): ``stream`` relays the payload chunk-by-chunk
+(``chunk_bytes``, default 1 MiB) into an in-flight buffer entry, so the
+target starts consuming at first-chunk arrival and per-chunk compute
+overlaps the remaining transfer; ``dedup`` content-addresses the payload
+(BLAKE2b) and, when the target buffer already holds identical bytes
+(fan-out, retries), aliases them — near-zero transfer. Defaults keep the
+whole-blob behavior. ``join_timeout_s`` bounds the post-return wait on the
+transfer thread; a stall is recorded and raised as TransferStallError."""
 from __future__ import annotations
 
 import threading
 import uuid
 from typing import Optional, Tuple
 
+from repro.core.buffer import content_digest
+from repro.core.transfer import join_or_stall, ship_payload
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
+from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 
 
 class CSP:
-    def __init__(self, truffle):
+    def __init__(self, truffle, join_timeout_s: float = 60.0):
         self.truffle = truffle
+        self.join_timeout_s = join_timeout_s
 
     def pass_data(self, target_fn: str, data: bytes,
-                  exec_after: Optional[float] = None,
+                  exec_after: Optional[float] = None, *,
+                  stream: bool = False, dedup: bool = False,
+                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                   ) -> Tuple[bytes, LifecycleRecord]:
         """Algorithm 2 from the source node's Truffle. Returns the target's
         result + lifecycle record."""
@@ -28,11 +43,14 @@ class CSP:
         clock = cluster.clock
         inv_id = uuid.uuid4().hex
         buf_key = f"truffle/{target_fn}/{inv_id[:8]}"
+        digest = content_digest(data) if dedup else None
 
         fwd = Request(fn=target_fn,
-                      content_ref=ContentRef("truffle", buf_key, size=len(data)),
+                      content_ref=ContentRef("truffle", buf_key, size=len(data),
+                                             digest=digest),
                       source_node=t.node.name, meta={"invocation": inv_id})
         rec = LifecycleRecord(fn=target_fn, mode="truffle")
+        rec.streamed = stream
         rec.t_request = clock.now()
 
         # (2) reference-key trigger to the platform ...
@@ -45,12 +63,9 @@ class CSP:
             try:
                 rec.t_transfer_start = clock.now()
                 target_name = t.watcher.resolve_host(target_fn, inv_id)
-                if target_name != t.node.name:
-                    target = cluster.node(target_name)
-                    cluster.transfer(t.node, target, data)   # during cold start
-                    target.buffer.set(buf_key, data)
-                else:
-                    t.node.buffer.set(buf_key, data)
+                ship_payload(cluster, t.node, cluster.node(target_name),
+                             buf_key, data, stream=stream, digest=digest,
+                             chunk_bytes=chunk_bytes, record=rec)
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)
@@ -59,7 +74,8 @@ class CSP:
                               name=f"csp-{target_fn}-{inv_id[:6]}")
         th.start()
         result = fut.result()
-        th.join(timeout=60)
+        join_or_stall(th, rec, self.join_timeout_s,
+                      f"CSP transfer for {target_fn} ({inv_id[:8]})")
         if errbox:
             raise errbox[0]
         return result, rec

@@ -1,0 +1,16 @@
+"""Truffle data-plane errors."""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class TransferStallError(RuntimeError):
+    """A data-path transfer thread outlived its join budget: the function
+    already returned but its transfer never finished (wedged channel,
+    stuck storage client). Carries the lifecycle record — the stall is
+    recorded there (``transfer_stalled``) before raising, so callers and
+    post-mortems see it instead of a silently-leaked daemon thread."""
+
+    def __init__(self, message: str, record: Optional[object] = None):
+        super().__init__(message)
+        self.record = record

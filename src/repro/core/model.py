@@ -45,6 +45,31 @@ def improvement(p: PhaseEstimate) -> float:
     return (p.beta + p.delta) - overlap_window(p)
 
 
+# ------------------------------------------------- pipelined-transfer terms
+# Chunked streaming extension of Eq. 4: with chunk-granular transfer the
+# function consumes input while the tail is still in flight, so per-chunk
+# compute overlaps the transfer too. ``exec_overlap`` is the portion of γ
+# that can run concurrently with the transfer (for n chunks with per-chunk
+# compute ε it is (n−1)·ε: everything but the first chunk's compute).
+
+def pipelined_io_visible(p: PhaseEstimate, exec_overlap: float = 0.0) -> float:
+    """Visible I/O ≈ max(0, δ − β − γ_overlap): transfer hidden behind cold
+    start AND execution (vs. whole-blob Truffle's max(0, δ − β))."""
+    return max(0.0, p.delta - p.beta - exec_overlap)
+
+
+def streamed_time(p: PhaseEstimate, exec_overlap: float = 0.0) -> float:
+    """Single function with a streamed input:
+    τ = α + β + max(0, δ − β − γ_overlap) + γ."""
+    return p.alpha + p.beta + pipelined_io_visible(p, exec_overlap) + p.gamma
+
+
+def streamed_improvement(p: PhaseEstimate, exec_overlap: float = 0.0) -> float:
+    """Gain of streaming over whole-blob Truffle (Eq. 3):
+    Δ_stream = min(γ_overlap, max(0, δ − β))."""
+    return truffle_time(p) - streamed_time(p, exec_overlap)
+
+
 def workflow_time(phases: Iterable[PhaseEstimate], use_truffle: bool = True) -> float:
     """Eq. 3/5: end-to-end over a function chain."""
     f = truffle_time if use_truffle else baseline_time

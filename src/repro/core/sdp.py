@@ -6,21 +6,37 @@ On request ingress, two paths run concurrently:
       local buffer, then (once the Watcher reports placement) relay to the
       target node's buffer.
 The function, once started, reads its input from its node-local Truffle
-buffer via the reference key — ideally without waiting."""
+buffer via the reference key — ideally without waiting.
+
+Knobs (``handle`` kwargs): ``stream`` pipelines the data path at chunk
+granularity (``chunk_bytes``, default 1 MiB) so the function can consume at
+first-chunk arrival; ``dedup`` consults the target buffer's
+content-addressed index first and skips the fetch on a hit. Defaults keep
+the whole-blob behavior. ``join_timeout_s`` bounds how long we wait for the
+data-path thread after the function returns — a thread still alive then is
+recorded on the LifecycleRecord and raised as TransferStallError instead of
+silently leaking."""
 from __future__ import annotations
 
 import threading
 import uuid
-from typing import Optional, Tuple
+from typing import Tuple
 
+from repro.core.buffer import content_digest
+from repro.core.transfer import join_or_stall, ship_payload
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
+from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 
 
 class SDP:
-    def __init__(self, truffle):
+    def __init__(self, truffle, join_timeout_s: float = 60.0):
         self.truffle = truffle
+        self.join_timeout_s = join_timeout_s
 
-    def handle(self, request: Request) -> Tuple[bytes, LifecycleRecord]:
+    def handle(self, request: Request, *, stream: bool = False,
+               dedup: bool = False,
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+               ) -> Tuple[bytes, LifecycleRecord]:
         """Fig. 5 steps 1-7. Returns (result, lifecycle record)."""
         t = self.truffle
         cluster = t.cluster
@@ -32,11 +48,13 @@ class SDP:
         fwd = Request(fn=request.fn,
                       content_ref=ContentRef("truffle", buf_key,
                                              size=(ref.size if ref else
-                                                   len(request.payload or b""))),
+                                                   len(request.payload or b"")),
+                                             digest=(ref.digest if ref else None)),
                       source_node=t.node.name,
                       meta={"invocation": inv_id})
 
         rec = LifecycleRecord(fn=request.fn, mode="truffle")
+        rec.streamed = stream
         rec.t_request = clock.now()
 
         # (2) fire the platform trigger (reference key only) ...
@@ -55,12 +73,16 @@ class SDP:
                 target_name = t.watcher.resolve_host(request.fn, inv_id)  # (4)
                 target = cluster.node(target_name)
                 if ref is not None and ref.storage_type in t.engine._adapters:
-                    target.truffle.engine.fetch(ref, buffer_key=buf_key)  # (3)-(4a)
+                    target.truffle.engine.fetch(ref, buffer_key=buf_key,
+                                                stream=stream, dedup=dedup,
+                                                chunk_bytes=chunk_bytes,
+                                                record=rec)  # (3)-(4a)
                 else:
                     data = request.payload or b""
-                    if target_name != t.node.name:
-                        cluster.transfer(t.node, target, data)
-                    target.buffer.set(buf_key, data)
+                    digest = content_digest(data) if dedup else None
+                    ship_payload(cluster, t.node, target, buf_key, data,
+                                 stream=stream, digest=digest,
+                                 chunk_bytes=chunk_bytes, record=rec)
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)
@@ -69,7 +91,8 @@ class SDP:
                               name=f"sdp-{request.fn}-{inv_id[:6]}")
         th.start()
         result = fut.result()       # (5)-(7): function reads from the buffer
-        th.join(timeout=60)
+        join_or_stall(th, rec, self.join_timeout_s,
+                      f"SDP data path for {request.fn} ({inv_id[:8]})")
         if errbox:
             raise errbox[0]
         return result, rec

@@ -1,0 +1,49 @@
+"""Shared data-plane helpers for SDP/CSP (one implementation of the
+ship-payload decision tree and the stall-guarded thread join, so the two
+paths cannot diverge).
+
+Knobs: ``stream`` relays at chunk granularity (``chunk_bytes``, default
+1 MiB) into an in-flight buffer entry; ``dedup`` aliases the target's
+content-addressed index on a hit instead of shipping bytes."""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.core.errors import TransferStallError
+from repro.runtime.function import LifecycleRecord
+from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
+
+
+def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
+                 stream: bool, digest: Optional[str],
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 record: Optional[LifecycleRecord] = None) -> None:
+    """Move an inline payload into ``target``'s buffer: dedup alias if the
+    content is already resident, else chunk-streamed or whole-blob over the
+    fabric (local placement skips the network entirely)."""
+    if digest is not None and target.buffer.alias(buf_key, digest):
+        if record is not None:
+            record.dedup_hit = True           # content already resident
+    elif target.name != src_node.name:
+        if stream:
+            target.buffer.ingest(
+                buf_key, cluster.stream(src_node, target, data, chunk_bytes),
+                digest=digest)
+        else:
+            cluster.transfer(src_node, target, data)   # during cold start
+            target.buffer.set(buf_key, data, digest=digest)
+    else:
+        src_node.buffer.set(buf_key, data, digest=digest)
+
+
+def join_or_stall(th: threading.Thread, record: LifecycleRecord,
+                  timeout_s: float, what: str) -> None:
+    """Join the data-path thread; a thread outliving its budget is recorded
+    on the lifecycle record and raised instead of silently leaked."""
+    th.join(timeout=timeout_s)
+    if th.is_alive():
+        record.transfer_stalled = True
+        raise TransferStallError(
+            f"{what} still running after {timeout_s}s join budget",
+            record=record)

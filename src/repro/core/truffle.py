@@ -28,19 +28,23 @@ class TruffleInstance:
         self.csp = CSP(self)
 
     # ------------------------------------------------------------------ SDP
-    def handle_request(self, request: Request) -> Tuple[bytes, LifecycleRecord]:
+    def handle_request(self, request: Request,
+                       **data_plane) -> Tuple[bytes, LifecycleRecord]:
         """Ingress entry (Listener → Ingress). Hot functions take the proxy
-        path (paper §III-B: Truffle only passes the data through)."""
+        path (paper §III-B: Truffle only passes the data through).
+        ``data_plane`` kwargs (stream/dedup/chunk_bytes) select the chunked
+        streaming path; defaults keep whole-blob behavior."""
         if self.cluster.platform.warm_instances(request.fn):
             return self.proxy(request)
-        return self.sdp.handle(request)
+        return self.sdp.handle(request, **data_plane)
 
     # ------------------------------------------------------------------ CSP
-    def pass_data(self, target_fn: str, data: bytes) -> Tuple[bytes, LifecycleRecord]:
+    def pass_data(self, target_fn: str, data: bytes,
+                  **data_plane) -> Tuple[bytes, LifecycleRecord]:
         if self.cluster.platform.warm_instances(target_fn):
             return self.proxy(Request(fn=target_fn, payload=data,
                                       source_node=self.node.name))
-        return self.csp.pass_data(target_fn, data)
+        return self.csp.pass_data(target_fn, data, **data_plane)
 
     # ---------------------------------------------------------------- proxy
     def proxy(self, request: Request) -> Tuple[bytes, LifecycleRecord]:

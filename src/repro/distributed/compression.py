@@ -16,6 +16,15 @@ import jax.numpy as jnp
 PyTree = Any
 
 
+def _axis_size(axis_name: str) -> int:
+    """jax.lax.axis_size (jax >= 0.6) with the 0.4.x psum(1) idiom as
+    fallback (statically concretized under shard_map/pmap tracing)."""
+    impl = getattr(jax.lax, "axis_size", None)
+    if impl is not None:
+        return impl(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def quantize(x: jax.Array, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor quantization -> (int8 codes, fp32 scale)."""
     assert bits == 8, "int8 path only"
@@ -42,7 +51,7 @@ def compressed_mean(x: jax.Array, axis_name: str) -> jax.Array:
     its chunk from every peer (per-peer scales via a tiny fp32 all_gather)
     and reduces in fp32. Stage 2 (all-gather): requantize the reduced chunk
     and gather codes+scales."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     size = x.size

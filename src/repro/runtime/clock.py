@@ -23,5 +23,36 @@ class Clock:
         """Convert a measured wall delta back to simulated seconds."""
         return wall_delta / self.scale if self.scale else wall_delta
 
+    def sleep_until(self, wall_deadline: float) -> None:
+        """Sleep to an absolute wall deadline (no-op if already past).
+        Deadline-based pacing self-corrects OS sleep overshoot — essential
+        for chunk-granular transfers made of many small sleeps."""
+        wait = wall_deadline - time.monotonic()
+        if wait > 0:
+            time.sleep(wait)
+
+    def pacer(self) -> "Pacer":
+        return Pacer(self)
+
+
+class Pacer:
+    """Drift-compensated repeated sleeper: many small ``sleep(sim)`` calls
+    average to the requested total instead of accumulating one OS timer
+    quantum of overshoot each (per-chunk compute in streaming handlers)."""
+
+    def __init__(self, clock: Clock):
+        self.clock = clock
+        self._debt = 0.0            # wall seconds overslept so far
+
+    def sleep(self, sim_seconds: float) -> None:
+        want = sim_seconds * self.clock.scale
+        effective = want - self._debt
+        if effective <= 0:
+            self._debt = -effective
+            return
+        t0 = time.monotonic()
+        time.sleep(effective)
+        self._debt = (time.monotonic() - t0) - effective
+
 
 DEFAULT_CLOCK = Clock(1.0)

@@ -58,5 +58,13 @@ class Cluster:
         return self.nodes[name]
 
     def transfer(self, src: Node, dst: Node, payload: bytes) -> float:
-        """Move bytes between nodes over the fabric (blocking)."""
+        """Move bytes between nodes over the fabric (blocking, whole-blob)."""
         return self.network.channel(src, dst).transfer(payload)
+
+    def stream(self, src: Node, dst: Node, payload: bytes,
+               chunk_bytes: Optional[int] = None):
+        """Chunk-granularity fabric transfer: yields chunks as they arrive
+        (per-chunk bandwidth grants — see netsim.Channel.stream)."""
+        from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
+        return self.network.channel(src, dst).stream(
+            payload, chunk_bytes or DEFAULT_CHUNK_BYTES)

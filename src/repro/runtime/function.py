@@ -3,12 +3,19 @@
 Lifecycle (paper Fig. 2): scheduling (α) → infrastructure setup (ν) →
 runtime startup (η) → [input fetch (δ)] → execution (γ). The whole point of
 Truffle is reordering δ to overlap ν+η; every instance keeps a
-``LifecycleRecord`` so benchmarks can reconstruct each phase exactly."""
+``LifecycleRecord`` so benchmarks can reconstruct each phase exactly.
+
+Streaming input (chunked data plane): a handler (``FunctionSpec.streaming``)
+drives its own input consumption via ``Invocation.get_input_stream`` —
+chunks are yielded at arrival, so per-chunk compute overlaps the remaining
+transfer. The record then carries the *measured* blocked-wait time
+(``io_blocked_s``), which is what ``io_visible`` reports: I/O the function
+actually stalled on, after cold start AND execution overlap."""
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Iterator, Optional
 
 
 @dataclass
@@ -16,6 +23,7 @@ class ContentRef:
     storage_type: str            # kvs | s3 | direct | truffle
     key: str
     size: int = 0
+    digest: Optional[str] = None  # content address (enables dedup downstream)
 
 
 @dataclass
@@ -38,6 +46,7 @@ class FunctionSpec:
     input_storage: str = "direct"
     affinity: Optional[str] = None
     extra_cold_start_s: float = 0.0  # Fig. 11 sweep: added cold-start delay
+    streaming: bool = False       # handler consumes input via get_input_stream
 
 
 @dataclass
@@ -52,9 +61,14 @@ class LifecycleRecord:
     t_startup_end: float = 0.0    # η done — Fn start
     t_transfer_start: float = 0.0
     t_transfer_end: float = 0.0   # input data landed (wherever it lands)
+    t_first_chunk: float = 0.0    # first input chunk consumed (streaming)
     t_input_ready: float = 0.0    # function actually holds its input
     t_exec_start: float = 0.0
     t_exec_end: float = 0.0
+    streamed: bool = False        # input arrived chunk-pipelined
+    dedup_hit: bool = False       # input served from the content-addressed cache
+    transfer_stalled: bool = False  # data-path thread outlived its join budget
+    io_blocked_s: Optional[float] = None  # measured blocked wait (streaming)
 
     # --- derived phases (seconds) ---
     @property
@@ -67,7 +81,10 @@ class LifecycleRecord:
 
     @property
     def io_visible(self) -> float:
-        """I/O time the function actually waits for (not hidden in cold start)."""
+        """I/O time the function actually waits for (not hidden in cold start
+        — nor, when streaming, in execution)."""
+        if self.io_blocked_s is not None:
+            return self.io_blocked_s
         return max(self.t_input_ready - max(self.t_startup_end, self.t_request), 0.0)
 
     @property
@@ -112,6 +129,39 @@ class Invocation:
         self.record.t_input_ready = self.cluster.clock.now()
         return data
 
+    def get_input_stream(self, timeout: float = 120.0) -> Iterator[bytes]:
+        """Chunk-granular input: yields chunks at arrival so the handler can
+        compute while the rest of the transfer is still in flight. Blocked
+        time (waiting on a chunk that hasn't landed) is measured into
+        ``record.io_blocked_s`` — the streaming path's visible I/O."""
+        ref = self.request.content_ref
+        if ref is None:
+            it = iter((self.request.payload or b"",))
+        elif ref.storage_type == "truffle":
+            it = iter(self.node.buffer.open_reader(ref.key, timeout=timeout))
+        else:
+            it = self.cluster.storage[ref.storage_type].get_stream(ref.key)
+        return self._timed(it)
+
+    def _timed(self, it: Iterator[bytes]) -> Iterator[bytes]:
+        clock = self.cluster.clock
+        rec = self.record
+        rec.streamed = True
+        rec.io_blocked_s = 0.0
+        first = True
+        while True:
+            t0 = clock.now()
+            try:
+                chunk = next(it)
+            except StopIteration:
+                break
+            rec.io_blocked_s += clock.now() - t0
+            if first:
+                rec.t_first_chunk = clock.now()
+                first = False
+            yield chunk
+        rec.t_input_ready = clock.now()
+
 
 class FunctionInstance:
     COLD, PROVISIONING, WARM, EXECUTING = range(4)
@@ -140,10 +190,16 @@ class FunctionInstance:
         with self._lock:
             self.state = self.EXECUTING
             inv = Invocation(request, self.node, self.cluster, record)
-            data = inv.get_input()
-            record.t_exec_start = clock.now()
-            clock.sleep(self.spec.exec_s)
-            out = self.spec.handler(data, inv)
+            if self.spec.streaming:
+                # handler drives chunk consumption (and models its own
+                # per-chunk compute) via inv.get_input_stream()
+                record.t_exec_start = clock.now()
+                out = self.spec.handler(b"", inv)
+            else:
+                data = inv.get_input()
+                record.t_exec_start = clock.now()
+                clock.sleep(self.spec.exec_s)
+                out = self.spec.handler(data, inv)
             record.t_exec_end = clock.now()
             self.state = self.WARM
             return out

@@ -3,15 +3,32 @@
 Real bytes move through these channels (the caller hands over the payload),
 so measured wall time = modeled latency + serialization time + actual copy
 cost. Channels are thread-safe; concurrent transfers on one channel contend
-for bandwidth (serialized grants), matching a shared NIC."""
+for bandwidth (serialized grants), matching a shared NIC.
+
+Two grant granularities:
+  * ``transfer``  — whole-blob: the bandwidth lock is held for the entire
+    payload (head-of-line blocking; the pre-streaming baseline).
+  * ``stream``    — chunk-granularity: the lock is held one chunk at a time
+    (``chunk_bytes``, default ``DEFAULT_CHUNK_BYTES`` = 1 MiB), so concurrent
+    transfers fair-share the link and a small transfer is never stuck behind
+    a large one. Chunks are yielded as they "arrive", which is what lets the
+    Truffle data plane pipeline storage-get -> relay -> buffer-append.
+"""
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
+from typing import Iterator
 
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 
 GBPS = 1e9 / 8  # bytes/sec per Gbit/s
+
+#: Streaming grant size. Large enough that per-chunk locking overhead is
+#: negligible, small enough that time-to-first-chunk ~ chunk/bandwidth.
+DEFAULT_CHUNK_BYTES = 1 << 20
+
 
 
 @dataclass
@@ -21,17 +38,64 @@ class Channel:
     latency: float                    # simulated seconds, per transfer
     clock: Clock = field(default_factory=lambda: DEFAULT_CLOCK)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _busy_until: float = field(default=0.0, repr=False)  # wall, last grant end
 
     def transfer_time(self, nbytes: int) -> float:
         return self.latency + nbytes / self.bandwidth
 
+    def _grant(self, nbytes: int, after: float = None) -> float:
+        """Reserve serialized link time for ``nbytes``; returns the wall
+        deadline when those bytes have arrived. Grants queue back-to-back
+        (``_busy_until``), so concurrent transfers contend for bandwidth.
+
+        ``after`` chains grants within one stream: the next chunk starts at
+        the previous chunk's deadline even if the requester woke up late —
+        the wire kept sending (kernel/NIC buffering). Deadline-chained sleeps
+        self-correct OS sleep overshoot; without this a 128-chunk stream
+        accumulates ~a timer quantum of drift per chunk. A fresh transfer
+        (``after=None``) can never start in the past."""
+        wall = (nbytes / self.bandwidth) * self.clock.scale
+        with self._lock:
+            floor = time.monotonic() if after is None else after
+            start = max(floor, self._busy_until)
+            self._busy_until = start + wall
+            return self._busy_until
+
     def transfer(self, payload: bytes) -> float:
-        """Blocks for the modeled duration; returns simulated seconds."""
+        """Whole-blob: blocks for the modeled duration holding the bandwidth
+        grant for the full payload. Returns simulated seconds."""
         t = self.transfer_time(len(payload))
         self.clock.sleep(self.latency)
-        with self._lock:                      # bandwidth contention
-            self.clock.sleep(t - self.latency)
+        self.clock.sleep_until(self._grant(len(payload)))
         return t
+
+    def transfer_chunk(self, nbytes: int, *, pay_latency: bool = False,
+                       after: float = None) -> float:
+        """Grant bandwidth for one chunk only (fair-share building block).
+        Returns the wall deadline — pass it back as ``after`` on the next
+        chunk to chain a stream's grants."""
+        if pay_latency:
+            self.clock.sleep(self.latency)
+        deadline = self._grant(nbytes, after=after)
+        self.clock.sleep_until(deadline)
+        return deadline
+
+    def stream(self, payload: bytes,
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Iterator[memoryview]:
+        """Chunk-granularity transfer: yields each chunk after its modeled
+        arrival. Bandwidth is granted per chunk, so concurrent streams
+        interleave instead of head-of-line blocking. Chunks are zero-copy
+        ``memoryview`` slices (the blob path hands over the payload object
+        unchanged — same semantics, measured time stays modeled time)."""
+        self.clock.sleep(self.latency)
+        view = memoryview(payload)
+        deadline = None
+        for off in range(0, len(payload), chunk_bytes):
+            chunk = view[off:off + chunk_bytes]
+            deadline = self.transfer_chunk(len(chunk), after=deadline)
+            yield chunk
+        if deadline is None:                  # empty payload: one empty chunk
+            yield b""
 
 
 @dataclass

@@ -7,7 +7,12 @@ Video Analytics with fan-out/fan-in) under four data-passing strategies:
 
 Also provides speculative straggler mitigation: a stage exceeding
 ``straggler_factor`` x its predicted time is re-dispatched and the first
-finisher wins (duplicate results are idempotent by construction here)."""
+finisher wins (duplicate results are idempotent by construction here).
+
+Data-plane knobs (truffle mode): ``stream=True`` pipelines stage-to-stage
+transfers at chunk granularity; ``dedup=True`` content-addresses stage
+outputs so identical fan-out inputs alias the target buffer instead of
+re-shipping. Defaults keep the whole-blob behavior."""
 from __future__ import annotations
 
 import threading
@@ -90,13 +95,19 @@ class WorkflowTrace:
 class WorkflowRunner:
     def __init__(self, cluster, *, use_truffle: bool, storage: str = "direct",
                  straggler_factor: float = 0.0, prewarm_roots: bool = False,
-                 estimates: Optional[Dict[str, PhaseEstimate]] = None):
+                 estimates: Optional[Dict[str, PhaseEstimate]] = None,
+                 stream: bool = False, dedup: bool = False):
         self.cluster = cluster
         self.use_truffle = use_truffle
         self.storage = storage
         self.straggler_factor = straggler_factor
         self.prewarm_roots = prewarm_roots
         self.estimates = estimates or {}
+        # chunked-streaming data plane knobs (truffle mode only): stream
+        # pipelines transfers at chunk granularity, dedup content-addresses
+        # stage outputs so fan-out inputs alias instead of re-shipping
+        self.stream = stream
+        self.dedup = dedup
 
     # ------------------------------------------------------------------ run
     def run(self, wf: Workflow, input_data: bytes,
@@ -201,13 +212,15 @@ class WorkflowRunner:
                           source_node=source_node)
             if self.use_truffle:
                 truffle = cluster.node(source_node).truffle
-                out, rec = truffle.handle_request(req)       # SDP
+                out, rec = truffle.handle_request(
+                    req, stream=self.stream, dedup=self.dedup)   # SDP
             else:
                 out, rec = cluster.platform.invoke(req)      # fetch after start
         else:  # direct
             if self.use_truffle:
                 truffle = cluster.node(source_node).truffle
-                out, rec = truffle.pass_data(fn, data)       # CSP
+                out, rec = truffle.pass_data(
+                    fn, data, stream=self.stream, dedup=self.dedup)  # CSP
             else:
                 req = Request(fn=fn, payload=data, source_node=source_node)
                 out, rec = cluster.platform.invoke(req)      # body held at ingress

@@ -4,15 +4,24 @@ latency+bandwidth. Real bytes move; measured time = modeled time.
 Calibration targets the paper's testbed (4-core Xeon VMs, MicroK8s LAN +
 AWS S3): KVS reads fast / writes slower (paper Fig 9b: Truffle gains only
 ~5% on KVS because little read time is left to mask), S3 slow both ways
-(Fig 9c: ~18% gain). See EXPERIMENTS.md §Calibration."""
+(Fig 9c: ~18% gain). See EXPERIMENTS.md §Calibration.
+
+Streaming (chunked data plane): ``get_stream``/``put_stream`` move the same
+bytes chunk-at-a-time over the service channels (default chunk:
+``DEFAULT_CHUNK_BYTES``), so the Data Engine can pipeline storage-get ->
+relay -> buffer-append instead of waiting for the last byte. ``digest``
+returns (and caches) the content address of a stored object for
+content-addressed dedup downstream. The whole-blob ``get``/``put`` remain
+the non-streaming baseline."""
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterable, Iterator, Optional, Tuple
 
+from repro.core.buffer import content_digest
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
-from repro.runtime.netsim import Channel, GBPS
+from repro.runtime.netsim import Channel, DEFAULT_CHUNK_BYTES, GBPS
 
 
 class StorageError(KeyError):
@@ -30,6 +39,7 @@ class StorageService:
 
     def __post_init__(self) -> None:
         self._data: Dict[str, bytes] = {}
+        self._digests: Dict[str, str] = {}
         self._lock = threading.Lock()
         self._put_ch = Channel(f"{self.type_name}.put", self.put_bandwidth,
                                self.latency, self.clock)
@@ -40,15 +50,55 @@ class StorageService:
         t = self._put_ch.transfer(data)
         with self._lock:
             self._data[key] = data
+            self._digests.pop(key, None)
         return t
 
     def get(self, key: str) -> Tuple[bytes, float]:
+        data = self._require(key)
+        t = self._get_ch.transfer(data)
+        return data, t
+
+    # ------------------------------------------------------------- streaming
+    def get_stream(self, key: str,
+                   chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Iterator[bytes]:
+        """Yield the object chunk-by-chunk as each chunk "arrives" off the
+        read channel (per-chunk bandwidth grants — fair-share)."""
+        data = self._require(key)
+        return self._get_ch.stream(data, chunk_bytes)
+
+    def put_stream(self, key: str, chunks: Iterable[bytes]) -> float:
+        """Consume an incoming chunk iterator, paying write-channel time per
+        chunk; the object becomes visible once the last chunk lands."""
+        t = self.latency
+        first = True
+        deadline = None
+        parts = []
+        for chunk in chunks:
+            deadline = self._put_ch.transfer_chunk(len(chunk),
+                                                   pay_latency=first,
+                                                   after=deadline)
+            first = False
+            t += len(chunk) / self.put_bandwidth
+            parts.append(chunk)
+        with self._lock:
+            self._data[key] = b"".join(parts)   # joins bytes and memoryviews
+            self._digests.pop(key, None)
+        return t
+
+    def digest(self, key: str) -> str:
+        """Content address of a stored object (computed lazily, cached)."""
+        data = self._require(key)
+        with self._lock:
+            if key not in self._digests:
+                self._digests[key] = content_digest(data)
+            return self._digests[key]
+
+    # -------------------------------------------------------------- plumbing
+    def _require(self, key: str) -> bytes:
         with self._lock:
             if key not in self._data:
                 raise StorageError(f"{self.type_name}: no object {key!r}")
-            data = self._data[key]
-        t = self._get_ch.transfer(data)
-        return data, t
+            return self._data[key]
 
     def exists(self, key: str) -> bool:
         with self._lock:
@@ -57,6 +107,7 @@ class StorageService:
     def delete(self, key: str) -> None:
         with self._lock:
             self._data.pop(key, None)
+            self._digests.pop(key, None)
 
 
 def make_kvs(clock: Clock = DEFAULT_CLOCK) -> StorageService:

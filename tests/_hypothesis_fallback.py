@@ -1,0 +1,93 @@
+"""Minimal stand-in for ``hypothesis`` (an optional dependency).
+
+Provides deterministic pseudo-random example generation for the small
+strategy subset these tests use (integers, floats, sampled_from, lists,
+tuples, text), plus no-op ``settings``. Real hypothesis is preferred when
+installed (shrinking, coverage-guided generation, the full strategy
+language); this keeps the property tests *running* — not skipped — when it
+isn't. Seeding is fixed, so failures reproduce."""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value=0, max_value=1 << 30):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def text(alphabet="abcdefghij", min_size=0, max_size=8):
+    alphabet = list(alphabet)
+    return _Strategy(lambda r: "".join(
+        r.choice(alphabet) for _ in range(r.randint(min_size, max_size))))
+
+
+def lists(elements, min_size=0, max_size=8):
+    return _Strategy(lambda r: [
+        elements.draw(r) for _ in range(r.randint(min_size, max_size))])
+
+
+def tuples(*elems):
+    return _Strategy(lambda r: tuple(e.draw(r) for e in elems))
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        # The wrapper's signature must expose ONLY the non-drawn parameters
+        # (pytest fixtures, e.g. a module-scoped mesh) — like real
+        # hypothesis; drawn parameters are filled per example.
+        sig = inspect.signature(fn)
+        remaining = [p for p in sig.parameters if p not in kw_strats]
+        fixture_names = remaining[:len(remaining) - len(arg_strats)]
+
+        # positional strategies fill the RIGHTMOST non-fixture parameters
+        # (matching real hypothesis), passed by name so fixtures can't
+        # collide with positional draws
+        drawn_names = remaining[len(remaining) - len(arg_strats):]
+
+        def wrapper(**fixtures):
+            for i in range(getattr(wrapper, "_max_examples", 20)):
+                r = random.Random(0xC0FFEE + i)
+                drawn = {n: s.draw(r) for n, s in zip(drawn_names, arg_strats)}
+                drawn_kw = {k: s.draw(r) for k, s in kw_strats.items()}
+                fn(**{**fixtures, **drawn, **drawn_kw})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature(
+            [inspect.Parameter(n, inspect.Parameter.KEYWORD_ONLY)
+             for n in fixture_names])
+        return wrapper
+    return deco
+
+
+def settings(max_examples=20, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from, text=text, lists=lists, tuples=tuples)

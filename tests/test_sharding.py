@@ -2,7 +2,10 @@
 and the per-shape rule presets — plus a hypothesis property sweep."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # optional dep: vendored deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (default_rules, rules_for_shape,
@@ -14,7 +17,10 @@ from repro.launch.mesh import make_mesh
 @pytest.fixture(scope="module")
 def mesh():
     # 1 real device; abstract mesh construction needs none
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:   # jax 0.4.x signature: ((name, size), ...) pairs
+        return jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_spec_basic(mesh):

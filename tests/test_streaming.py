@@ -1,0 +1,409 @@
+"""Chunked streaming data plane: per-chunk channel grants (fair share),
+buffer streaming entries + content-addressed dedup, O(1) LRU eviction,
+pipelined CSP/SDP transfers, transfer-stall detection, and the Eq. 4
+pipelined-transfer model term against the running system."""
+import threading
+import time
+
+import pytest
+
+from repro.core import model as tm
+from repro.core.buffer import Buffer, content_digest
+from repro.core.errors import TransferStallError
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import ContentRef, FunctionSpec, Request
+from repro.runtime.netsim import Channel, GBPS
+
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------- channel
+def test_channel_stream_yields_all_bytes_and_models_time():
+    clock = Clock(0.05)
+    ch = Channel("s", bandwidth=0.45 * GBPS, latency=0.0005, clock=clock)
+    # correctness: exact bytes, in order
+    payload = bytes(range(256)) * (2 * MB // 256)
+    assert b"".join(ch.stream(payload, chunk_bytes=MB)) == payload
+    # timing: consume without materializing (joins are real memcpy cost,
+    # not modeled transfer time)
+    payload = bytes(16 * MB)
+    t0 = time.monotonic()
+    n = sum(len(c) for c in ch.stream(payload, chunk_bytes=MB))
+    wall = time.monotonic() - t0
+    assert n == len(payload)
+    modeled = clock.elapsed_sim(wall)
+    assert modeled == pytest.approx(ch.transfer_time(len(payload)), rel=0.35)
+
+
+def test_channel_stream_fair_share_no_head_of_line_blocking():
+    """A small streamed transfer completes while a big one is in flight —
+    per-chunk grants interleave instead of payload-length lock holds."""
+    clock = Clock(0.05)
+    ch = Channel("f", bandwidth=1 * GBPS, latency=0.0, clock=clock)
+    done = {}
+
+    def run(tag, nbytes):
+        t0 = time.monotonic()
+        for _ in ch.stream(bytes(nbytes), chunk_bytes=MB):
+            pass
+        done[tag] = time.monotonic() - t0
+
+    big = threading.Thread(target=run, args=("big", 64 * MB))
+    big.start()
+    time.sleep(0.008)                      # big stream is mid-flight
+    run("small", 2 * MB)
+    big.join(timeout=30)
+    assert done["small"] < done["big"]     # not serialized behind the blob
+
+
+def test_channel_empty_payload_streams_one_empty_chunk():
+    ch = Channel("e", bandwidth=GBPS, latency=0.0, clock=Clock(0.0))
+    assert [bytes(c) for c in ch.stream(b"")] == [b""]
+
+
+# ----------------------------------------------------------------- buffer
+def test_buffer_stream_reader_sees_chunks_at_arrival():
+    b = Buffer()
+    b.open_stream("k")
+    got = []
+
+    def consume():
+        for chunk in b.open_reader("k", timeout=5):
+            got.append(bytes(chunk))
+
+    t = threading.Thread(target=consume)
+    t.start()
+    b.append_chunk("k", b"aa")
+    time.sleep(0.02)
+    b.append_chunk("k", b"bb")
+    b.close_stream("k")
+    t.join(timeout=5)
+    assert got == [b"aa", b"bb"]
+    assert b.get("k") == b"aabb"           # complete entry reads whole
+
+
+def test_buffer_wait_for_blocks_until_stream_complete():
+    b = Buffer()
+    b.open_stream("k")
+    b.append_chunk("k", b"xy")
+    assert b.get("k") is None              # in-flight: not a full value yet
+    assert b.wait_for("k", timeout=0.05) is None
+    b.close_stream("k")
+    assert b.wait_for("k", timeout=1) == b"xy"
+
+
+def test_buffer_reader_timeout_raises():
+    b = Buffer()
+    b.open_stream("k")
+    reader = b.open_reader("k", timeout=0.05)
+    with pytest.raises(TimeoutError):
+        next(reader)
+
+
+def test_buffer_content_addressing_alias_dedup():
+    b = Buffer()
+    payload = b"z" * 1000
+    d = content_digest(payload)
+    b.set("orig", payload, digest=d)
+    assert b.find_digest(d) == "orig"
+    assert b.alias("copy", d)
+    assert b.get("copy") == payload
+    assert b.stats["dedup_hits"] == 1
+    assert b.alias("nope", content_digest(b"other")) is False
+    # aliased chunks are shared, not copied
+    assert b._entries["copy"].chunks is b._entries["orig"].chunks
+
+
+def test_buffer_abort_stream_frees_bytes_and_wakes_reader():
+    b = Buffer()
+    b.open_stream("k")
+    b.append_chunk("k", b"a" * 100)
+    errbox = []
+
+    def consume():
+        try:
+            for _ in b.open_reader("k", timeout=5):
+                pass
+        except IOError as e:
+            errbox.append(e)
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.02)
+    b.abort_stream("k")
+    t.join(timeout=5)
+    assert errbox, "reader must fail, not see a truncated input"
+    assert "k" not in b
+    assert b.size == 0                     # appended chunks not leaked
+
+
+def test_buffer_alias_not_double_charged():
+    b = Buffer()
+    payload = b"y" * 1000
+    d = content_digest(payload)
+    b.set("src", payload, digest=d)
+    assert b.alias("a1", d) and b.alias("a2", d)
+    assert b.size == len(payload)          # shared chunks charged once
+    assert b.find_digest(d) == "src"       # index still points at the source
+    # self-alias (repeated fetch under the same key) must not zero the charge
+    assert b.alias("src", d)
+    assert b.size == len(payload)
+    assert b.get("src") == payload
+
+
+def test_buffer_digest_index_dropped_on_eviction():
+    b = Buffer(capacity_bytes=100)
+    d = content_digest(b"a" * 80)
+    b.set("a", b"a" * 80, digest=d)
+    b.set("b", b"b" * 80)                  # evicts "a"
+    assert "a" not in b
+    assert b.find_digest(d) is None
+    assert not b.alias("re", d)
+
+
+def test_buffer_eviction_10k_entries_o1():
+    """Regression: eviction used to restart a full scan per evicted entry
+    and re-scan pinned entries every pass (O(n^2)). With pinned entries at
+    the front and 10k inserts, that is ~2e7 scan steps; LRU-ordered
+    unpinned tracking makes it O(1) amortized."""
+    b = Buffer(capacity_bytes=100 * 1024)
+    for i in range(2000):                  # pinned clutter the old scan path
+        b.set(f"pin/{i}", b"p" * 8, pinned=True)
+    t0 = time.monotonic()
+    for i in range(10_000):
+        b.set(f"k/{i}", b"x" * 1024)
+    elapsed = time.monotonic() - t0
+    assert b.stats["evictions"] >= 9900
+    assert b.size <= 100 * 1024 + 2000 * 8
+    for i in range(2000):                  # pins never evicted
+        assert f"pin/{i}" in b
+    # generous bound: the O(n^2) implementation takes far longer
+    assert elapsed < 2.0, f"eviction too slow: {elapsed:.2f}s"
+
+
+def test_buffer_incomplete_streams_never_evicted():
+    b = Buffer(capacity_bytes=100)
+    b.open_stream("inflight")
+    b.append_chunk("inflight", b"c" * 90)
+    b.set("filler", b"f" * 90)             # over capacity: evicts filler only
+    assert "inflight" in b
+    b.close_stream("inflight")
+    assert b.wait_for("inflight", timeout=1) == b"c" * 90
+
+
+# ---------------------------------------------------------------- storage
+def test_storage_stream_roundtrip_and_digest():
+    from repro.storage.base import make_kvs
+
+    clock = Clock(0.0)
+    src, dst = make_kvs(clock), make_kvs(clock)
+    payload = bytes(range(256)) * (2 * MB // 256)
+    src.put("in", payload)
+    t = dst.put_stream("out", src.get_stream("in"))   # get → put pipeline
+    assert dst.get("out")[0] == payload
+    assert t == pytest.approx(dst.latency + len(payload) / dst.put_bandwidth,
+                              rel=1e-6)
+    assert dst.digest("out") == content_digest(payload)
+    # empty chunk iterator: stores an empty object, charges latency only
+    assert dst.put_stream("empty", iter(())) == pytest.approx(dst.latency)
+    assert dst.get("empty")[0] == b""
+
+
+# ------------------------------------------------------------- CSP stream
+def _streaming_spec(name, eps, n_chunks, **kw):
+    def handler(_, inv):
+        pacer = inv.cluster.clock.pacer()
+        total = 0
+        for chunk in inv.get_input_stream():
+            pacer.sleep(eps)
+            total += len(chunk)
+        return str(total).encode()
+    kw.setdefault("provision_s", 0.3)
+    kw.setdefault("startup_s", 0.05)
+    return FunctionSpec(name, handler, streaming=True, **kw)
+
+
+def test_csp_stream_hides_io_behind_coldstart_and_exec():
+    """Acceptance shape: transfer > cold start; streaming visible IO well
+    below the whole-blob visible IO, near the Eq. 4 pipelined prediction."""
+    clock = Clock(0.1)
+    cluster = Cluster(clock=clock)
+    n = 32
+    exec_total = 0.3
+    eps = exec_total / (n - 1)
+    payload = bytes(n * MB)
+
+    blob = FunctionSpec("st-blob", lambda d, inv: d, provision_s=0.3,
+                        startup_s=0.05, exec_s=exec_total, affinity="edge-1")
+    strm = _streaming_spec("st-strm", eps, n, affinity="edge-1")
+    cluster.platform.register(blob)
+    cluster.platform.register(strm)
+    truffle = cluster.node("edge-0").truffle
+
+    _, rb = truffle.pass_data("st-blob", payload)
+    out, rs = truffle.pass_data("st-strm", payload, stream=True)
+    assert out == str(len(payload)).encode()
+    io_blob = clock.elapsed_sim(rb.io_visible)
+    io_strm = clock.elapsed_sim(rs.io_visible)
+    assert rs.streamed and not rb.streamed
+    assert io_blob > 0.1                   # transfer exceeds cold start here
+    assert io_strm <= 0.7 * io_blob        # >= 30% visible-IO reduction
+
+    bw, lat = cluster.network.tier_links[("edge", "edge")]
+    p = tm.PhaseEstimate(alpha=0.15, nu=0.3, eta=0.05,
+                         delta=lat + len(payload) / bw, gamma=exec_total)
+    predicted = tm.pipelined_io_visible(p, exec_overlap=exec_total)
+    assert io_strm == pytest.approx(predicted, abs=0.12)
+    assert clock.elapsed_sim(rb.io_visible) == pytest.approx(
+        max(0.0, p.delta - p.beta), abs=0.12)
+
+
+def test_csp_dedup_repeated_fanout_input_near_zero_transfer():
+    """Second pass of identical bytes to the same node is served from the
+    content-addressed buffer: no fetch, no relay."""
+    clock = Clock(0.05)
+    cluster = Cluster(clock=clock)
+    payload = bytes(8 * MB)
+    for i in range(3):
+        cluster.platform.register(
+            FunctionSpec(f"fan-{i}", lambda d, inv: d, provision_s=0.3,
+                         startup_s=0.05, exec_s=0.01, affinity="edge-1"))
+    truffle = cluster.node("edge-0").truffle
+    _, r0 = truffle.pass_data("fan-0", payload, dedup=True)
+    assert not r0.dedup_hit                # first pass pays the transfer
+    for i in (1, 2):
+        _, r = truffle.pass_data(f"fan-{i}", payload, dedup=True)
+        assert r.dedup_hit
+        post_place = clock.elapsed_sim(
+            max(0.0, r.t_transfer_end - r.t_placed))
+        assert post_place < 0.05           # near-zero transfer after placement
+    assert cluster.node("edge-1").buffer.stats["dedup_hits"] == 2
+
+
+def test_sdp_stream_fetch_pipelines_storage_read(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(4 * MB)
+    cluster.storage["kvs"].put("obj-s", payload)
+    spec = FunctionSpec("sdp-strm", lambda d, inv: d, provision_s=0.5,
+                        startup_s=0.1, exec_s=0.01)
+    cluster.platform.register(spec)
+    req = Request(fn="sdp-strm",
+                  content_ref=ContentRef("kvs", "obj-s", len(payload)))
+    out, rec = cluster.node("edge-0").truffle.handle_request(req, stream=True)
+    assert out == payload
+    assert rec.mode == "truffle"
+    assert rec.io_visible <= 0.02
+
+
+def test_sdp_dedup_via_storage_digest(fast_clock):
+    """Two SDP requests for the same stored object: the second is aliased
+    from the target buffer's digest index (Data Engine skips the fetch)."""
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(2 * MB)
+    cluster.storage["kvs"].put("obj-d", payload)
+    for i in range(2):
+        cluster.platform.register(
+            FunctionSpec(f"sdp-d{i}", lambda d, inv: d, provision_s=0.3,
+                         startup_s=0.05, exec_s=0.01, affinity="edge-1"))
+    truffle = cluster.node("edge-0").truffle
+    ref = ContentRef("kvs", "obj-d", len(payload))
+    _, r0 = truffle.handle_request(Request(fn="sdp-d0", content_ref=ref),
+                                   dedup=True)
+    _, r1 = truffle.handle_request(Request(fn="sdp-d1", content_ref=ref),
+                                   dedup=True)
+    assert not r0.dedup_hit
+    assert r1.dedup_hit
+    eng = cluster.node("edge-1").truffle.engine
+    assert eng.stats["dedup_hits"] == 1
+    assert eng.stats["fetches"] == 1       # one storage read for two invocations
+
+
+# ----------------------------------------------------------- stall raises
+def test_csp_transfer_stall_recorded_and_raised(fast_clock):
+    """Regression: a transfer thread outliving the join budget used to be
+    silently swallowed; it must be recorded and raised."""
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("stall-fn", lambda d, inv: d, provision_s=0.2,
+                        startup_s=0.05, exec_s=0.01, affinity="edge-1")
+    cluster.platform.register(spec)
+    truffle = cluster.node("edge-0").truffle
+    truffle.csp.join_timeout_s = 0.05
+
+    target_buffer = cluster.node("edge-1").buffer
+    orig_set = target_buffer.set
+
+    def slow_set(key, data, **kw):
+        orig_set(key, data, **kw)          # input lands (function completes)
+        time.sleep(1.0)                    # ...then the thread wedges
+
+    target_buffer.set = slow_set
+    try:
+        with pytest.raises(TransferStallError) as exc:
+            truffle.pass_data("stall-fn", b"payload")
+    finally:
+        target_buffer.set = orig_set
+    assert exc.value.record is not None
+    assert exc.value.record.transfer_stalled
+
+
+def test_sdp_transfer_stall_recorded_and_raised(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("stall-sdp", lambda d, inv: d, provision_s=0.2,
+                        startup_s=0.05, exec_s=0.01, affinity="edge-1")
+    cluster.platform.register(spec)
+    truffle = cluster.node("edge-0").truffle
+    truffle.sdp.join_timeout_s = 0.05
+
+    target_buffer = cluster.node("edge-1").buffer
+    orig_set = target_buffer.set
+
+    def slow_set(key, data, **kw):
+        orig_set(key, data, **kw)
+        time.sleep(1.0)
+
+    target_buffer.set = slow_set
+    try:
+        with pytest.raises(TransferStallError) as exc:
+            truffle.handle_request(Request(fn="stall-sdp", payload=b"x"))
+    finally:
+        target_buffer.set = orig_set
+    assert exc.value.record.transfer_stalled
+
+
+# -------------------------------------------------------------- model ext
+def test_pipelined_model_terms():
+    p = tm.PhaseEstimate(alpha=0.1, nu=1.0, eta=0.5, delta=4.0, gamma=2.0)
+    # whole-blob truffle: visible IO = delta - beta = 2.5
+    assert tm.truffle_time(p) == pytest.approx(0.1 + 4.0 + 2.0)
+    # streaming with full exec overlap: visible IO = 4.0 - 1.5 - 2.0 = 0.5
+    assert tm.pipelined_io_visible(p, exec_overlap=2.0) == pytest.approx(0.5)
+    assert tm.streamed_time(p, exec_overlap=2.0) == pytest.approx(
+        0.1 + 1.5 + 0.5 + 2.0)
+    # gain over whole-blob = min(overlap, delta - beta)
+    assert tm.streamed_improvement(p, exec_overlap=2.0) == pytest.approx(2.0)
+    assert tm.streamed_improvement(p, exec_overlap=5.0) == pytest.approx(2.5)
+    # transfer shorter than cold start: nothing visible either way
+    q = tm.PhaseEstimate(alpha=0.1, nu=1.0, eta=0.5, delta=0.3, gamma=1.0)
+    assert tm.pipelined_io_visible(q, exec_overlap=1.0) == 0.0
+    assert tm.streamed_improvement(q, exec_overlap=1.0) == 0.0
+
+
+def test_workflow_runner_stream_dedup_matches_default(fast_clock):
+    """The streamed+dedup workflow path returns identical outputs to the
+    whole-blob default (behavior flag-gated, results unchanged)."""
+    from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+    def spec(name):
+        return FunctionSpec(name, lambda d, inv: d + b"!", provision_s=0.2,
+                            startup_s=0.05, exec_s=0.01)
+
+    outs = {}
+    for stream in (False, True):
+        wf = Workflow("w", {"a": Stage(spec(f"wsd-a{stream}")),
+                            "b": Stage(spec(f"wsd-b{stream}"), deps=["a"])})
+        cluster = Cluster(clock=fast_clock)
+        tr = WorkflowRunner(cluster, use_truffle=True, storage="direct",
+                            stream=stream, dedup=stream).run(wf, b"in")
+        outs[stream] = tr.stages["b"].output
+    assert outs[False] == outs[True] == b"in!!"

@@ -5,7 +5,10 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # optional dep: vendored deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import model as tm
 from repro.core.buffer import Buffer

@@ -36,8 +36,10 @@ def test_truffle_not_worse_and_hides_io(storage, fast_clock):
         tr = runner.run(_chained(f"-{storage}-{mode}"), PAYLOAD)
         totals[mode] = tr.total
         io[mode] = tr.phase_totals()["io"]
-    # allow 5% scheduling jitter at the shrunken clock scale
-    assert totals[True] <= totals[False] * 1.05
+    # allow 5% scheduling jitter + a few ms of absolute wall noise (at
+    # scale 0.01 the whole run is ~30ms wall, so 5% alone is ~1.5ms —
+    # thinner than OS scheduling jitter under a loaded suite)
+    assert totals[True] <= totals[False] * 1.05 + 0.005
     assert io[True] <= io[False] + 0.02
 
 
