@@ -55,9 +55,13 @@ def chained_workflow(size: int, *, extra_cold_s: float = 0.0,
     return Workflow("chained", {"a": Stage(a), "b": Stage(b, deps=["a"])})
 
 
-def video_workflow(size: int, fanout: int = 2, tag: str = "") -> Workflow:
+def video_workflow(size: int, fanout: int = 2, tag: str = "",
+                   pin: bool = True) -> Workflow:
     """Paper §VI: Video Streaming -> Decoder (fan-out) -> Image Recognition
-    (fan-in) — the dominant serverless invocation patterns."""
+    (fan-in) — the dominant serverless invocation patterns.
+
+    ``pin=False`` drops the decoder/recognizer affinities so the scheduler
+    is free to place them (the locality-aware-placement benchmark)."""
     stages: Dict[str, Stage] = {
         "stream": Stage(FunctionSpec(f"v-stream{tag}", _producer(size),
                                      exec_s=0.08, affinity="edge-0",
@@ -66,11 +70,12 @@ def video_workflow(size: int, fanout: int = 2, tag: str = "") -> Workflow:
     for i in range(fanout):
         stages[f"dec{i}"] = Stage(
             FunctionSpec(f"v-dec{i}{tag}", _producer(seg), exec_s=0.10,
-                         affinity=f"edge-{1 + i % 2}", **PAPER_COLD),
+                         affinity=f"edge-{1 + i % 2}" if pin else None,
+                         **PAPER_COLD),
             deps=["stream"])
     stages["recog"] = Stage(
         FunctionSpec(f"v-recog{tag}", _identity, exec_s=0.15,
-                     affinity="cloud-0", **PAPER_COLD),
+                     affinity="cloud-0" if pin else None, **PAPER_COLD),
         deps=[f"dec{i}" for i in range(fanout)])
     return Workflow("video", stages)
 

@@ -8,13 +8,19 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig11       added-cold-start-delay sweep
   eq4         analytic-model validation (+ pipelined-transfer extension)
   stream.*    chunked-streaming sweep: blob vs stream vs dedup fan-out
+  locality.*  load-only vs digest-aware placement (fan-out + video)
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
 
 Env: BENCH_SCALE (default 0.5) shrinks simulated time; BENCH_FAST=1 runs a
 reduced grid; BENCH_SKIP=ml skips the real-compile ML benches; BENCH_JSON
-sets the machine-readable output path (default BENCH_truffle.json in cwd)."""
+sets the machine-readable output path (default BENCH_truffle.json in cwd).
+
+``--smoke``: CI mode — forces the fast grid at a small scale, skips the
+real-compile ML benches, then validates that BENCH_truffle.json was
+produced and is well-formed (non-empty, numeric us_per_call). Exits
+non-zero on a malformed or missing results file."""
 from __future__ import annotations
 
 import os
@@ -27,12 +33,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     t0 = time.time()
+    smoke = "--smoke" in sys.argv[1:]
+    if smoke:   # must be set before benchmarks.common is imported
+        os.environ.setdefault("BENCH_SCALE", "0.05")
+        os.environ["BENCH_FAST"] = "1"
+        os.environ.setdefault("BENCH_SKIP", "ml")
     fast = os.environ.get("BENCH_FAST") == "1"
     skip = set(os.environ.get("BENCH_SKIP", "").split(","))
 
     from benchmarks import (chained_sweep, chained_total, coldstart_sweep,
-                            lifecycle, model_validation, roofline,
-                            streaming_sweep, video_analytics)
+                            lifecycle, locality_sweep, model_validation,
+                            roofline, streaming_sweep, video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -49,6 +60,9 @@ def main() -> None:
                         tiers=("edge-edge",) if fast
                         else ("edge-edge", "edge-cloud"))
 
+    print("# --- locality-aware placement ---")
+    locality_sweep.run()
+
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")
         from benchmarks import serve_handoff, train_coldstart
@@ -61,11 +75,13 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001 — dry-run may not have run yet
         print(f"# roofline skipped: {e}")
 
-    _dump_json(t0)
+    path = _dump_json(t0)
     print(f"# total benchmark wall time: {time.time() - t0:.0f}s")
+    if smoke:
+        _validate_json(path)
 
 
-def _dump_json(t0: float) -> None:
+def _dump_json(t0: float) -> str:
     """Machine-readable results (per-benchmark us_per_call + parsed derived
     metrics) so the perf trajectory is trackable across PRs."""
     import json
@@ -80,6 +96,36 @@ def _dump_json(t0: float) -> None:
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"# wrote {len(EMITTED)} benchmark rows to {path}")
+    return path
+
+
+def _validate_json(path: str) -> None:
+    """Smoke contract: the results file exists, parses, and every row has a
+    name and a numeric us_per_call. Exits non-zero otherwise."""
+    import json
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"smoke: cannot read {path}: {e}")
+    problems = []
+    if doc.get("schema") != 1:
+        problems.append(f"unexpected schema: {doc.get('schema')!r}")
+    rows = doc.get("benchmarks")
+    if not isinstance(rows, list) or not rows:
+        problems.append("no benchmark rows")
+    else:
+        for i, row in enumerate(rows):
+            if not isinstance(row.get("name"), str) or not row["name"]:
+                problems.append(f"row {i}: bad name {row.get('name')!r}")
+            us = row.get("us_per_call")
+            if not isinstance(us, (int, float)) or us != us:   # NaN check
+                problems.append(f"row {i} ({row.get('name')}): "
+                                f"bad us_per_call {us!r}")
+    if problems:
+        sys.exit("smoke: malformed " + path + "\n  " + "\n  ".join(problems))
+    print(f"# smoke OK: {path} well-formed ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,15 @@ under a new invocation key with zero copy and zero transfer (dedup hit).
 
 Knobs: ``capacity_bytes`` bounds resident bytes (LRU over complete unpinned
 entries, O(1) amortized eviction); chunk size is chosen by the writer.
+
+Residency reporting: assigning ``on_residency`` (a callable
+``(digest, size, resident: bool) -> None``) makes the buffer report every
+digest that becomes resolvable (set/close/ingest/alias) or stops resolving
+(evict/displace) — the hook the cluster-wide
+:class:`~repro.runtime.registry.DigestRegistry` hangs off for
+locality-aware placement. Callbacks fire *after* the buffer lock is
+released (queued under the lock, flushed outside), so listeners may safely
+call back into the buffer or take their own locks.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 def content_digest(data) -> str:
@@ -116,6 +125,36 @@ class Buffer:
         self._cond = threading.Condition(self._lock)
         self.stats = {"puts": 0, "gets": 0, "waits": 0, "evictions": 0,
                       "dedup_hits": 0, "streams": 0}
+        #: residency listener: (digest, size, resident) — see module docstring
+        self.on_residency: Optional[Callable[[str, int, bool], None]] = None
+        self._pending_residency: List[tuple] = []    # queued under the lock
+        # serializes flushes so a preempted flusher cannot deliver a stale
+        # "resident" AFTER another thread delivered the matching "evicted"
+        # (RLock: a listener may mutate the buffer and re-enter the flush)
+        self._flush_lock = threading.RLock()
+
+    # ------------------------------------------------- residency reporting
+    def _queue_residency_locked(self, digest: str, size: int,
+                                resident: bool) -> None:
+        if self.on_residency is not None and digest is not None:
+            self._pending_residency.append((digest, size, resident))
+
+    def _flush_residency(self) -> None:
+        """Deliver queued residency events outside the buffer lock. The
+        flush lock keeps deliveries in queue order across threads."""
+        cb = self.on_residency
+        if cb is None:
+            return
+        # unlocked peek: get/wait_for on the data-plane hot path almost
+        # never queue events; skip both locks then. (Benign race: whoever
+        # queued an event flushes it after releasing the buffer lock.)
+        if not self._pending_residency:
+            return
+        with self._flush_lock:
+            with self._lock:
+                events, self._pending_residency = self._pending_residency, []
+            for digest, size, resident in events:
+                cb(digest, size, resident)
 
     # ------------------------------------------------------------ whole blob
     def set(self, key: str, data: bytes, pinned: bool = False,
@@ -128,6 +167,7 @@ class Buffer:
             self.stats["puts"] += 1
             self._evict_locked(exempt=key)
             self._cond.notify_all()
+        self._flush_residency()
 
     def get(self, key: str, pop: bool = False) -> Optional[bytes]:
         with self._lock:
@@ -139,23 +179,37 @@ class Buffer:
                 self._drop_locked(key)
             else:
                 self._touch_locked(e)
-            return e.data
+            data = e.data
+        self._flush_residency()
+        return data
 
     def wait_for(self, key: str, timeout: Optional[float] = None,
                  pop: bool = False) -> Optional[bytes]:
-        """Block until ``key`` is present AND complete (streams included)."""
+        """Block until ``key`` is present AND complete (streams included).
+
+        The entry's data is returned under the same lock hold that observed
+        completion: re-acquiring the lock for a trailing ``get`` would let a
+        racing eviction (or same-key displacement) turn a successful wait
+        into a spurious ``None``."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
             self.stats["waits"] += 1
             while True:
                 e = self._entries.get(key)
                 if e is not None and e.complete:
+                    self.stats["gets"] += 1
+                    if pop:
+                        self._drop_locked(key)
+                    else:
+                        self._touch_locked(e)
+                    data = e.data
                     break
                 remaining = None if deadline is None else deadline - time.monotonic()
                 if remaining is not None and remaining <= 0:
                     return None
                 self._cond.wait(remaining)
-        return self.get(key, pop=pop)
+        self._flush_residency()
+        return data
 
     # ------------------------------------------------------------- streaming
     def open_stream(self, key: str, pinned: bool = False) -> None:
@@ -168,6 +222,7 @@ class Buffer:
             self._insert_locked(e)
             self.stats["streams"] += 1
             self._cond.notify_all()
+        self._flush_residency()
 
     def append_chunk(self, key: str, chunk: bytes) -> None:
         with self._cond:
@@ -195,6 +250,7 @@ class Buffer:
             if e is not None and not e.complete:
                 self._drop_locked(key)
             self._cond.notify_all()
+        self._flush_residency()
 
     def close_stream(self, key: str, digest: Optional[str] = None) -> None:
         with self._cond:
@@ -205,11 +261,13 @@ class Buffer:
             e.digest = digest
             if digest is not None:
                 self._digests.setdefault(digest, key)
+                self._queue_residency_locked(digest, e.size, True)
             if not e.pinned:
                 self._lru[key] = None           # becomes evictable now
             self.stats["puts"] += 1
             self._evict_locked(exempt=key)
             self._cond.notify_all()
+        self._flush_residency()
 
     def ingest(self, key: str, chunks, digest: Optional[str] = None) -> int:
         """Stream an iterable of chunks into a new entry: open → append as
@@ -225,6 +283,7 @@ class Buffer:
             self._insert_locked(e)
             self.stats["streams"] += 1
             self._cond.notify_all()
+        self._flush_residency()
         n = 0
         try:
             for chunk in chunks:
@@ -239,11 +298,13 @@ class Buffer:
                 e.digest = digest
                 if digest is not None:
                     self._digests.setdefault(digest, key)
+                    self._queue_residency_locked(digest, e.size, True)
                 if not e.pinned:
                     self._lru[key] = None
                 self.stats["puts"] += 1
                 self._evict_locked(exempt=key)
                 self._cond.notify_all()
+            self._flush_residency()
         except BaseException:
             with self._cond:
                 if self._entries.get(key) is e:
@@ -251,6 +312,7 @@ class Buffer:
                 else:
                     e.aborted = True          # wake readers bound to us
                 self._cond.notify_all()
+            self._flush_residency()
             raise
         return n
 
@@ -290,15 +352,19 @@ class Buffer:
                 return False
             if src_key == new_key:            # content already under this key
                 self.stats["dedup_hits"] += 1
-                return True
-            self._drop_locked(new_key)
-            e = BufferEntry(new_key, time.monotonic(), pinned, digest,
-                            chunks=src.chunks, complete=True, size=0)
-            e._joined = src._joined
-            self._insert_locked(e)
-            self.stats["dedup_hits"] += 1
+                # refresh residency (paper: alias confirms the bytes are live)
+                self._queue_residency_locked(digest, src.size, True)
+            else:
+                self._drop_locked(new_key)
+                e = BufferEntry(new_key, time.monotonic(), pinned, digest,
+                                chunks=src.chunks, complete=True, size=0)
+                e._joined = src._joined
+                self._insert_locked(e)
+                self.stats["dedup_hits"] += 1
+                self._queue_residency_locked(digest, src.size, True)
             self._cond.notify_all()
-            return True
+        self._flush_residency()
+        return True
 
     # -------------------------------------------------------------- internal
     def _insert_locked(self, e: BufferEntry) -> None:
@@ -309,6 +375,10 @@ class Buffer:
                 # don't repoint an existing mapping (e.g. an alias's digest
                 # keeps resolving to the charged source entry)
                 self._digests.setdefault(e.digest, e.key)
+                # alias entries (charged size 0) are reported by alias()
+                # with the source entry's real size instead
+                if e.size > 0:
+                    self._queue_residency_locked(e.digest, e.size, True)
             if not e.pinned:
                 self._lru[e.key] = None
         # in-flight / pinned entries stay out of the LRU
@@ -326,6 +396,7 @@ class Buffer:
         self._lru.pop(key, None)
         if e.digest is not None and self._digests.get(e.digest) == key:
             del self._digests[e.digest]
+            self._queue_residency_locked(e.digest, e.size, False)
 
     def _touch_locked(self, e: BufferEntry) -> None:
         self._entries.move_to_end(e.key)
@@ -347,6 +418,7 @@ class Buffer:
             self._size -= e.size
             if e.digest is not None and self._digests.get(e.digest) == key:
                 del self._digests[e.digest]
+                self._queue_residency_locked(e.digest, e.size, False)
             self.stats["evictions"] += 1
 
     @property

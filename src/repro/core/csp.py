@@ -6,6 +6,13 @@ local Truffle, which (1) triggers the target function with a reference key,
 source-node → target-node the moment placement is known — i.e. during the
 target's cold start. The target handler reads from its local buffer.
 
+With ``dedup=True`` the payload is also *seeded* into the source node's
+buffer under its content address before the trigger fires, so the digest
+registry sees the bytes and the locality-aware scheduler can place the
+target right on them — the pass then degenerates to a zero-transfer local
+alias. Concurrent fan-out passes of the same content to one node share a
+single relay stream (``RelayTable``).
+
 Knobs (``pass_data`` kwargs): ``stream`` relays the payload chunk-by-chunk
 (``chunk_bytes``, default 1 MiB) into an in-flight buffer entry, so the
 target starts consuming at first-chunk arrival and per-chunk compute
@@ -21,7 +28,7 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.transfer import join_or_stall, ship_payload
+from repro.core.transfer import join_or_stall, seed_content, ship_payload
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 
@@ -44,6 +51,8 @@ class CSP:
         inv_id = uuid.uuid4().hex
         buf_key = f"truffle/{target_fn}/{inv_id[:8]}"
         digest = content_digest(data) if dedup else None
+        if digest is not None:
+            seed_content(cluster, t.node, target_fn, data, digest)
 
         fwd = Request(fn=target_fn,
                       content_ref=ContentRef("truffle", buf_key, size=len(data),
@@ -62,8 +71,8 @@ class CSP:
         def transfer_path():
             try:
                 rec.t_transfer_start = clock.now()
-                target_name = t.watcher.resolve_host(target_fn, inv_id)
-                ship_payload(cluster, t.node, cluster.node(target_name),
+                placed = t.watcher.resolve_placement(target_fn, inv_id)
+                ship_payload(cluster, t.node, cluster.node(placed["node"]),
                              buf_key, data, stream=stream, digest=digest,
                              chunk_bytes=chunk_bytes, record=rec)
                 rec.t_transfer_end = clock.now()

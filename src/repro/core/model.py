@@ -70,6 +70,32 @@ def streamed_improvement(p: PhaseEstimate, exec_overlap: float = 0.0) -> float:
     return truffle_time(p) - streamed_time(p, exec_overlap)
 
 
+# --------------------------------------------------- locality-aware terms
+# Digest-aware placement extension of Eq. 4: when a fraction f of the input
+# is already resident on the chosen node, only (1−f)·δ crosses the fabric.
+# Fully resident (f = 1, the fan-out alias case) degenerates the transfer
+# term to 0 and τ to α + β + γ — placement itself becomes the data plane.
+
+def effective_delta(p: PhaseEstimate, resident_fraction: float = 0.0) -> float:
+    """Transfer time after locality credit: δ_eff = (1 − f)·δ, f ∈ [0, 1]."""
+    f = min(max(resident_fraction, 0.0), 1.0)
+    return p.delta * (1.0 - f)
+
+
+def locality_truffle_time(p: PhaseEstimate,
+                          resident_fraction: float = 0.0) -> float:
+    """Eq. 3 with locality: τ = α + max(β, (1−f)·δ) + γ."""
+    return p.alpha + max(p.beta, effective_delta(p, resident_fraction)) + p.gamma
+
+
+def locality_improvement(p: PhaseEstimate,
+                         resident_fraction: float = 0.0) -> float:
+    """Gain of placing on a node holding fraction f of the input, vs. a
+    plain Truffle placement with the full transfer:
+    Δ_loc = max(β, δ) − max(β, (1−f)·δ)  (0 when δ ≤ β: already hidden)."""
+    return overlap_window(p) - max(p.beta, effective_delta(p, resident_fraction))
+
+
 def workflow_time(phases: Iterable[PhaseEstimate], use_truffle: bool = True) -> float:
     """Eq. 3/5: end-to-end over a function chain."""
     f = truffle_time if use_truffle else baseline_time

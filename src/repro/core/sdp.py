@@ -8,6 +8,13 @@ On request ingress, two paths run concurrently:
 The function, once started, reads its input from its node-local Truffle
 buffer via the reference key — ideally without waiting.
 
+With ``dedup=True`` the input's digest is resolved BEFORE the trigger fires
+(from the ContentRef, the storage service's digest index, or — for inline
+payloads — by hashing and seeding the bytes into the local buffer), so the
+forwarded reference carries a placement hint: the locality-aware scheduler
+can put the function on whichever node already holds those bytes and the
+data path degenerates to a local alias.
+
 Knobs (``handle`` kwargs): ``stream`` pipelines the data path at chunk
 granularity (``chunk_bytes``, default 1 MiB) so the function can consume at
 first-chunk arrival; ``dedup`` consults the target buffer's
@@ -23,7 +30,7 @@ import uuid
 from typing import Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.transfer import join_or_stall, ship_payload
+from repro.core.transfer import join_or_stall, seed_content, ship_payload
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 
@@ -45,11 +52,29 @@ class SDP:
         inv_id = uuid.uuid4().hex
         buf_key = f"truffle/{request.fn}/{inv_id[:8]}"
 
+        # resolve the content address BEFORE the trigger so the scheduler can
+        # score placement by residency (digest-aware locality): storage refs
+        # consult the service's digest index; inline payloads (including the
+        # non-adapter-ref fallback, which ships the inline body) are hashed
+        # and seeded into the local buffer. The hint must always describe
+        # the bytes the data path will actually land — a non-adapter ref's
+        # own digest describes content we do NOT have.
+        fetchable = ref is not None and ref.storage_type in t.engine._adapters
+        digest = ref.digest if fetchable else None
+        if dedup:
+            if fetchable:
+                if digest is None:
+                    digest = t.engine.adapter_for(ref).digest(ref.key)
+            else:
+                data = request.payload or b""
+                digest = content_digest(data)
+                seed_content(cluster, t.node, request.fn, data, digest)
+
         fwd = Request(fn=request.fn,
                       content_ref=ContentRef("truffle", buf_key,
                                              size=(ref.size if ref else
                                                    len(request.payload or b"")),
-                                             digest=(ref.digest if ref else None)),
+                                             digest=digest),
                       source_node=t.node.name,
                       meta={"invocation": inv_id})
 
@@ -70,17 +95,18 @@ class SDP:
         def data_path():
             try:
                 rec.t_transfer_start = clock.now()
-                target_name = t.watcher.resolve_host(request.fn, inv_id)  # (4)
-                target = cluster.node(target_name)
-                if ref is not None and ref.storage_type in t.engine._adapters:
+                placed = t.watcher.resolve_placement(request.fn, inv_id)  # (4)
+                target = cluster.node(placed["node"])
+                if fetchable:
                     target.truffle.engine.fetch(ref, buffer_key=buf_key,
                                                 stream=stream, dedup=dedup,
                                                 chunk_bytes=chunk_bytes,
                                                 record=rec)  # (3)-(4a)
                 else:
-                    data = request.payload or b""
-                    digest = content_digest(data) if dedup else None
-                    ship_payload(cluster, t.node, target, buf_key, data,
+                    # inline body (or non-adapter-ref fallback): ``digest``
+                    # already content-addresses exactly these bytes
+                    ship_payload(cluster, t.node, target, buf_key,
+                                 request.payload or b"",
                                  stream=stream, digest=digest,
                                  chunk_bytes=chunk_bytes, record=rec)
                 rec.t_transfer_end = clock.now()

@@ -4,15 +4,81 @@ paths cannot diverge).
 
 Knobs: ``stream`` relays at chunk granularity (``chunk_bytes``, default
 1 MiB) into an in-flight buffer entry; ``dedup`` aliases the target's
-content-addressed index on a hit instead of shipping bytes."""
+content-addressed index on a hit instead of shipping bytes.
+
+Relay batching (ROADMAP "one relay stream"): concurrent passes of the SAME
+content to the SAME node — a fan-out stage placed locality-aware lands all
+its sinks on one node — share a single relay via the cluster's
+:class:`RelayTable`. The first pass ships; followers wait on its completion
+and alias the landed bytes (``record.relay_shared``), instead of each
+re-shipping the payload over the fabric."""
 from __future__ import annotations
 
 import threading
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 from repro.core.errors import TransferStallError
 from repro.runtime.function import LifecycleRecord
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
+
+#: wall-seconds a follower waits for the leader's relay before giving up
+#: and shipping on its own (matches the SDP/CSP join budget order)
+RELAY_WAIT_S = 120.0
+
+
+class RelayTable:
+    """In-flight relay registry: (digest, target node) → completion event.
+
+    ``lead_or_follow`` elects exactly one shipper per (content, node) pair;
+    everyone else blocks on the leader's event and then aliases. Entries are
+    removed on completion (success or failure), so a failed leader's
+    followers fall back to shipping themselves."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._inflight: Dict[Tuple[str, str], threading.Event] = {}
+        self.stats = {"leads": 0, "follows": 0}
+
+    def lead_or_follow(self, digest: str,
+                       node_name: str) -> Tuple[bool, threading.Event]:
+        key = (digest, node_name)
+        with self._lock:
+            ev = self._inflight.get(key)
+            if ev is not None:
+                self.stats["follows"] += 1
+                return False, ev
+            ev = threading.Event()
+            self._inflight[key] = ev
+            self.stats["leads"] += 1
+            return True, ev
+
+    def finish(self, digest: str, node_name: str) -> None:
+        with self._lock:
+            ev = self._inflight.pop((digest, node_name), None)
+        if ev is not None:
+            ev.set()
+
+
+def pin_of(cluster, fn: str) -> Optional[str]:
+    """The node name ``fn`` is affinity-pinned to, if any."""
+    spec = cluster.platform._specs.get(fn)
+    return spec.affinity if spec is not None else None
+
+
+def seed_content(cluster, node, fn: str, data: bytes, digest: str) -> None:
+    """Seed dedup'd content into ``node``'s buffer under ``cas/<digest>``
+    BEFORE the trigger fires, so the digest registry sees the bytes and the
+    locality-aware scheduler can place ``fn`` on them (the pass then
+    degenerates to a local alias). One implementation for CSP and SDP — the
+    seeding gate must not diverge between the two paths. alias-first avoids
+    registry churn on repeat passes; a target pinned to another node can
+    never use the seed, so the copy is skipped."""
+    pin = pin_of(cluster, fn)
+    if pin is not None and pin != node.name:
+        return
+    cas_key = f"cas/{digest}"
+    if not node.buffer.alias(cas_key, digest):
+        node.buffer.set(cas_key, data, digest=digest)
 
 
 def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
@@ -20,12 +86,44 @@ def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  record: Optional[LifecycleRecord] = None) -> None:
     """Move an inline payload into ``target``'s buffer: dedup alias if the
-    content is already resident, else chunk-streamed or whole-blob over the
-    fabric (local placement skips the network entirely)."""
+    content is already resident, piggyback on an in-flight relay of the same
+    content, else chunk-streamed or whole-blob over the fabric (local
+    placement skips the network entirely)."""
     if digest is not None and target.buffer.alias(buf_key, digest):
         if record is not None:
             record.dedup_hit = True           # content already resident
-    elif target.name != src_node.name:
+        return
+
+    relays = getattr(cluster, "relays", None)
+    if digest is not None and relays is not None:
+        lead, ev = relays.lead_or_follow(digest, target.name)
+        if lead:
+            try:
+                _ship_direct(cluster, src_node, target, buf_key, data,
+                             stream=stream, digest=digest,
+                             chunk_bytes=chunk_bytes)
+            finally:
+                relays.finish(digest, target.name)
+            return
+        # follower: one relay of these bytes is already in flight to this
+        # node — wait for it, then alias instead of re-shipping
+        ev.wait(RELAY_WAIT_S)
+        if target.buffer.alias(buf_key, digest):
+            if record is not None:
+                record.dedup_hit = True
+                record.relay_shared = True
+            return
+        # leader failed or its entry was evicted before we aliased:
+        # fall through and ship ourselves
+
+    _ship_direct(cluster, src_node, target, buf_key, data, stream=stream,
+                 digest=digest, chunk_bytes=chunk_bytes)
+
+
+def _ship_direct(cluster, src_node, target, buf_key: str, data: bytes, *,
+                 stream: bool, digest: Optional[str],
+                 chunk_bytes: int) -> None:
+    if target.name != src_node.name:
         if stream:
             target.buffer.ingest(
                 buf_key, cluster.stream(src_node, target, data, chunk_bytes),

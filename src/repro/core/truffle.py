@@ -14,6 +14,7 @@ from repro.core import model as tmodel
 from repro.core.csp import CSP
 from repro.core.data_engine import DataEngine
 from repro.core.sdp import SDP
+from repro.core.transfer import pin_of
 from repro.core.watcher import Watcher
 from repro.runtime.function import LifecycleRecord, Request
 
@@ -57,7 +58,23 @@ class TruffleInstance:
         return out, rec
 
     # ------------------------------------------------------------- planning
-    def plan(self, estimate: tmodel.PhaseEstimate, fn: str) -> bool:
-        """Eq. 4 planner: engage only when predicted Δ > 0 and fn is cold."""
+    def plan(self, estimate: tmodel.PhaseEstimate, fn: str,
+             digest: str = None) -> bool:
+        """Eq. 4 planner: engage only when predicted Δ > 0 and fn is cold.
+
+        ``digest`` folds the locality term in: if placement can land on a
+        node already holding the input's bytes (some holder exists and the
+        function is either unpinned or pinned to a holder), the effective
+        transfer shrinks toward 0 and the lightweight trigger alone beats
+        the payload-carrying ingress — engage. A pin to a non-holder gets
+        no locality benefit and falls through to the plain Eq. 4 gate."""
         warm = bool(self.cluster.platform.warm_instances(fn))
+        if warm:
+            return False
+        registry = getattr(self.cluster, "digests", None)
+        if digest is not None and registry is not None:
+            holders = registry.nodes_for(digest)
+            pin = pin_of(self.cluster, fn)
+            if holders and (pin is None or pin in holders):
+                return True
         return tmodel.should_engage(estimate, warm)

@@ -1,7 +1,13 @@
 """Watcher (paper §III-B.1d + Algorithm 2): subscribes to the orchestrator's
 live scheduling events and resolves the target host for a function the
 moment placement happens — i.e. *before* the sandbox exists. Hot functions
-(already placed) resolve immediately from the warm pool."""
+(already placed) resolve immediately from the warm pool.
+
+``scheduling.placed`` events now carry the scheduler's locality decision
+(``locality_hit``, ``resident_bytes``); ``resolve_placement`` exposes the
+whole event so the data plane can see not just WHERE the function landed
+but whether its input is already there (in which case CSP/SDP degenerate to
+a local alias)."""
 from __future__ import annotations
 
 from typing import Optional
@@ -11,15 +17,20 @@ class Watcher:
     def __init__(self, cluster):
         self.cluster = cluster
 
-    def resolve_host(self, function: str, invocation: Optional[str] = None,
-                     timeout: float = 120.0) -> str:
+    def resolve_placement(self, function: str,
+                          invocation: Optional[str] = None,
+                          timeout: float = 120.0) -> dict:
         """Algorithm 2: scan current placements / wait for the event; returns
-        the node name. ``invocation`` pins a specific scale-up."""
+        the full placement event (``node``, ``locality_hit``, …).
+        ``invocation`` pins a specific scale-up."""
         # Hot path: function already has an assigned worker.
         if invocation is None:
             warm = self.cluster.platform.warm_instances(function)
             if warm:
-                return warm[0].node.name
+                # same keys as a cold scheduling.placed event (scheduler.py)
+                return {"function": function, "node": warm[0].node.name,
+                        "warm": True, "locality_hit": False,
+                        "resident_bytes": 0}
 
         def match(e: dict) -> bool:
             return (e["function"] == function
@@ -30,4 +41,9 @@ class Watcher:
         if ev is None:
             raise TimeoutError(f"watcher: no placement for {function!r} "
                                f"within {timeout}s")
-        return ev["node"]
+        return ev
+
+    def resolve_host(self, function: str, invocation: Optional[str] = None,
+                     timeout: float = 120.0) -> str:
+        """Node name only (the original Algorithm 2 surface)."""
+        return self.resolve_placement(function, invocation, timeout)["node"]

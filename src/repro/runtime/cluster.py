@@ -1,6 +1,14 @@
 """Cluster: nodes (edge/cloud tiers), network fabric, storage services,
 event bus, scheduler, platform, and one Truffle instance per node
-(the DaemonSet deployment model of the paper §V)."""
+(the DaemonSet deployment model of the paper §V).
+
+The cluster also owns the two cluster-wide data-locality structures:
+``digests`` (a :class:`~repro.runtime.registry.DigestRegistry` fed by every
+node buffer's residency callback — what the scheduler scores placements
+against) and ``relays`` (a :class:`~repro.core.transfer.RelayTable` that
+collapses concurrent fan-out passes of one content to one node into a
+single relay stream). ``locality_weight`` tunes how many load units a fully
+resident input is worth to the scheduler (0 = pure least-loaded)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -10,6 +18,7 @@ from repro.core.buffer import Buffer
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 from repro.runtime.events import EventBus
 from repro.runtime.netsim import NetworkFabric
+from repro.runtime.registry import DigestRegistry
 from repro.storage.base import StorageService, make_kvs, make_object_store
 
 
@@ -28,7 +37,9 @@ class Node:
 class Cluster:
     def __init__(self, node_specs: Optional[List[tuple]] = None, *,
                  clock: Optional[Clock] = None, with_truffle: bool = True,
-                 scheduling_s: float = 0.15):
+                 scheduling_s: float = 0.15,
+                 locality_weight: Optional[float] = None):
+        from repro.core.transfer import RelayTable
         from repro.core.truffle import TruffleInstance
         from repro.runtime.platform import Platform
         from repro.runtime.scheduler import Scheduler
@@ -44,7 +55,16 @@ class Cluster:
             "kvs": make_kvs(self.clock),
             "s3": make_object_store(self.clock),
         }
-        self.scheduler = Scheduler(self, scheduling_s=scheduling_s)
+        # cluster-wide digest residency (locality-aware placement) + the
+        # in-flight relay table (fan-out passes share one relay stream)
+        self.digests = DigestRegistry(bus=self.bus)
+        self.relays = RelayTable()
+        for node in self.nodes.values():
+            node.buffer.on_residency = self.digests.listener(node.name)
+        sched_kw = {} if locality_weight is None else {
+            "locality_weight": locality_weight}
+        self.scheduler = Scheduler(self, scheduling_s=scheduling_s,
+                                   **sched_kw)
         self.platform = Platform(self)
         if with_truffle:
             for node in self.nodes.values():

@@ -67,6 +67,8 @@ class LifecycleRecord:
     t_exec_end: float = 0.0
     streamed: bool = False        # input arrived chunk-pipelined
     dedup_hit: bool = False       # input served from the content-addressed cache
+    locality_hit: bool = False    # placed on a node already holding the input
+    relay_shared: bool = False    # transfer piggybacked on an in-flight relay
     transfer_stalled: bool = False  # data-path thread outlived its join budget
     io_blocked_s: Optional[float] = None  # measured blocked wait (streaming)
 

@@ -13,6 +13,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.runtime.function import (FunctionInstance, FunctionSpec,
                                     LifecycleRecord, Request)
+from repro.runtime.scheduler import PlacementHint
 
 
 class Platform:
@@ -81,7 +82,8 @@ class Platform:
                     else self.INGRESS_OVERHEAD_S)
 
         inst = self._checkout_warm(request.fn)
-        if inst is not None:
+        scheduled_node = None           # set iff this invocation took a load
+        if inst is not None:            # credit via scheduler.schedule()
             rec.cold = False
             rec.t_placed = rec.t_prov_end = rec.t_startup_end = clock.now()
             rec.node = inst.node.name
@@ -90,25 +92,35 @@ class Platform:
                 "function": spec.name, "node": inst.node.name,
                 "invocation": inv_id, "warm": True, "t": clock.now()})
         else:
-            node = self.cluster.scheduler.schedule(spec, inv_id)
+            node = self.cluster.scheduler.schedule(
+                spec, inv_id, hint=PlacementHint.from_request(request),
+                record=rec)
+            scheduled_node = node.name
             rec.t_placed = clock.now()
             rec.node = node.name
             inst = FunctionInstance(spec, node, self.cluster)
             inst.provision(rec)          # ν + η (Truffle's overlap window)
 
-        # queue-proxy resumes the request: a direct payload crosses the
-        # network only NOW (after Fn-start) in the baseline path.
-        if request.payload is not None and request.source_node:
-            src = self.cluster.node(request.source_node)
-            rec.t_transfer_start = clock.now()
-            self.cluster.transfer(src, inst.node, request.payload)
-            rec.t_transfer_end = clock.now()
+        try:
+            # queue-proxy resumes the request: a direct payload crosses the
+            # network only NOW (after Fn-start) in the baseline path.
+            if request.payload is not None and request.source_node:
+                src = self.cluster.node(request.source_node)
+                rec.t_transfer_start = clock.now()
+                self.cluster.transfer(src, inst.node, request.payload)
+                rec.t_transfer_end = clock.now()
 
-        out = inst.invoke(request, rec)
-        with self._lock:
-            self._warm[request.fn].append(inst)
-        self.cluster.scheduler.release(inst.node.name)
-        return out
+            out = inst.invoke(request, rec)
+            with self._lock:
+                self._warm[request.fn].append(inst)
+            return out
+        finally:
+            # release ONLY what schedule() charged: warm checkouts never took
+            # a load credit, and releasing one here would steal the credit of
+            # an in-flight cold start on the same node, skewing least-loaded
+            # (and locality-vs-load) placement
+            if scheduled_node is not None:
+                self.cluster.scheduler.release(scheduled_node)
 
     def _checkout_warm(self, fn: str) -> Optional[FunctionInstance]:
         with self._lock:

@@ -1,0 +1,107 @@
+"""Cluster-wide digest registry: which node currently holds which content.
+
+PR 1's content-addressed Buffer made duplicate *transfers* cheap (alias on
+arrival); this registry makes the residency visible to the *scheduler*, so
+placement can follow the data instead of shipping the data to wherever the
+function lands ("Following the Data, Not the Function" — the dominant win
+for data-intensive fan-out workflows).
+
+Each node's :class:`~repro.core.buffer.Buffer` reports residency changes via
+its ``on_residency`` callback (wired by ``Cluster``): a complete entry whose
+digest resolves on that node publishes ``digest → node`` here; eviction or
+displacement withdraws it. Every change is mirrored onto the event bus as
+``registry.digest_added`` / ``registry.digest_removed`` events (payload:
+``{"digest", "node", "bytes"}``) so external observers — dashboards, the
+benchmarks — can watch residency without polling.
+
+Thread-safe; all methods are O(1) in the number of nodes holding a digest.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+#: event-bus topics mirrored on every residency change
+EVENT_DIGEST_ADDED = "registry.digest_added"
+EVENT_DIGEST_REMOVED = "registry.digest_removed"
+
+
+class DigestRegistry:
+    def __init__(self, bus=None):
+        self._bus = bus
+        self._lock = threading.Lock()
+        # digest -> {node_name: resident_bytes}
+        self._where: Dict[str, Dict[str, int]] = {}
+        self.stats = {"publishes": 0, "withdrawals": 0}
+
+    # ------------------------------------------------------------- wiring
+    def listener(self, node_name: str):
+        """Residency callback for one node's Buffer (``on_residency``)."""
+        def on_residency(digest: str, size: int, resident: bool) -> None:
+            if resident:
+                self.publish(node_name, digest, size)
+            else:
+                self.withdraw(node_name, digest)
+        return on_residency
+
+    # ------------------------------------------------------------ updates
+    def publish(self, node: str, digest: str, size: int) -> None:
+        """Record that ``node``'s buffer holds ``digest`` (idempotent)."""
+        if digest is None:
+            return
+        with self._lock:
+            fresh = node not in self._where.setdefault(digest, {})
+            self._where[digest][node] = size
+            self.stats["publishes"] += 1
+        if fresh and self._bus is not None:
+            self._bus.publish(EVENT_DIGEST_ADDED,
+                              {"digest": digest, "node": node, "bytes": size})
+
+    def withdraw(self, node: str, digest: str) -> None:
+        """Record that ``node`` no longer resolves ``digest`` (evicted or
+        displaced). Unknown pairs are ignored (idempotent)."""
+        if digest is None:
+            return
+        size = None
+        with self._lock:
+            nodes = self._where.get(digest)
+            if nodes is not None and node in nodes:
+                size = nodes.pop(node)
+                if not nodes:
+                    del self._where[digest]
+                self.stats["withdrawals"] += 1
+        if size is not None and self._bus is not None:
+            self._bus.publish(EVENT_DIGEST_REMOVED,
+                              {"digest": digest, "node": node, "bytes": size})
+
+    # ------------------------------------------------------------ queries
+    def nodes_for(self, digest: Optional[str]) -> Dict[str, int]:
+        """``{node_name: resident_bytes}`` for a digest (copy; may be empty)."""
+        if digest is None:
+            return {}
+        with self._lock:
+            return dict(self._where.get(digest, {}))
+
+    def resident_bytes(self, node: str, digest: Optional[str]) -> int:
+        """Bytes of ``digest`` currently resident on ``node`` (0 if absent)."""
+        if digest is None:
+            return 0
+        with self._lock:
+            return self._where.get(digest, {}).get(node, 0)
+
+    @staticmethod
+    def fraction(resident_bytes: int, size: int) -> float:
+        """Resident fraction of an input of ``size`` bytes, in [0, 1] — the
+        ONE definition both the scheduler's scoring and ``resident_fraction``
+        use. A zero-size hint counts as fully resident when any bytes
+        resolve (the scheduler still prefers the holder)."""
+        if resident_bytes <= 0:
+            return 0.0
+        if size <= 0:
+            return 1.0
+        return min(resident_bytes, size) / size
+
+    def resident_fraction(self, node: str, digest: Optional[str],
+                          size: int) -> float:
+        """Fraction of an input of ``size`` bytes already on ``node``."""
+        return self.fraction(self.resident_bytes(node, digest), size)

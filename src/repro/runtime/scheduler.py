@@ -1,47 +1,125 @@
 """Placement scheduler (Kubernetes analogue). Emits ``scheduling.placed``
 events on the bus — the Truffle Watcher's entire CSP mechanism hangs off
-the fact that the host is known HERE, long before the sandbox is up."""
+the fact that the host is known HERE, long before the sandbox is up.
+
+Locality-aware placement: a request carrying a :class:`PlacementHint`
+(digest + size of its input, threaded down from ``Request.content_ref``)
+is scored against the cluster-wide :class:`~repro.runtime.registry.
+DigestRegistry` — a node already holding the input's bytes gets a load
+credit of ``locality_weight × resident_fraction``, so fan-out stages and
+repeated inputs land *on the data* and the CSP/SDP transfer degenerates to
+a zero-cost local alias. Load skew still wins once it exceeds the credit
+(``locality_weight`` load units for a fully resident input); affinity pins
+override everything.
+
+Knobs: ``scheduling_s`` (α, the activator + kube-scheduler path) and
+``locality_weight`` (load units a fully resident input is worth; 0 disables
+locality and recovers pure least-loaded placement).
+"""
 from __future__ import annotations
 
-import itertools
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
-from repro.runtime.function import FunctionSpec
+from repro.runtime.function import FunctionSpec, Request
+from repro.runtime.registry import DigestRegistry
+
+
+@dataclass(frozen=True)
+class PlacementHint:
+    """Where-the-bytes-live hint for one placement decision."""
+    digest: Optional[str] = None
+    size: int = 0
+
+    @classmethod
+    def from_request(cls, request: Request) -> Optional["PlacementHint"]:
+        """Hint from the request's content ref; None when the input carries
+        no digest (nothing for locality to match on)."""
+        ref = request.content_ref
+        if ref is None or ref.digest is None:
+            return None
+        return cls(digest=ref.digest, size=ref.size)
 
 
 class Scheduler:
-    def __init__(self, cluster, scheduling_s: float = 0.15):
+    def __init__(self, cluster, scheduling_s: float = 0.15,
+                 locality_weight: float = 2.0):
         self.cluster = cluster
         self.scheduling_s = scheduling_s   # α: activator + kube-scheduler path
-        self._rr = itertools.cycle(range(1 << 30))
+        self.locality_weight = locality_weight
         self._lock = threading.Lock()
         self._load: Dict[str, int] = {}
+        self.stats = {"placements": 0, "locality_hits": 0}
 
-    def schedule(self, spec: FunctionSpec, invocation_id: str):
-        """Blocks for α, picks a node, publishes the placement event."""
+    def schedule(self, spec: FunctionSpec, invocation_id: str,
+                 hint: Optional[PlacementHint] = None, record=None):
+        """Blocks for α, picks a node, publishes the placement event.
+
+        ``hint`` enables digest-aware scoring; ``record`` (a
+        LifecycleRecord) gets ``locality_hit`` stamped with the decision.
+        """
         clock = self.cluster.clock
         clock.sleep(self.scheduling_s)
-        node = self._pick(spec)
+        holders = self._holders(hint)
+        node = self._pick(spec, hint, holders)
+        # report from the SAME snapshot the decision scored — a second
+        # registry read here could disagree with the placement it describes
+        resident = holders.get(node.name, 0)
+        # a hit means locality scoring PLACED us on the data — coincidental
+        # residency under an affinity pin or with locality disabled is not
+        # one (keeps the load-only control runs honest)
+        scored = (hint is not None and not spec.affinity
+                  and self.locality_weight > 0)
+        locality_hit = scored and resident > 0
         with self._lock:
             self._load[node.name] = self._load.get(node.name, 0) + 1
+            self.stats["placements"] += 1
+            if locality_hit:
+                self.stats["locality_hits"] += 1
+        if record is not None:
+            record.locality_hit = locality_hit
         self.cluster.bus.publish("scheduling.placed", {
             "function": spec.name, "node": node.name,
             "invocation": invocation_id, "t": clock.now(),
+            "locality_hit": locality_hit, "resident_bytes": resident,
         })
         return node
 
-    def _pick(self, spec: FunctionSpec):
+    def _holders(self, hint: Optional[PlacementHint]) -> Dict[str, int]:
+        """One registry snapshot per placement: {node: resident_bytes}."""
+        registry = getattr(self.cluster, "digests", None)
+        if hint is None or registry is None:
+            return {}
+        return registry.nodes_for(hint.digest)
+
+    def _pick(self, spec: FunctionSpec,
+              hint: Optional[PlacementHint] = None,
+              holders: Optional[Dict[str, int]] = None):
         nodes = self.cluster.node_list
         if spec.affinity:
             for n in nodes:
                 if n.name == spec.affinity:
                     return n
             raise KeyError(f"affinity node {spec.affinity!r} not in cluster")
+        if holders is None:
+            holders = self._holders(hint)
         with self._lock:
-            return min(nodes, key=lambda n: self._load.get(n.name, 0))
+            def score(n) -> float:
+                load = float(self._load.get(n.name, 0))
+                if hint is not None:
+                    load -= self.locality_weight * DigestRegistry.fraction(
+                        holders.get(n.name, 0), hint.size)
+                return load
+            # min() is stable: ties keep the node_list order, so behavior
+            # without hints is exactly the old least-loaded placement
+            return min(nodes, key=score)
 
     def release(self, node_name: str) -> None:
         with self._lock:
             self._load[node_name] = max(0, self._load.get(node_name, 0) - 1)
+
+    def load_of(self, node_name: str) -> int:
+        """Current in-flight scheduled-invocation count for a node."""
+        with self._lock:
+            return self._load.get(node_name, 0)

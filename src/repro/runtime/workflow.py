@@ -12,7 +12,9 @@ finisher wins (duplicate results are idempotent by construction here).
 Data-plane knobs (truffle mode): ``stream=True`` pipelines stage-to-stage
 transfers at chunk granularity; ``dedup=True`` content-addresses stage
 outputs so identical fan-out inputs alias the target buffer instead of
-re-shipping. Defaults keep the whole-blob behavior."""
+re-shipping — and propagates each stage input's digest on its ContentRef,
+so the locality-aware scheduler can place downstream stages on the node
+already holding their bytes. Defaults keep the whole-blob behavior."""
 from __future__ import annotations
 
 import threading
@@ -21,6 +23,7 @@ from concurrent.futures import Future, ThreadPoolExecutor, FIRST_COMPLETED, wait
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.buffer import content_digest
 from repro.core.model import PhaseEstimate, baseline_time, truffle_time
 from repro.runtime.function import ContentRef, FunctionSpec, LifecycleRecord, Request
 
@@ -183,15 +186,26 @@ class WorkflowRunner:
                 truffle_time(est) if self.use_truffle else baseline_time(est))
             budget *= self.cluster.clock.scale      # sim -> wall seconds
             pool = ThreadPoolExecutor(max_workers=2)
-            first = pool.submit(attempt)
-            done, _ = wait([first], timeout=budget)
-            if done:
-                return first.result()
-            backup = pool.submit(attempt)        # speculative duplicate
-            done, _ = wait([first, backup], return_when=FIRST_COMPLETED)
-            sr = next(iter(done)).result()
-            sr.speculated = sr is not (first.result() if first.done() else None)
-            return sr
+            try:
+                first = pool.submit(attempt)
+                done, _ = wait([first], timeout=budget)
+                if done:
+                    return first.result()
+                backup = pool.submit(attempt)    # speculative duplicate
+                wait([first, backup], return_when=FIRST_COMPLETED)
+                # deterministic winner: the original attempt wins whenever it
+                # has finished (results are idempotent, and preferring it
+                # keeps the speculated flag truthful when both are done or
+                # when first completed between the two waits)
+                winner = first if first.done() else backup
+                sr = winner.result()
+                sr.speculated = winner is backup
+                return sr
+            finally:
+                # without this every straggler stage leaked a live executor
+                # (two worker threads parked forever); cancel_futures stops a
+                # not-yet-started duplicate from running after the winner
+                pool.shutdown(wait=False, cancel_futures=True)
         return attempt()
 
     def _invoke_once(self, name: str, stage: Stage, data: bytes,
@@ -207,8 +221,12 @@ class WorkflowRunner:
             t0 = cluster.clock.now()
             cluster.storage[self.storage].put(key, data)
             put_s = cluster.clock.now() - t0
+            # dedup: content-address the stage input so downstream placement
+            # (and the target buffer's alias check) can see where it lives
+            digest = content_digest(data) if self.dedup else None
             req = Request(fn=fn, content_ref=ContentRef(self.storage, key,
-                                                        len(data)),
+                                                        len(data),
+                                                        digest=digest),
                           source_node=source_node)
             if self.use_truffle:
                 truffle = cluster.node(source_node).truffle

@@ -1,0 +1,308 @@
+"""Locality-aware placement: digest registry residency tracking, scheduler
+scoring (resident node preferred until load skew overrides), placement-hint
+threading through the request path, and the end-to-end property the tentpole
+exists for — fan-out passes of content-addressed data land ON the data and
+degenerate to zero-transfer local aliases (one relay stream per node)."""
+import threading
+
+from repro.core.buffer import Buffer, content_digest
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import ContentRef, FunctionSpec, Request
+from repro.runtime.registry import (DigestRegistry, EVENT_DIGEST_ADDED,
+                                    EVENT_DIGEST_REMOVED)
+from repro.runtime.scheduler import PlacementHint
+from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+MB = 1 << 20
+
+
+# ------------------------------------------------------------ digest registry
+def test_registry_tracks_buffer_set_and_eviction():
+    reg = DigestRegistry()
+    b = Buffer(capacity_bytes=100, name="n0.buffer")
+    b.on_residency = reg.listener("n0")
+
+    d = content_digest(b"a" * 80)
+    b.set("k", b"a" * 80, digest=d)
+    assert reg.nodes_for(d) == {"n0": 80}
+    assert reg.resident_bytes("n0", d) == 80
+    assert reg.resident_fraction("n0", d, 80) == 1.0
+
+    b.set("k2", b"b" * 60)                   # evicts "k" (over capacity)
+    assert reg.nodes_for(d) == {}
+    assert reg.resident_bytes("n0", d) == 0
+
+
+def test_registry_tracks_stream_close_and_displacement():
+    reg = DigestRegistry()
+    b = Buffer(name="n1.buffer")
+    b.on_residency = reg.listener("n1")
+
+    d = content_digest(b"xy")
+    b.open_stream("s")
+    assert reg.resident_bytes("n1", d) == 0      # in-flight: not resident
+    b.append_chunk("s", b"x")
+    b.append_chunk("s", b"y")
+    b.close_stream("s", digest=d)
+    assert reg.nodes_for(d) == {"n1": 2}
+
+    b.set("s", b"other")                     # same-key displacement
+    assert reg.resident_bytes("n1", d) == 0
+
+
+def test_registry_alias_refreshes_and_multi_node():
+    reg = DigestRegistry()
+    b0, b1 = Buffer(name="a.buffer"), Buffer(name="b.buffer")
+    b0.on_residency = reg.listener("a")
+    b1.on_residency = reg.listener("b")
+
+    payload = b"z" * 40
+    d = content_digest(payload)
+    b0.set("k", payload, digest=d)
+    b1.set("k", payload, digest=d)
+    assert set(reg.nodes_for(d)) == {"a", "b"}
+
+    assert b0.alias("k-alias", d)            # alias keeps residency published
+    assert reg.resident_bytes("a", d) == 40
+    b1.get("k", pop=True)
+    assert set(reg.nodes_for(d)) == {"a"}
+
+
+def test_registry_mirrors_events_on_bus(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    payload = b"w" * 30
+    d = content_digest(payload)
+    cluster.node("edge-1").buffer.set("k", payload, digest=d)
+    added = cluster.bus.history(EVENT_DIGEST_ADDED)
+    assert {"digest": d, "node": "edge-1", "bytes": 30} in added
+    cluster.node("edge-1").buffer.get("k", pop=True)
+    removed = cluster.bus.history(EVENT_DIGEST_REMOVED)
+    assert any(e["digest"] == d and e["node"] == "edge-1" for e in removed)
+
+
+# ------------------------------------------------------------ scheduler _pick
+def _hinted_cluster(fast_clock, payload, node="edge-1", **kw):
+    cluster = Cluster(clock=fast_clock, **kw)
+    d = content_digest(payload)
+    cluster.node(node).buffer.set("seed", payload, digest=d)
+    return cluster, PlacementHint(digest=d, size=len(payload))
+
+
+def test_pick_prefers_resident_node(fast_clock):
+    cluster, hint = _hinted_cluster(fast_clock, b"p" * MB, node="edge-1")
+    spec = FunctionSpec("loc-fn", lambda d, inv: d)
+    assert cluster.scheduler._pick(spec, hint).name == "edge-1"
+    # without a hint the old least-loaded/first-node behavior is unchanged
+    assert cluster.scheduler._pick(spec, None).name == "edge-0"
+
+
+def test_pick_load_skew_overrides_locality(fast_clock):
+    cluster, hint = _hinted_cluster(fast_clock, b"p" * MB, node="edge-1")
+    spec = FunctionSpec("loc-fn", lambda d, inv: d)
+    w = cluster.scheduler.locality_weight
+    # while the skew is within the locality credit, the data keeps winning
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-1"] = int(w) - 1
+    assert cluster.scheduler._pick(spec, hint).name == "edge-1"
+    # one load unit past the credit: least-loaded takes over
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-1"] = int(w) + 1
+    assert cluster.scheduler._pick(spec, hint).name != "edge-1"
+
+
+def test_locality_weight_zero_disables_locality(fast_clock):
+    from repro.runtime.function import LifecycleRecord
+    cluster, hint = _hinted_cluster(fast_clock, b"p" * MB, node="edge-1",
+                                    locality_weight=0.0)
+    spec = FunctionSpec("loc-fn", lambda d, inv: d)
+    assert cluster.scheduler._pick(spec, hint).name == "edge-0"
+    # even a coincidental landing on the holder is NOT a locality hit when
+    # scoring is disabled (keeps load-only control runs honest)
+    cluster2, hint2 = _hinted_cluster(fast_clock, b"p" * MB, node="edge-0",
+                                      locality_weight=0.0)
+    rec = LifecycleRecord(fn="loc-fn")
+    node = cluster2.scheduler.schedule(spec, "inv-z", hint=hint2, record=rec)
+    assert node.name == "edge-0"             # least-loaded tie-break
+    assert rec.locality_hit is False
+    assert cluster2.scheduler.stats["locality_hits"] == 0
+
+
+def test_affinity_overrides_locality(fast_clock):
+    cluster, hint = _hinted_cluster(fast_clock, b"p" * MB, node="edge-1")
+    spec = FunctionSpec("pin-fn", lambda d, inv: d, affinity="cloud-0")
+    assert cluster.scheduler._pick(spec, hint).name == "cloud-0"
+
+
+def test_schedule_stamps_locality_on_event_and_record(fast_clock):
+    from repro.runtime.function import LifecycleRecord
+    cluster, hint = _hinted_cluster(fast_clock, b"p" * MB, node="edge-1")
+    spec = FunctionSpec("loc-fn", lambda d, inv: d)
+    rec = LifecycleRecord(fn="loc-fn")
+    node = cluster.scheduler.schedule(spec, "inv-ev", hint=hint, record=rec)
+    assert node.name == "edge-1"
+    assert rec.locality_hit is True
+    ev = cluster.bus.wait_for(
+        "scheduling.placed", lambda e: e["invocation"] == "inv-ev", timeout=1)
+    assert ev["locality_hit"] is True
+    assert ev["resident_bytes"] == MB
+    assert cluster.scheduler.stats["locality_hits"] >= 1
+
+
+# ------------------------------------------------- Eq. 4 locality extension
+def test_model_locality_terms():
+    from repro.core import model as tm
+    p = tm.PhaseEstimate(alpha=0.1, nu=1.0, eta=0.5, delta=3.0, gamma=0.2)
+    assert tm.effective_delta(p, 0.0) == 3.0
+    assert tm.effective_delta(p, 0.5) == 1.5
+    assert tm.effective_delta(p, 1.0) == 0.0
+    assert tm.effective_delta(p, 7.0) == 0.0          # clamped to [0, 1]
+    # fully resident: τ degenerates to α + β + γ, gain = δ − β
+    assert tm.locality_truffle_time(p, 1.0) == 0.1 + 1.5 + 0.2
+    assert tm.locality_improvement(p, 1.0) == 3.0 - 1.5
+    # δ already hidden inside β: locality can't improve further
+    hidden = tm.PhaseEstimate(alpha=0.1, nu=1.0, eta=0.5, delta=0.8, gamma=0.2)
+    assert tm.locality_improvement(hidden, 1.0) == 0.0
+    assert tm.locality_truffle_time(p, 0.0) == tm.truffle_time(p)
+
+
+def test_planner_engages_when_placement_can_reach_holder(fast_clock):
+    from repro.core.model import PhaseEstimate
+    cluster = Cluster(clock=fast_clock)
+    payload = b"h" * MB
+    d = content_digest(payload)
+    cluster.node("edge-1").buffer.set("seed", payload, digest=d)
+    # β = 0 → Eq. 4 alone says don't engage...
+    zero_beta = PhaseEstimate(alpha=0.1, nu=0.0, eta=0.0, delta=2.0, gamma=0.2)
+    t = cluster.node("edge-0").truffle
+    cluster.platform.register(FunctionSpec("plan-free", lambda d, inv: d))
+    cluster.platform.register(FunctionSpec("plan-pinned", lambda d, inv: d,
+                                           affinity="cloud-0"))
+    assert not t.plan(zero_beta, "plan-free")
+    # ...but an unpinned fn can be placed ON the holder: engage
+    assert t.plan(zero_beta, "plan-free", digest=d)
+    # pinned off the holder: no locality benefit, Eq. 4 gate stands
+    assert not t.plan(zero_beta, "plan-pinned", digest=d)
+
+
+# ------------------------------------------------------- end-to-end placement
+def test_csp_fanout_follows_the_data(fast_clock):
+    """Unpinned fan-out sinks with dedup place onto the node holding their
+    input (the source seeds its own buffer) — zero-transfer local aliases."""
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(4 * MB)
+    for i in range(3):
+        cluster.platform.register(
+            FunctionSpec(f"fan-loc-{i}", lambda d, inv: d, provision_s=0.3,
+                         startup_s=0.05, exec_s=0.01))
+    truffle = cluster.node("edge-0").truffle
+    recs = []
+    for i in range(3):
+        out, rec = truffle.pass_data(f"fan-loc-{i}", payload, dedup=True)
+        assert out == payload
+        recs.append(rec)
+    assert all(r.node == "edge-0" for r in recs)     # placed on the data
+    assert all(r.locality_hit for r in recs)
+    assert all(r.dedup_hit for r in recs)            # served from the seed
+    for r in recs:
+        assert fast_clock.elapsed_sim(
+            max(0.0, r.t_transfer_end - r.t_placed)) < 0.05
+
+
+def test_csp_locality_yields_to_loaded_node(fast_clock):
+    """When the resident node is overloaded, placement falls back to a less
+    loaded node and the pass ships bytes (correctness over locality)."""
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(1 * MB)
+    cluster.platform.register(
+        FunctionSpec("busy-fan", lambda d, inv: d, provision_s=0.3,
+                     startup_s=0.05, exec_s=0.01))
+    w = cluster.scheduler.locality_weight
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-0"] = int(w) + 2
+    out, rec = cluster.node("edge-0").truffle.pass_data(
+        "busy-fan", payload, dedup=True)
+    assert out == payload
+    assert rec.node != "edge-0"
+    assert not rec.locality_hit
+
+
+def test_concurrent_fanout_shares_one_relay(fast_clock):
+    """Two concurrent passes of the same content to the same (pinned) remote
+    node ship the bytes ONCE: the follower waits on the leader's relay and
+    aliases the landed entry."""
+    from repro.runtime.clock import Clock
+    clock = Clock(0.05)
+    cluster = Cluster(clock=clock)
+    payload = bytes(32 * MB)
+    for i in range(2):
+        cluster.platform.register(
+            FunctionSpec(f"relay-{i}", lambda d, inv: str(len(d)).encode(),
+                         provision_s=0.5, startup_s=0.1, exec_s=0.01,
+                         affinity="edge-1"))
+    truffle = cluster.node("edge-0").truffle
+    recs = [None, None]
+
+    def one(i):
+        _, recs[i] = truffle.pass_data(f"relay-{i}", payload, dedup=True)
+
+    ths = [threading.Thread(target=one, args=(i,)) for i in range(2)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout=60)
+    assert all(r is not None for r in recs)
+    # the payload crossed the fabric once: one set, one alias
+    assert cluster.node("edge-1").buffer.stats["puts"] == 1
+    assert cluster.node("edge-1").buffer.stats["dedup_hits"] == 1
+    assert cluster.relays.stats["follows"] >= 1
+    assert sum(1 for r in recs if r.relay_shared) == 1
+
+
+def test_sdp_storage_locality_without_affinity(fast_clock):
+    """Two SDP requests for one stored object, no pins: the second function
+    is placed on the node that fetched the object and aliases it."""
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(2 * MB)
+    cluster.storage["kvs"].put("obj-loc", payload)
+    for i in range(2):
+        cluster.platform.register(
+            FunctionSpec(f"sdp-loc-{i}", lambda d, inv: d, provision_s=0.3,
+                         startup_s=0.05, exec_s=0.01))
+    truffle = cluster.node("edge-0").truffle
+    ref = ContentRef("kvs", "obj-loc", len(payload))
+    _, r0 = truffle.handle_request(Request(fn="sdp-loc-0", content_ref=ref),
+                                   dedup=True)
+    _, r1 = truffle.handle_request(Request(fn="sdp-loc-1", content_ref=ref),
+                                   dedup=True)
+    assert r1.node == r0.node                # followed the fetched bytes
+    assert r1.locality_hit
+    assert r1.dedup_hit
+    eng = cluster.node(r0.node).truffle.engine
+    assert eng.stats["fetches"] == 1         # one storage read for two invs
+
+
+def test_workflow_fanout_dedup_places_on_producer_node(fast_clock):
+    """Video-style fan-out with dedup: decoder stages land on the producer's
+    node and their CSP passes degenerate to local aliases."""
+    def produce(d, inv):
+        return b"frame" * 1000
+
+    wf = Workflow("video-loc", {
+        "stream": Stage(FunctionSpec("vl-stream", produce, provision_s=0.3,
+                                     startup_s=0.05, exec_s=0.02)),
+        "dec0": Stage(FunctionSpec("vl-dec0", lambda d, inv: d,
+                                   provision_s=0.3, startup_s=0.05,
+                                   exec_s=0.02), deps=["stream"]),
+        "dec1": Stage(FunctionSpec("vl-dec1", lambda d, inv: d,
+                                   provision_s=0.3, startup_s=0.05,
+                                   exec_s=0.02), deps=["stream"]),
+    })
+    cluster = Cluster(clock=fast_clock)
+    runner = WorkflowRunner(cluster, use_truffle=True, storage="direct",
+                            dedup=True)
+    tr = runner.run(wf, b"go", source_node="edge-0")
+    src_node = tr.stages["stream"].record.node
+    for dec in ("dec0", "dec1"):
+        rec = tr.stages[dec].record
+        assert rec.node == src_node
+        assert rec.dedup_hit

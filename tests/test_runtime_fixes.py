@@ -1,0 +1,185 @@
+"""Regression tests for three runtime races/leaks:
+
+  1. warm checkouts must not release scheduler load credits they never took
+     (stealing an in-flight cold start's credit skews least-loaded AND
+     locality-vs-load placement),
+  2. speculative dispatch must pick a deterministic winner, label
+     ``speculated`` truthfully, and shut its executor down (one leaked pool
+     per straggler stage before),
+  3. ``Buffer.wait_for`` must return the data observed under the lock hold
+     that saw completion — not re-acquire the lock where a racing eviction
+     or displacement can turn a successful wait into ``None``.
+"""
+import itertools
+import threading
+import time
+
+from repro.core.buffer import Buffer
+from repro.core.model import PhaseEstimate
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec, Request
+from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+
+# ----------------------------------------------- 1. warm-release accounting
+def test_warm_invocation_does_not_release_cold_load_credit(fast_clock):
+    """A warm checkout never went through schedule(); completing it must not
+    decrement the load credit an in-flight cold start is holding."""
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("warm-acct", lambda d, inv: d, provision_s=0.2,
+                        startup_s=0.05, exec_s=0.01)
+    cluster.platform.register(spec)
+
+    # cold invoke: leaves one warm instance, load back to 0 after release
+    cluster.platform.invoke(Request(fn="warm-acct", payload=b"x",
+                                    source_node="edge-0"))
+    warm_node = cluster.platform.warm_instances("warm-acct")[0].node.name
+    assert cluster.scheduler.load_of(warm_node) == 0
+
+    # an unrelated cold start is in flight on the same node: schedule()
+    # charged it one load credit that is still outstanding
+    other = FunctionSpec("in-flight", lambda d, inv: d)
+    cluster.scheduler.schedule(other, "inv-in-flight")
+    assert cluster.scheduler.load_of(warm_node) == 1
+
+    # warm traffic completes — before the fix this released the in-flight
+    # cold start's credit (load dropped to 0)
+    out, rec = cluster.platform.invoke(Request(fn="warm-acct", payload=b"y",
+                                               source_node="edge-0"))
+    assert not rec.cold
+    assert cluster.scheduler.load_of(warm_node) == 1
+
+
+def test_cold_release_still_happens(fast_clock):
+    """The cold path's credit is still released when the invocation ends."""
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("cold-rel", lambda d, inv: d, provision_s=0.2,
+                        startup_s=0.05, exec_s=0.01)
+    cluster.platform.register(spec)
+    _, rec = cluster.platform.invoke(Request(fn="cold-rel", payload=b"x",
+                                             source_node="edge-0"))
+    assert rec.cold
+    assert cluster.scheduler.load_of(rec.node) == 0
+
+
+# ------------------------------------------------- 2. speculative dispatch
+def _straggler_setup(handler, straggler_factor=3.0):
+    spec = FunctionSpec("spec-fn", handler, provision_s=0.1, startup_s=0.05,
+                        exec_s=0.01)
+    wf = Workflow("w", {"s": Stage(spec)})
+    est = {"s": PhaseEstimate(alpha=0.15, nu=0.1, eta=0.05, delta=0.01,
+                              gamma=0.01)}
+    return wf, est
+
+
+def test_speculative_backup_wins_is_flagged(fast_clock):
+    """First attempt stalls pathologically -> backup wins, speculated=True."""
+    calls = itertools.count()
+
+    def slow_once(d, inv):
+        if next(calls) == 0:
+            inv.cluster.clock.sleep(60.0)       # pathological straggler
+        return d + b"-done"
+
+    wf, est = _straggler_setup(slow_once)
+    cluster = Cluster(clock=fast_clock)
+    runner = WorkflowRunner(cluster, use_truffle=False, storage="direct",
+                            straggler_factor=3.0, estimates=est)
+    tr = runner.run(wf, b"x")
+    assert tr.stages["s"].speculated is True
+    assert tr.stages["s"].output == b"x-done"
+
+
+def test_speculative_first_finisher_wins_deterministically(fast_clock):
+    """First attempt outlives the budget but still beats the backup: the
+    original attempt must win and must NOT be labeled speculated."""
+    calls = itertools.count()
+
+    def late_first(d, inv):
+        n = next(calls)
+        if n == 0:
+            inv.cluster.clock.sleep(3.0)        # past budget, finishes first
+        else:
+            inv.cluster.clock.sleep(120.0)      # backup: far slower
+        return d + b"-" + str(n).encode()
+
+    wf, est = _straggler_setup(late_first)
+    cluster = Cluster(clock=fast_clock)
+    runner = WorkflowRunner(cluster, use_truffle=False, storage="direct",
+                            straggler_factor=3.0, estimates=est)
+    tr = runner.run(wf, b"x")
+    assert tr.stages["s"].speculated is False
+    assert tr.stages["s"].output == b"x-0"      # the original attempt's result
+
+
+def test_speculative_dispatch_does_not_leak_executors(fast_clock, monkeypatch):
+    """Every straggler-guarded stage used to leave its ThreadPoolExecutor
+    un-shutdown: worker threads stayed parked until (if ever) the GC's
+    weakref callback noticed the dead pool. Capture the pools the dispatcher
+    creates — holding a reference, as any registry/profiler would, which
+    disables the GC band-aid — and require an explicit shutdown."""
+    import repro.runtime.workflow as wfmod
+
+    created = []
+    real_pool = wfmod.ThreadPoolExecutor
+
+    class CapturingPool(real_pool):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            created.append(self)
+
+    monkeypatch.setattr(wfmod, "ThreadPoolExecutor", CapturingPool)
+
+    def prompt(d, inv):
+        return d
+
+    wf, est = _straggler_setup(prompt)
+    cluster = Cluster(clock=fast_clock)
+    runner = WorkflowRunner(cluster, use_truffle=False, storage="direct",
+                            straggler_factor=5.0, estimates=est)
+    for _ in range(3):
+        runner.run(wf, b"x")
+    assert created                           # the guarded path ran
+    assert all(pool._shutdown for pool in created)
+    # and the worker threads actually wind down (no parked threads left)
+    deadline = time.monotonic() + 5.0
+    while (any(t.is_alive() for pool in created for t in pool._threads)
+           and time.monotonic() < deadline):
+        time.sleep(0.05)
+    assert not any(t.is_alive() for pool in created for t in pool._threads)
+
+
+# --------------------------------------------------- 3. wait_for-vs-evict
+def test_wait_for_returns_data_despite_racing_eviction():
+    """The old implementation exited the wait loop, dropped the lock, and
+    re-read via get() — an eviction (or same-key displacement) landing in
+    that window returned None even though the wait succeeded. Emulate the
+    window deterministically by making the trailing re-read miss."""
+    b = Buffer()
+    b.set("k", b"payload")
+    b.get = lambda key, pop=False: None      # any post-wait re-read misses
+    assert b.wait_for("k", timeout=1) == b"payload"
+
+
+def test_wait_for_pop_under_lock():
+    """pop=True drops the entry atomically with the successful wait."""
+    b = Buffer()
+    b.set("k", b"v")
+    assert b.wait_for("k", timeout=1, pop=True) == b"v"
+    assert "k" not in b
+
+
+def test_wait_for_still_blocks_and_times_out():
+    b = Buffer()
+    assert b.wait_for("missing", timeout=0.05) is None
+    got = {}
+
+    def waiter():
+        got["v"] = b.wait_for("later", timeout=5)
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)
+    b.set("later", b"xyz")
+    th.join(timeout=5)
+    assert got["v"] == b"xyz"
