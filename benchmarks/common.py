@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.runtime.clock import Clock                      # noqa: E402
 from repro.runtime.cluster import Cluster                  # noqa: E402
 from repro.runtime.function import FunctionSpec            # noqa: E402
+from repro.runtime.policy import WorkflowBuilder           # noqa: E402
 from repro.runtime.workflow import (Stage, Workflow,       # noqa: E402
                                     WorkflowRunner, WorkflowTrace)
 
@@ -47,12 +48,14 @@ def _identity(data, inv):
 def chained_workflow(size: int, *, extra_cold_s: float = 0.0,
                      tag: str = "") -> Workflow:
     """Paper §VI: two sequential data-intensive functions a -> b."""
-    a = FunctionSpec(f"chain-a{tag}", _producer(size), exec_s=0.05,
-                     affinity="edge-0", **PAPER_COLD)
-    b = FunctionSpec(f"chain-b{tag}", _identity, exec_s=0.05,
-                     affinity="edge-1", extra_cold_start_s=extra_cold_s,
-                     **PAPER_COLD)
-    return Workflow("chained", {"a": Stage(a), "b": Stage(b, deps=["a"])})
+    b = WorkflowBuilder("chained")
+    b.stage("a", FunctionSpec(f"chain-a{tag}", _producer(size), exec_s=0.05,
+                              affinity="edge-0", **PAPER_COLD))
+    b.stage("b", FunctionSpec(f"chain-b{tag}", _identity, exec_s=0.05,
+                              affinity="edge-1",
+                              extra_cold_start_s=extra_cold_s,
+                              **PAPER_COLD)).after("a")
+    return b.build()
 
 
 def video_workflow(size: int, fanout: int = 2, tag: str = "",
@@ -62,22 +65,21 @@ def video_workflow(size: int, fanout: int = 2, tag: str = "",
 
     ``pin=False`` drops the decoder/recognizer affinities so the scheduler
     is free to place them (the locality-aware-placement benchmark)."""
-    stages: Dict[str, Stage] = {
-        "stream": Stage(FunctionSpec(f"v-stream{tag}", _producer(size),
-                                     exec_s=0.08, affinity="edge-0",
-                                     **PAPER_COLD))}
+    b = WorkflowBuilder("video")
+    b.stage("stream", FunctionSpec(f"v-stream{tag}", _producer(size),
+                                   exec_s=0.08, affinity="edge-0",
+                                   **PAPER_COLD))
     seg = max(size // fanout, 1)
     for i in range(fanout):
-        stages[f"dec{i}"] = Stage(
-            FunctionSpec(f"v-dec{i}{tag}", _producer(seg), exec_s=0.10,
-                         affinity=f"edge-{1 + i % 2}" if pin else None,
-                         **PAPER_COLD),
-            deps=["stream"])
-    stages["recog"] = Stage(
-        FunctionSpec(f"v-recog{tag}", _identity, exec_s=0.15,
-                     affinity="cloud-0" if pin else None, **PAPER_COLD),
-        deps=[f"dec{i}" for i in range(fanout)])
-    return Workflow("video", stages)
+        b.stage(f"dec{i}", FunctionSpec(
+            f"v-dec{i}{tag}", _producer(seg), exec_s=0.10,
+            affinity=f"edge-{1 + i % 2}" if pin else None,
+            **PAPER_COLD)).after("stream")
+    b.stage("recog", FunctionSpec(f"v-recog{tag}", _identity, exec_s=0.15,
+                                  affinity="cloud-0" if pin else None,
+                                  **PAPER_COLD)
+            ).after(*[f"dec{i}" for i in range(fanout)])
+    return b.build()
 
 
 def run_once(wf_builder, size: int, *, use_truffle: bool, storage: str,

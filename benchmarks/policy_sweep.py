@@ -1,0 +1,186 @@
+"""Per-edge DataPolicy sweep: mixed execution plans vs. global knobs.
+
+Two experiments on a heterogeneous edge-cloud DAG (the shape every global
+knob gets wrong somewhere):
+
+    src(edge-0) --+--> proc0 (unpinned) --+--> fuse (unpinned) --> upload
+                  +--> proc1 (unpinned) --+                      (cloud-0,
+                     fan-out, LAN             fan-in                 WAN)
+
+  sweep    Every legacy global-knob configuration (stream x dedup, the old
+           runner kwargs — one setting for EVERY edge) vs. one mixed
+           per-edge plan: dedup on the LAN fan-out/fan-in hops (placement
+           follows the bytes, passes alias), stream + lz4-like compression
+           on the bandwidth-bound WAN hop only. The mixed plan composes
+           the per-hop optima, which no single global setting can.
+
+  fanin    Multi-input digest hints vs. joined-blob hashing. Two input
+           parts live on different edge nodes and the producing node is
+           load-skewed. Hashing the JOINED blob gives the scheduler a
+           digest that resolves only on the overloaded producer — skew
+           wins, locality_hit=0. Hinting one digest PER DEP lets the
+           scheduler score the sum of resident inputs and land on the
+           other part's node — locality_hit=1.
+
+Emits (benchmarks/common.emit CSV + BENCH_truffle.json):
+  policy.sweep.global.<config>      total per global-knob configuration
+  policy.sweep.mixed                total for the mixed per-edge plan
+  policy.sweep.mixed_vs_best        margin vs the best global config
+  policy.fanin.{joined,multi}       locality-hit rate per hint mode
+  policy.fanin.hint_gain            hit-rate delta (multi - joined)
+"""
+from __future__ import annotations
+
+from benchmarks.common import MB, PAPER_COLD, SCALE, emit
+from repro.core.buffer import content_digest
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
+
+#: transfer-bound sizing: δ must exceed β = ~1.55s on the LAN tier, or
+#: every policy's transfer hides inside the cold start and the sweep only
+#: measures overheads (48 MB edge-edge is ~0.85s — invisible)
+SIZE = 128 * MB
+
+#: content hashing/joins are REAL work on the dispatch path; below this
+#: clock scale the simulation magnifies them past the modeled transfers
+#: and the sweep measures the host CPU, not the data plane
+MIN_SCALE = 0.35
+
+#: mixed per-edge plan: each hop gets the mechanism its tier wants
+LAN_FAN = DataPolicy(dedup=True)
+WAN_EDGE = DataPolicy(stream=True, dedup=True, compression="lz4-like")
+
+
+def hetero_workflow(tag: str, mixed: bool):
+    """Heterogeneous DAG; ``mixed=False`` leaves every edge on the runner
+    default (the legacy global knobs), ``mixed=True`` attaches the
+    per-edge policies."""
+    def produce(d, inv):
+        return bytes(SIZE)
+
+    def half(d, inv):
+        return d[:len(d) // 2]
+
+    def ident(d, inv):
+        return d
+
+    b = WorkflowBuilder(f"hetero{tag}")
+    b.stage("src", FunctionSpec(f"src{tag}", produce, exec_s=0.08,
+                                affinity="edge-0", **PAPER_COLD))
+    fan = dict(policy=LAN_FAN) if mixed else {}
+    b.stage("proc0", FunctionSpec(f"proc0{tag}", half, exec_s=0.10,
+                                  **PAPER_COLD)).after("src", **fan)
+    b.stage("proc1", FunctionSpec(f"proc1{tag}", half, exec_s=0.10,
+                                  **PAPER_COLD)).after("src", **fan)
+    b.stage("fuse", FunctionSpec(f"fuse{tag}", ident, exec_s=0.10,
+                                 **PAPER_COLD)
+            ).after("proc0", **fan).after("proc1", **fan)
+    wan = dict(policy=WAN_EDGE) if mixed else {}
+    b.stage("upload", FunctionSpec(f"upload{tag}", ident, exec_s=0.15,
+                                   affinity="cloud-0", **PAPER_COLD)
+            ).after("fuse", **wan)
+    return b.build()
+
+
+def _cluster(scale: float) -> Cluster:
+    return Cluster(node_specs=[("edge-0", "edge"), ("edge-1", "edge"),
+                               ("edge-2", "edge"), ("cloud-0", "cloud")],
+                   clock=Clock(scale))
+
+
+def run_config(label: str, *, scale: float, mixed: bool = False,
+               stream: bool = False, dedup: bool = False) -> dict:
+    cluster = _cluster(scale)
+    clock = cluster.clock
+    wf = hetero_workflow(f"-{label}", mixed)
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True,
+                            stream=stream, dedup=dedup)
+    tr = runner.run(wf, b"trigger", source_node="edge-0")
+    recs = [sr.record for sr in tr.stages.values()]
+    return {
+        "total": clock.elapsed_sim(tr.total),
+        "io": clock.elapsed_sim(tr.phase_totals()["io"]),
+        "locality_hits": sum(1 for r in recs if r.locality_hit),
+        "dedup_hits": sum(1 for r in recs if r.dedup_hit),
+        "wan_ratio": tr.stages["upload"].record.compress_ratio,
+    }
+
+
+def fanin_hits(multi: bool, *, scale: float, n_pass: int = 3) -> float:
+    """Locality-hit rate for a fan-in consumer whose two input parts live
+    on different nodes while the producing (source) node is overloaded.
+
+    ``multi=False`` emulates the old joined-blob hashing (the hint is the
+    digest of the concatenated input, resident only on the loaded source);
+    ``multi=True`` hints one (digest, size) per part."""
+    cluster = _cluster(scale)
+    # the source node holds part1; skew it past the locality credit
+    w = cluster.scheduler.locality_weight
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-1"] = int(w) + 2
+    hits = 0
+    for i in range(n_pass):
+        # unique content per pass: a repeated joined blob would become
+        # resident wherever the previous pass landed, flattering the
+        # joined-blob control with aliases it never earns on fresh data
+        part0 = bytes([i]) * (8 * MB)
+        part1 = bytes([128 + i]) * (8 * MB)
+        d0, d1 = content_digest(part0), content_digest(part1)
+        cluster.node("edge-0").buffer.set(f"cas/{d0}", part0, digest=d0)
+        cluster.node("edge-1").buffer.set(f"cas/{d1}", part1, digest=d1)
+        fn = f"fanin-{multi}-{i}"
+        cluster.platform.register(FunctionSpec(fn, lambda d, inv: d[:4],
+                                               exec_s=0.05, **PAPER_COLD))
+        joined = part0 + part1
+        hints = ((d0, len(part0)), (d1, len(part1))) if multi else None
+        _, rec = cluster.node("edge-1").truffle.pass_data(
+            fn, joined, policy=DataPolicy(dedup=True), input_hints=hints)
+        hits += bool(rec.locality_hit)
+    return hits / n_pass
+
+
+def run(scale: float = SCALE):
+    scale = max(scale, MIN_SCALE)
+    rows = []
+    results = {}
+    for label, kw in (("blob", {}),
+                      ("stream", {"stream": True}),
+                      ("dedup", {"dedup": True}),
+                      ("stream+dedup", {"stream": True, "dedup": True})):
+        r = run_config(label, scale=scale, **kw)
+        results[label] = r
+        rows.append((f"policy.sweep.global.{label}", r["total"],
+                     f"io={r['io']:.3f}s locality_hits={r['locality_hits']} "
+                     f"dedup_hits={r['dedup_hits']}"))
+    mixed = run_config("mixed", scale=scale, mixed=True)
+    rows.append(("policy.sweep.mixed", mixed["total"],
+                 f"io={mixed['io']:.3f}s "
+                 f"locality_hits={mixed['locality_hits']} "
+                 f"dedup_hits={mixed['dedup_hits']} "
+                 f"wan_ratio={mixed['wan_ratio']}"))
+    best_label, best = min(results.items(), key=lambda kv: kv[1]["total"])
+    margin = best["total"] - mixed["total"]
+    rows.append(("policy.sweep.mixed_vs_best", margin,
+                 f"margin={margin:.3f}s best_global={best_label} "
+                 f"best_total={best['total']:.3f}s "
+                 f"mixed_total={mixed['total']:.3f}s "
+                 f"mixed_beats_best={margin > 0}"))
+
+    joined_rate = fanin_hits(False, scale=scale)
+    multi_rate = fanin_hits(True, scale=scale)
+    rows.append(("policy.fanin.joined", joined_rate,
+                 f"locality_hit_rate={joined_rate:.0%}"))
+    rows.append(("policy.fanin.multi", multi_rate,
+                 f"locality_hit_rate={multi_rate:.0%}"))
+    rows.append(("policy.fanin.hint_gain", multi_rate - joined_rate,
+                 f"hit_rate_gain={multi_rate - joined_rate:.0%} "
+                 f"multi_beats_joined={multi_rate > joined_rate}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

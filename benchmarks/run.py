@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   eq4         analytic-model validation (+ pipelined-transfer extension)
   stream.*    chunked-streaming sweep: blob vs stream vs dedup fan-out
   locality.*  load-only vs digest-aware placement (fan-out + video)
+  policy.*    per-edge DataPolicy plans: mixed vs best global knob;
+              multi-input fan-in hints vs joined-blob hashing
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
@@ -43,7 +45,8 @@ def main() -> None:
 
     from benchmarks import (chained_sweep, chained_total, coldstart_sweep,
                             lifecycle, locality_sweep, model_validation,
-                            roofline, streaming_sweep, video_analytics)
+                            policy_sweep, roofline, streaming_sweep,
+                            video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -62,6 +65,9 @@ def main() -> None:
 
     print("# --- locality-aware placement ---")
     locality_sweep.run()
+
+    print("# --- per-edge DataPolicy plans ---")
+    policy_sweep.run()
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")

@@ -4,10 +4,20 @@ cities across the Edge-Cloud Continuum.
 Ingest -> Extract-Frames (edge) -> Object-Detection (edge, fan-out) ->
 {Alarm-Trigger (edge), Prepare-Dataset -> cloud training ingest (cloud)}.
 
-Edge stages pass large video chunks with CSP during downstream cold starts;
-the cloud hop (slow WAN link) benefits the most from overlap.
+The DAG is heterogeneous, so each hop gets its own ``DataPolicy``:
+  * extract -> detect0/detect1 (fan-out): ``dedup`` — both detectors read
+    the SAME frames, so placement follows the bytes and the second pass
+    degenerates to a zero-transfer local alias;
+  * detect* -> prep (fan-in + WAN): ``stream`` + ``lz4-like`` compression —
+    the edge->cloud hop is bandwidth-bound, so chunks cross the WAN
+    compressed while prep's cold start absorbs the rest;
+  * detect* -> alarm (LAN fan-in): plain CSP — tiny output, the codec
+    wouldn't pay for itself.
 
   PYTHONPATH=src python examples/fire_detection_workflow.py [--scale 0.1]
+
+(Keep --scale >= 0.1: content addressing hashes real bytes, so very small
+scales magnify that CPU work past the modeled transfers in the totals.)
 """
 import argparse
 import sys
@@ -18,12 +28,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.runtime.clock import Clock
 from repro.runtime.cluster import Cluster
 from repro.runtime.function import FunctionSpec
-from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
 
 MB = 1 << 20
 
+FANOUT = DataPolicy(dedup=True)
+WAN = DataPolicy(stream=True, dedup=True, compression="lz4-like")
 
-def build_workflow(tag: str) -> Workflow:
+
+def build_workflow(tag: str):
     def frames(data, inv):
         return bytes(48 * MB)          # extracted frames from a video chunk
 
@@ -37,22 +51,22 @@ def build_workflow(tag: str) -> Workflow:
         return data[:16 * MB]          # training samples for the cloud
 
     cold = {"provision_s": 1.3, "startup_s": 0.25}
-    return Workflow("fire-detection", {
-        "extract": Stage(FunctionSpec(f"extract{tag}", frames, exec_s=0.2,
-                                      affinity="edge-0", **cold)),
-        "detect0": Stage(FunctionSpec(f"detect0{tag}", detect, exec_s=0.3,
-                                      affinity="edge-1", **cold),
-                         deps=["extract"]),
-        "detect1": Stage(FunctionSpec(f"detect1{tag}", detect, exec_s=0.3,
-                                      affinity="edge-2", **cold),
-                         deps=["extract"]),
-        "alarm": Stage(FunctionSpec(f"alarm{tag}", alarm, exec_s=0.05,
-                                    affinity="edge-0", **cold),
-                       deps=["detect0", "detect1"]),
-        "prep": Stage(FunctionSpec(f"prep{tag}", prep, exec_s=0.2,
-                                   affinity="cloud-0", **cold),
-                      deps=["detect0", "detect1"]),
-    })
+    b = WorkflowBuilder("fire-detection")
+    b.stage("extract", FunctionSpec(f"extract{tag}", frames, exec_s=0.2,
+                                    affinity="edge-0", **cold))
+    # detectors unpinned: the dedup fan-out edges let the locality-aware
+    # scheduler place them ON the extracted frames
+    b.stage("detect0", FunctionSpec(f"detect0{tag}", detect, exec_s=0.3,
+                                    **cold)).after("extract", policy=FANOUT)
+    b.stage("detect1", FunctionSpec(f"detect1{tag}", detect, exec_s=0.3,
+                                    **cold)).after("extract", policy=FANOUT)
+    b.stage("alarm", FunctionSpec(f"alarm{tag}", alarm, exec_s=0.05,
+                                  affinity="edge-0", **cold)
+            ).after("detect0", "detect1")
+    b.stage("prep", FunctionSpec(f"prep{tag}", prep, exec_s=0.2,
+                                 affinity="cloud-0", **cold)
+            ).after("detect0", policy=WAN).after("detect1", policy=WAN)
+    return b.build()
 
 
 def main():
@@ -66,7 +80,7 @@ def main():
                                       ("edge-2", "edge"), ("cloud-0", "cloud")],
                           clock=clock)
         runner = WorkflowRunner(cluster, use_truffle=use_truffle,
-                                storage="direct", prewarm_roots=True)
+                                prewarm_roots=True)
         tr = runner.run(build_workflow(f"-{use_truffle}"), b"video-chunk")
         mode = "truffle " if use_truffle else "baseline"
         print(f"\n{mode}: end-to-end {clock.elapsed_sim(tr.total):6.2f}s "
@@ -74,7 +88,9 @@ def main():
         for name, sr in tr.stages.items():
             ph = {k: round(clock.elapsed_sim(v), 2)
                   for k, v in sr.record.phases().items()}
-            print(f"  {name:9s} on {sr.record.node:8s} {ph}")
+            flags = "".join(f" {f}" for f in ("dedup_hit", "locality_hit")
+                            if getattr(sr.record, f))
+            print(f"  {name:9s} on {sr.record.node:8s} {ph}{flags}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """Quickstart: Truffle in 40 lines.
 
-Builds an edge-cloud cluster, registers a 2-function chained workflow, and
-runs it with and without Truffle — showing the cold-start/data-transfer
-overlap (SDP+CSP) cutting end-to-end latency.
+Builds an edge-cloud cluster, declares a 2-function chained workflow with
+the fluent ``WorkflowBuilder`` — attaching a per-edge ``DataPolicy`` to the
+producer->consumer hop (chunk-streamed, content-addressed) — and runs it
+with and without Truffle, showing the cold-start/data-transfer overlap
+(SDP+CSP) cutting end-to-end latency.
 
   PYTHONPATH=src python examples/quickstart.py [--scale 0.1]
 """
@@ -15,7 +17,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.runtime.clock import Clock
 from repro.runtime.cluster import Cluster
 from repro.runtime.function import FunctionSpec
-from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
 
 
 def main():
@@ -28,18 +31,21 @@ def main():
     payload = bytes(args.size_mb << 20)
 
     def make_wf(tag):
-        producer = FunctionSpec(f"produce{tag}", lambda d, inv: payload,
-                                provision_s=1.3, startup_s=0.25, exec_s=0.05)
-        consumer = FunctionSpec(f"consume{tag}", lambda d, inv: d[:4],
-                                provision_s=1.3, startup_s=0.25, exec_s=0.05)
-        return Workflow("quickstart", {"p": Stage(producer),
-                                       "c": Stage(consumer, deps=["p"])})
+        b = WorkflowBuilder("quickstart")
+        b.stage("p", FunctionSpec(f"produce{tag}", lambda d, inv: payload,
+                                  provision_s=1.3, startup_s=0.25,
+                                  exec_s=0.05))
+        b.stage("c", FunctionSpec(f"consume{tag}", lambda d, inv: d[:4],
+                                  provision_s=1.3, startup_s=0.25,
+                                  exec_s=0.05)).after(
+            "p", policy=DataPolicy(stream=True))
+        return b.build()
 
     for use_truffle in (False, True):
         clock = Clock(scale=args.scale)
         cluster = Cluster(clock=clock)
         runner = WorkflowRunner(cluster, use_truffle=use_truffle,
-                                storage="direct", prewarm_roots=True)
+                                prewarm_roots=True)
         trace = runner.run(make_wf(f"-{use_truffle}"), b"go")
         mode = "truffle " if use_truffle else "baseline"
         total = clock.elapsed_sim(trace.total)

@@ -6,21 +6,25 @@ local Truffle, which (1) triggers the target function with a reference key,
 source-node → target-node the moment placement is known — i.e. during the
 target's cold start. The target handler reads from its local buffer.
 
-With ``dedup=True`` the payload is also *seeded* into the source node's
-buffer under its content address before the trigger fires, so the digest
-registry sees the bytes and the locality-aware scheduler can place the
-target right on them — the pass then degenerates to a zero-transfer local
-alias. Concurrent fan-out passes of the same content to one node share a
-single relay stream (``RelayTable``).
+The edge's :class:`~repro.runtime.policy.DataPolicy` (``policy=``, compiled
+from the workflow's ExecutionPlan; legacy ``stream=``/``dedup=`` kwargs
+build a uniform one) selects the data plane:
 
-Knobs (``pass_data`` kwargs): ``stream`` relays the payload chunk-by-chunk
-(``chunk_bytes``, default 1 MiB) into an in-flight buffer entry, so the
-target starts consuming at first-chunk arrival and per-chunk compute
-overlaps the remaining transfer; ``dedup`` content-addresses the payload
-(BLAKE2b) and, when the target buffer already holds identical bytes
-(fan-out, retries), aliases them — near-zero transfer. Defaults keep the
-whole-blob behavior. ``join_timeout_s`` bounds the post-return wait on the
-transfer thread; a stall is recorded and raised as TransferStallError."""
+``dedup`` content-addresses the payload (BLAKE2b) and *seeds* it into the
+source node's buffer before the trigger fires, so the digest registry sees
+the bytes and the locality-aware scheduler can place the target right on
+them — the pass then degenerates to a zero-transfer local alias. Fan-in
+passes carry ``input_hints`` — one (digest, size) per upstream dep — so
+the scheduler scores the SUM of resident inputs instead of a joined-blob
+hash. Concurrent fan-out passes of the same content to one node share a
+single relay stream (``RelayTable``). ``stream`` relays the payload
+chunk-by-chunk (``chunk_bytes``, default 1 MiB) into an in-flight buffer
+entry, so the target starts consuming at first-chunk arrival. ``compression``
+ships compressed chunks on remote hops (WAN edges). ``prefetch``/
+``locality_weight`` ride the PlacementHint; ``avoid`` steers a speculative
+backup off the straggler's node. Defaults keep the whole-blob behavior.
+``join_timeout_s`` bounds the post-return wait on the transfer thread; a
+stall is recorded and raised as TransferStallError."""
 from __future__ import annotations
 
 import threading
@@ -28,9 +32,12 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.transfer import join_or_stall, seed_content, ship_payload
+from repro.core.transfer import (join_or_stall, resolve_codec, seed_content,
+                                 ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
+from repro.runtime.policy import DataPolicy
+from repro.runtime.scheduler import PlacementHint
 
 
 class CSP:
@@ -40,31 +47,48 @@ class CSP:
 
     def pass_data(self, target_fn: str, data: bytes,
                   exec_after: Optional[float] = None, *,
+                  policy: Optional[DataPolicy] = None,
+                  input_hints=None,
+                  avoid: Optional[str] = None,
+                  digest: Optional[str] = None,
                   stream: bool = False, dedup: bool = False,
                   chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                   ) -> Tuple[bytes, LifecycleRecord]:
         """Algorithm 2 from the source node's Truffle. Returns the target's
-        result + lifecycle record."""
+        result + lifecycle record. ``digest``, when the caller already knows
+        the payload's content address (the runner seeds stage outputs),
+        skips the re-hash on the dispatch path."""
+        if policy is None:     # legacy kwargs -> uniform policy (shim)
+            policy = DataPolicy(stream=stream, dedup=dedup)
+        stream, dedup = policy.stream, policy.dedup
+        codec = resolve_codec(policy.compression)
         t = self.truffle
         cluster = t.cluster
         clock = cluster.clock
         inv_id = uuid.uuid4().hex
         buf_key = f"truffle/{target_fn}/{inv_id[:8]}"
-        digest = content_digest(data) if dedup else None
+        if dedup and digest is None:
+            digest = content_digest(data)
+        elif not dedup:
+            digest = None
         if digest is not None:
             seed_content(cluster, t.node, target_fn, data, digest)
 
+        inputs = tuple(input_hints) if input_hints else None
         fwd = Request(fn=target_fn,
-                      content_ref=ContentRef("truffle", buf_key, size=len(data),
-                                             digest=digest),
+                      content_ref=ContentRef("truffle", buf_key,
+                                             size=len(data), digest=digest,
+                                             inputs=inputs),
                       source_node=t.node.name, meta={"invocation": inv_id})
+        hint = PlacementHint.from_policy(policy, digest, len(data),
+                                         inputs, avoid)
         rec = LifecycleRecord(fn=target_fn, mode="truffle")
         rec.streamed = stream
         rec.t_request = clock.now()
 
         # (2) reference-key trigger to the platform ...
         fut, rec = cluster.platform.invoke_async(fwd, lightweight_trigger=True,
-                                                 record=rec)
+                                                 record=rec, hint=hint)
         errbox = []
 
         # (2a) ... while listening for the target host; (6a) early transfer.
@@ -74,7 +98,7 @@ class CSP:
                 placed = t.watcher.resolve_placement(target_fn, inv_id)
                 ship_payload(cluster, t.node, cluster.node(placed["node"]),
                              buf_key, data, stream=stream, digest=digest,
-                             chunk_bytes=chunk_bytes, record=rec)
+                             chunk_bytes=chunk_bytes, codec=codec, record=rec)
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)
@@ -88,3 +112,4 @@ class CSP:
         if errbox:
             raise errbox[0]
         return result, rec
+

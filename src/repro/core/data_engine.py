@@ -71,15 +71,23 @@ class DataEngine:
 
     def fetch(self, ref: ContentRef, buffer_key: Optional[str] = None, *,
               stream: bool = False, chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-              dedup: bool = False, record=None) -> Optional[bytes]:
+              dedup: bool = False, record=None,
+              policy=None) -> Optional[bytes]:
         """Algorithm 1: resolve adapter → get(content_ref) → buffer.set.
 
+        ``policy`` (a per-edge :class:`~repro.runtime.policy.DataPolicy`)
+        is the compiled-plan spelling of the knobs below; when given it
+        overrides ``stream``/``dedup``. (Edge ``compression`` does not
+        apply here: storage reads are priced by the service adapter, not
+        the node fabric.)
         ``stream`` pipelines the read into the buffer chunk-by-chunk and
         returns None — the consumer reads per-chunk via ``open_reader``
         (joining the blob here would add a full extra copy on the hot path).
         ``dedup`` consults the content-addressed index before any I/O (a hit
         is flagged on ``record.dedup_hit`` when a LifecycleRecord is given).
         """
+        if policy is not None:
+            stream, dedup = policy.stream, policy.dedup
         key = buffer_key or ref.key
         sc = self.adapter_for(ref)
         buf = self.node.buffer

@@ -4,6 +4,24 @@ from __future__ import annotations
 from typing import Optional
 
 
+class WorkflowCycleError(ValueError):
+    """The workflow DAG contains a dependency cycle. Raised by
+    ``Workflow.topo_order`` / ``WorkflowBuilder.build`` / ``Planner.compile``
+    instead of recursing forever; names the offending cycle so the author
+    can see exactly which ``after(...)`` edge closed it."""
+
+    def __init__(self, cycle):
+        self.cycle = list(cycle)
+        super().__init__("workflow dependency cycle: "
+                         + " -> ".join(self.cycle))
+
+
+class PlanError(ValueError):
+    """A workflow + policy combination cannot be compiled into a coherent
+    ExecutionPlan (e.g. two in-edges of one stage declare different
+    ``strategy`` values, so the stage's input has no single home)."""
+
+
 class TransferStallError(RuntimeError):
     """A data-path transfer thread outlived its join budget: the function
     already returned but its transfer never finished (wedged channel,

@@ -8,7 +8,7 @@ Used three ways:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List
+from typing import Iterable, List, Optional
 
 
 @dataclass(frozen=True)
@@ -94,6 +94,53 @@ def locality_improvement(p: PhaseEstimate,
     plain Truffle placement with the full transfer:
     Δ_loc = max(β, δ) − max(β, (1−f)·δ)  (0 when δ ≤ β: already hidden)."""
     return overlap_window(p) - max(p.beta, effective_delta(p, resident_fraction))
+
+
+# ------------------------------------------------------- per-edge Eq. 4 terms
+# ExecutionPlan extension of Eq. 4: each workflow edge carries its own
+# DataPolicy, so the transfer term δ is shaped per edge — compression
+# shrinks the wire bytes (δ·r), locality removes the resident fraction
+# (δ·(1−f)), streaming overlaps the remainder with execution. These terms
+# compose; the planner/benchmarks use them to predict a mixed-policy plan.
+
+def edge_delta(p: PhaseEstimate, *, wire_ratio: float = 1.0,
+               resident_fraction: float = 0.0) -> float:
+    """Per-edge transfer term: δ_e = r · (1 − f) · δ, r ∈ (0, 1],
+    f ∈ [0, 1] (compression acts only on the bytes that actually move)."""
+    r = min(max(wire_ratio, 0.0), 1.0)
+    f = min(max(resident_fraction, 0.0), 1.0)
+    return p.delta * r * (1.0 - f)
+
+
+def edge_time(p: PhaseEstimate, *, use_truffle: bool = True,
+              stream_exec_overlap: Optional[float] = None,
+              wire_ratio: float = 1.0,
+              resident_fraction: float = 0.0) -> float:
+    """Eq. 3/4 for ONE edge under its resolved policy.
+
+    ``stream_exec_overlap`` is None for whole-blob edges; for streamed
+    edges it is the portion of γ that overlaps the transfer ((n−1)·ε for
+    n chunks with per-chunk compute ε — see ``pipelined_io_visible``)."""
+    d = edge_delta(p, wire_ratio=wire_ratio,
+                   resident_fraction=resident_fraction)
+    if not use_truffle:
+        return p.alpha + p.beta + d + p.gamma
+    if stream_exec_overlap is None:
+        return p.alpha + max(p.beta, d) + p.gamma
+    return p.alpha + p.beta + max(0.0, d - p.beta - stream_exec_overlap) \
+        + p.gamma
+
+
+def edge_improvement(p: PhaseEstimate, **edge_kw) -> float:
+    """Per-edge Δ: plain whole-blob Truffle (Eq. 3) minus the edge's time
+    under its resolved policy — what this edge's policy buys."""
+    return truffle_time(p) - edge_time(p, **edge_kw)
+
+
+def plan_time(edges: Iterable[tuple]) -> float:
+    """End-to-end over a chain of (PhaseEstimate, edge-kwargs) pairs —
+    Eq. 5 with per-edge terms instead of one global configuration."""
+    return sum(edge_time(p, **kw) for p, kw in edges)
 
 
 def workflow_time(phases: Iterable[PhaseEstimate], use_truffle: bool = True) -> float:

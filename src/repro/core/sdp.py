@@ -8,18 +8,23 @@ On request ingress, two paths run concurrently:
 The function, once started, reads its input from its node-local Truffle
 buffer via the reference key — ideally without waiting.
 
-With ``dedup=True`` the input's digest is resolved BEFORE the trigger fires
-(from the ContentRef, the storage service's digest index, or — for inline
-payloads — by hashing and seeding the bytes into the local buffer), so the
-forwarded reference carries a placement hint: the locality-aware scheduler
-can put the function on whichever node already holds those bytes and the
-data path degenerates to a local alias.
+The edge's :class:`~repro.runtime.policy.DataPolicy` (``policy=``, compiled
+into the workflow's ExecutionPlan; the legacy ``stream=``/``dedup=`` kwargs
+build a uniform one) selects the data plane:
 
-Knobs (``handle`` kwargs): ``stream`` pipelines the data path at chunk
-granularity (``chunk_bytes``, default 1 MiB) so the function can consume at
-first-chunk arrival; ``dedup`` consults the target buffer's
-content-addressed index first and skips the fetch on a hit. Defaults keep
-the whole-blob behavior. ``join_timeout_s`` bounds how long we wait for the
+``dedup`` resolves the input's digest BEFORE the trigger fires (from the
+ContentRef, the storage service's digest index, or — for inline payloads —
+by hashing and seeding the bytes into the local buffer), so the forwarded
+reference carries a placement hint: the locality-aware scheduler can put
+the function on whichever node already holds those bytes and the data path
+degenerates to a local alias. Fan-in inputs hint one digest PER DEP
+(``ContentRef.inputs``), scored as a sum. ``stream`` pipelines the data
+path at chunk granularity (``chunk_bytes``, default 1 MiB) so the function
+consumes at first-chunk arrival. ``compression`` ships compressed chunks on
+the inline-relay hop (WAN edges). ``prefetch``/``locality_weight`` ride the
+:class:`~repro.runtime.scheduler.PlacementHint` to the scheduler; ``avoid``
+steers a speculative backup off the straggler's node. Defaults keep the
+whole-blob behavior. ``join_timeout_s`` bounds how long we wait for the
 data-path thread after the function returns — a thread still alive then is
 recorded on the LifecycleRecord and raised as TransferStallError instead of
 silently leaking."""
@@ -27,12 +32,15 @@ from __future__ import annotations
 
 import threading
 import uuid
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.transfer import join_or_stall, seed_content, ship_payload
+from repro.core.transfer import (join_or_stall, resolve_codec, seed_content,
+                                 ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
+from repro.runtime.policy import DataPolicy
+from repro.runtime.scheduler import PlacementHint
 
 
 class SDP:
@@ -40,11 +48,17 @@ class SDP:
         self.truffle = truffle
         self.join_timeout_s = join_timeout_s
 
-    def handle(self, request: Request, *, stream: bool = False,
-               dedup: bool = False,
+    def handle(self, request: Request, *,
+               policy: Optional[DataPolicy] = None,
+               avoid: Optional[str] = None,
+               stream: bool = False, dedup: bool = False,
                chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                ) -> Tuple[bytes, LifecycleRecord]:
         """Fig. 5 steps 1-7. Returns (result, lifecycle record)."""
+        if policy is None:     # legacy kwargs -> uniform policy (shim)
+            policy = DataPolicy(stream=stream, dedup=dedup)
+        stream, dedup = policy.stream, policy.dedup
+        codec = resolve_codec(policy.compression)
         t = self.truffle
         cluster = t.cluster
         clock = cluster.clock
@@ -70,13 +84,19 @@ class SDP:
                 digest = content_digest(data)
                 seed_content(cluster, t.node, request.fn, data, digest)
 
+        size = ref.size if ref else len(request.payload or b"")
+        inputs = ref.inputs if (fetchable and ref.inputs) else None
         fwd = Request(fn=request.fn,
-                      content_ref=ContentRef("truffle", buf_key,
-                                             size=(ref.size if ref else
-                                                   len(request.payload or b"")),
-                                             digest=digest),
+                      content_ref=ContentRef("truffle", buf_key, size=size,
+                                             digest=digest, inputs=inputs),
                       source_node=t.node.name,
                       meta={"invocation": inv_id})
+        # storage-backed inputs fetch via the Data Engine, which reads the
+        # service directly and does NOT follow fabric relays — a prefetch
+        # kick would move the same bytes twice (relay + storage read)
+        hint_policy = policy.but(prefetch=False) if fetchable else policy
+        hint = PlacementHint.from_policy(hint_policy, digest, size,
+                                         inputs, avoid)
 
         rec = LifecycleRecord(fn=request.fn, mode="truffle")
         rec.streamed = stream
@@ -84,7 +104,7 @@ class SDP:
 
         # (2) fire the platform trigger (reference key only) ...
         fut, rec = cluster.platform.invoke_async(fwd, lightweight_trigger=True,
-                                                 record=rec)
+                                                 record=rec, hint=hint)
         errbox = []
 
         # (2a/3) ... and, simultaneously, the data path. Storage refs are
@@ -99,7 +119,7 @@ class SDP:
                 target = cluster.node(placed["node"])
                 if fetchable:
                     target.truffle.engine.fetch(ref, buffer_key=buf_key,
-                                                stream=stream, dedup=dedup,
+                                                policy=policy,
                                                 chunk_bytes=chunk_bytes,
                                                 record=rec)  # (3)-(4a)
                 else:
@@ -108,7 +128,8 @@ class SDP:
                     ship_payload(cluster, t.node, target, buf_key,
                                  request.payload or b"",
                                  stream=stream, digest=digest,
-                                 chunk_bytes=chunk_bytes, record=rec)
+                                 chunk_bytes=chunk_bytes, codec=codec,
+                                 record=rec)
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)
@@ -122,3 +143,4 @@ class SDP:
         if errbox:
             raise errbox[0]
         return result, rec
+

@@ -65,6 +65,26 @@ def pin_of(cluster, fn: str) -> Optional[str]:
     return spec.affinity if spec is not None else None
 
 
+def resolve_codec(name: Optional[str]):
+    """``DataPolicy.compression`` -> chunk codec (lazy: the codec module
+    pulls in the ML stack, which pure data-plane paths shouldn't pay for
+    unless an edge actually enables compression)."""
+    if name in (None, "none"):
+        return None
+    from repro.distributed.compression import chunk_codec
+    return chunk_codec(name)
+
+
+def publish_content(node, data: bytes, digest: str) -> None:
+    """Make ``data`` resident on ``node`` under its content address
+    (``cas/<digest>``) so the digest registry — and therefore the
+    locality-aware scheduler — can see it. Alias-first avoids registry
+    churn when the bytes are already there."""
+    cas_key = f"cas/{digest}"
+    if not node.buffer.alias(cas_key, digest):
+        node.buffer.set(cas_key, data, digest=digest)
+
+
 def seed_content(cluster, node, fn: str, data: bytes, digest: str) -> None:
     """Seed dedup'd content into ``node``'s buffer under ``cas/<digest>``
     BEFORE the trigger fires, so the digest registry sees the bytes and the
@@ -76,19 +96,21 @@ def seed_content(cluster, node, fn: str, data: bytes, digest: str) -> None:
     pin = pin_of(cluster, fn)
     if pin is not None and pin != node.name:
         return
-    cas_key = f"cas/{digest}"
-    if not node.buffer.alias(cas_key, digest):
-        node.buffer.set(cas_key, data, digest=digest)
+    publish_content(node, data, digest)
 
 
 def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
                  stream: bool, digest: Optional[str],
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 codec=None,
                  record: Optional[LifecycleRecord] = None) -> None:
     """Move an inline payload into ``target``'s buffer: dedup alias if the
     content is already resident, piggyback on an in-flight relay of the same
     content, else chunk-streamed or whole-blob over the fabric (local
-    placement skips the network entirely)."""
+    placement skips the network entirely). ``codec`` (a
+    :class:`~repro.distributed.compression.ChunkCodec`) compresses the
+    wire bytes on remote hops — the per-edge policy enables it on WAN
+    tiers where the link, not the codec, is the bottleneck."""
     if digest is not None and target.buffer.alias(buf_key, digest):
         if record is not None:
             record.dedup_hit = True           # content already resident
@@ -101,7 +123,8 @@ def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
             try:
                 _ship_direct(cluster, src_node, target, buf_key, data,
                              stream=stream, digest=digest,
-                             chunk_bytes=chunk_bytes)
+                             chunk_bytes=chunk_bytes, codec=codec,
+                             record=record)
             finally:
                 relays.finish(digest, target.name)
             return
@@ -117,22 +140,113 @@ def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
         # fall through and ship ourselves
 
     _ship_direct(cluster, src_node, target, buf_key, data, stream=stream,
-                 digest=digest, chunk_bytes=chunk_bytes)
+                 digest=digest, chunk_bytes=chunk_bytes, codec=codec,
+                 record=record)
 
 
 def _ship_direct(cluster, src_node, target, buf_key: str, data: bytes, *,
-                 stream: bool, digest: Optional[str],
-                 chunk_bytes: int) -> None:
+                 stream: bool, digest: Optional[str], chunk_bytes: int,
+                 codec=None, record: Optional[LifecycleRecord] = None) -> None:
     if target.name != src_node.name:
+        wire_ratio = 1.0
+        if codec is not None:
+            wire_ratio = codec.ratio(data)
+            # pipelined codec model: steady-state (de)compression at the
+            # codec's throughput hides behind the slower wire, so only the
+            # first chunk's compression is on the critical path
+            cluster.clock.sleep(codec.compress_s(min(len(data), chunk_bytes)))
+            if record is not None:
+                record.compress_ratio = wire_ratio
         if stream:
             target.buffer.ingest(
-                buf_key, cluster.stream(src_node, target, data, chunk_bytes),
+                buf_key, cluster.stream(src_node, target, data, chunk_bytes,
+                                        wire_ratio=wire_ratio),
                 digest=digest)
         else:
-            cluster.transfer(src_node, target, data)   # during cold start
+            cluster.transfer(src_node, target, data,    # during cold start
+                             wire_ratio=wire_ratio)
             target.buffer.set(buf_key, data, digest=digest)
     else:
         src_node.buffer.set(buf_key, data, digest=digest)
+
+
+class Prefetcher:
+    """Registry-driven prefetch (per-edge ``DataPolicy.prefetch``).
+
+    When the scheduler must place a function OFF its input's bytes (load
+    skew beat the locality credit), it calls :meth:`kick` at the placement
+    DECISION — before the ``scheduling.placed`` event even publishes —
+    instead of leaving the relay to start when the data path reacts to the
+    trigger. The relay leads the cluster :class:`RelayTable`, so the
+    CSP/SDP ship that follows the trigger becomes its follower and the
+    bytes cross the fabric exactly once; and it pulls from the *best*
+    holder the :class:`~repro.runtime.registry.DigestRegistry` knows
+    (fastest channel into the target), not necessarily the original
+    source — a WAN source with an edge-local replica never re-ships over
+    the WAN."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self._lock = threading.Lock()
+        self.stats = {"kicks": 0, "relays": 0, "skipped": 0, "failed": 0}
+
+    def _bump(self, key: str) -> None:
+        with self._lock:
+            self.stats[key] += 1
+
+    def kick(self, digest: Optional[str], target_name: str,
+             compression: str = "none") -> bool:
+        """Start relaying ``digest``'s bytes toward ``target_name`` if they
+        resolve somewhere else and no relay is already in flight. The
+        relay-table lead is taken synchronously (so a racing CSP/SDP ship
+        follows instead of double-shipping); the bytes move on a daemon
+        thread. ``compression`` is the EDGE's wire codec — the prefetch
+        relay replaces the CSP/SDP ship, so it must honor the same policy
+        (a WAN edge's compression must not be lost because the scheduler
+        moved the bytes first). Returns True iff a relay was started."""
+        cluster = self.cluster
+        registry = getattr(cluster, "digests", None)
+        relays = getattr(cluster, "relays", None)
+        if digest is None or registry is None or relays is None:
+            return False
+        target = cluster.node(target_name)
+        if target.buffer.find_digest(digest):
+            self._bump("skipped")             # already resident
+            return False
+        holders = [n for n in registry.nodes_for(digest) if n != target_name]
+        if not holders:
+            self._bump("skipped")             # nothing to relay from
+            return False
+        src = max((cluster.node(n) for n in holders),
+                  key=lambda n: cluster.network.channel(n, target).bandwidth)
+        lead, _ev = relays.lead_or_follow(digest, target_name)
+        if not lead:
+            self._bump("skipped")             # a relay is already in flight
+            return False
+        self._bump("kicks")
+        threading.Thread(target=self._relay,
+                         args=(digest, src, target, compression),
+                         daemon=True, name=f"prefetch-{digest[:8]}").start()
+        return True
+
+    def _relay(self, digest: str, src, target, compression: str) -> None:
+        try:
+            key = src.buffer.find_digest(digest)
+            data = src.buffer.get(key) if key is not None else None
+            if data is None:                  # holder evicted under us
+                self._bump("failed")
+                return
+            _ship_direct(self.cluster, src, target, f"cas/{digest}", data,
+                         stream=True, digest=digest,
+                         chunk_bytes=DEFAULT_CHUNK_BYTES,
+                         codec=resolve_codec(compression))
+            self._bump("relays")
+        except BaseException:  # noqa: BLE001 — prefetch is best-effort
+            self._bump("failed")
+        finally:
+            # success or failure, release followers: they alias the landed
+            # bytes or fall through and ship themselves
+            self.cluster.relays.finish(digest, target.name)
 
 
 def join_or_stall(th: threading.Thread, record: LifecycleRecord,

@@ -29,23 +29,28 @@ class TruffleInstance:
         self.csp = CSP(self)
 
     # ------------------------------------------------------------------ SDP
-    def handle_request(self, request: Request,
+    def handle_request(self, request: Request, policy=None,
                        **data_plane) -> Tuple[bytes, LifecycleRecord]:
         """Ingress entry (Listener → Ingress). Hot functions take the proxy
         path (paper §III-B: Truffle only passes the data through).
-        ``data_plane`` kwargs (stream/dedup/chunk_bytes) select the chunked
-        streaming path; defaults keep whole-blob behavior."""
+        ``policy`` (a per-edge :class:`~repro.runtime.policy.DataPolicy`,
+        usually resolved from the workflow's ExecutionPlan) selects the
+        data plane; the legacy ``stream``/``dedup``/``chunk_bytes`` kwargs
+        build a uniform one. Defaults keep whole-blob behavior."""
         if self.cluster.platform.warm_instances(request.fn):
             return self.proxy(request)
-        return self.sdp.handle(request, **data_plane)
+        return self.sdp.handle(request, policy=policy, **data_plane)
 
     # ------------------------------------------------------------------ CSP
-    def pass_data(self, target_fn: str, data: bytes,
+    def pass_data(self, target_fn: str, data: bytes, policy=None,
+                  input_hints=None, avoid=None, digest=None,
                   **data_plane) -> Tuple[bytes, LifecycleRecord]:
         if self.cluster.platform.warm_instances(target_fn):
             return self.proxy(Request(fn=target_fn, payload=data,
                                       source_node=self.node.name))
-        return self.csp.pass_data(target_fn, data, **data_plane)
+        return self.csp.pass_data(target_fn, data, policy=policy,
+                                  input_hints=input_hints, avoid=avoid,
+                                  digest=digest, **data_plane)
 
     # ---------------------------------------------------------------- proxy
     def proxy(self, request: Request) -> Tuple[bytes, LifecycleRecord]:

@@ -1,24 +1,86 @@
-"""Gradient compression for the DP all-reduce: int8 quantized
-reduce-scatter + all-gather with per-tensor scales and error feedback.
+"""Compression for the two bandwidth-bound paths in the system:
 
-Wire bytes vs fp32 ring all-reduce: ~4x less (1B/elem each way + scalar
-scales). Used inside a ``shard_map`` over the DP axes
-(``steps.build_train_step(..., dp_mode="shardmap_int8")`` lowers it in the
-dry-run so the collective-term reduction is visible in the §Perf log)."""
+1. Gradient compression for the DP all-reduce: int8 quantized
+   reduce-scatter + all-gather with per-tensor scales and error feedback.
+   Wire bytes vs fp32 ring all-reduce: ~4x less (1B/elem each way + scalar
+   scales). Used inside a ``shard_map`` over the DP axes
+   (``steps.build_train_step(..., dp_mode="shardmap_int8")``).
+
+2. Chunk codecs for the Truffle data plane (:class:`ChunkCodec`): a WAN
+   edge whose :class:`~repro.runtime.policy.DataPolicy` sets
+   ``compression="lz4-like"`` ships compressed chunks through
+   ``Channel.stream``/``transfer`` — the codec estimates the payload's
+   compressibility from a sampled window and the channel grants only the
+   compressed wire bytes. Pure stdlib; the data plane imports it lazily so
+   runtime code paths never pay the jax import unless compression engages.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+import zlib
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
+if TYPE_CHECKING:                     # postponed annotations only
+    import jax
 
 PyTree = Any
+
+# jax is imported INSIDE the gradient functions (not at module top): the
+# Truffle data plane resolves ChunkCodec from this module, and a WAN edge
+# enabling compression must not pay a ~1s ML-stack import on its first
+# dispatch (it showed up as tens of simulated seconds at small clock
+# scales).
+
+
+# ------------------------------------------------------- data-plane codecs
+@dataclass(frozen=True)
+class ChunkCodec:
+    """An lz4-like chunk codec model: fast, modest-ratio byte compression.
+
+    ``ratio`` estimates the wire/payload byte ratio by deflating a sampled
+    window (zlib level 1 ≈ an upper bound on what an lz4-class codec
+    keeps); ``floor`` models the codec's framing overhead — even an
+    all-zeros payload ships ~5% of its bytes. ``compress_s`` is the
+    per-byte codec cost; at ~1.5 GB/s steady-state (de)compression hides
+    behind any WAN link, so the data plane charges only the first chunk."""
+    name: str
+    level: int = 1
+    floor: float = 0.05
+    compress_bps: float = 1.5e9           # bytes/sec, single core
+    sample_bytes: int = 64 * 1024
+
+    def ratio(self, data) -> float:
+        view = bytes(memoryview(data)[:self.sample_bytes])
+        if not view:
+            return 1.0
+        compressed = zlib.compress(view, self.level)
+        return min(1.0, max(self.floor, len(compressed) / len(view)))
+
+    def compress_s(self, nbytes: int) -> float:
+        return max(nbytes, 0) / self.compress_bps
+
+
+LZ4_LIKE = ChunkCodec("lz4-like")
+_CHUNK_CODECS = {"lz4-like": LZ4_LIKE}
+
+
+def chunk_codec(name: Optional[str]) -> Optional[ChunkCodec]:
+    """Resolve a :class:`~repro.runtime.policy.DataPolicy.compression`
+    value to a codec (``None``/"none" -> no codec)."""
+    if name in (None, "none"):
+        return None
+    try:
+        return _CHUNK_CODECS[name]
+    except KeyError:
+        raise KeyError(f"no chunk codec {name!r} "
+                       f"(have: {sorted(_CHUNK_CODECS)})") from None
 
 
 def _axis_size(axis_name: str) -> int:
     """jax.lax.axis_size (jax >= 0.6) with the 0.4.x psum(1) idiom as
     fallback (statically concretized under shard_map/pmap tracing)."""
+    import jax
     impl = getattr(jax.lax, "axis_size", None)
     if impl is not None:
         return impl(axis_name)
@@ -27,6 +89,7 @@ def _axis_size(axis_name: str) -> int:
 
 def quantize(x: jax.Array, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor quantization -> (int8 codes, fp32 scale)."""
+    import jax.numpy as jnp
     assert bits == 8, "int8 path only"
     amax = jnp.max(jnp.abs(x))
     scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
@@ -35,6 +98,7 @@ def quantize(x: jax.Array, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    import jax.numpy as jnp
     return q.astype(jnp.float32) * scale
 
 
@@ -51,6 +115,8 @@ def compressed_mean(x: jax.Array, axis_name: str) -> jax.Array:
     its chunk from every peer (per-peer scales via a tiny fp32 all_gather)
     and reduces in fp32. Stage 2 (all-gather): requantize the reduced chunk
     and gather codes+scales."""
+    import jax
+    import jax.numpy as jnp
     n = _axis_size(axis_name)
     if n == 1:
         return x
@@ -76,6 +142,8 @@ def compressed_mean(x: jax.Array, axis_name: str) -> jax.Array:
 def compressed_grad_sync(grads: PyTree, axis_name: str) -> PyTree:
     """Apply compressed_mean leaf-wise (large leaves only; small ones go
     fp32 — scales/biases are latency- not bandwidth-bound)."""
+    import jax
+
     def sync(g):
         if g.size < 16384:
             return jax.lax.pmean(g, axis_name)

@@ -39,7 +39,7 @@ class Cluster:
                  clock: Optional[Clock] = None, with_truffle: bool = True,
                  scheduling_s: float = 0.15,
                  locality_weight: Optional[float] = None):
-        from repro.core.transfer import RelayTable
+        from repro.core.transfer import Prefetcher, RelayTable
         from repro.core.truffle import TruffleInstance
         from repro.runtime.platform import Platform
         from repro.runtime.scheduler import Scheduler
@@ -59,6 +59,9 @@ class Cluster:
         # in-flight relay table (fan-out passes share one relay stream)
         self.digests = DigestRegistry(bus=self.bus)
         self.relays = RelayTable()
+        # registry-driven prefetch: the scheduler kicks it when an edge's
+        # DataPolicy.prefetch is set and placement lands off the data
+        self.prefetcher = Prefetcher(self)
         for node in self.nodes.values():
             node.buffer.on_residency = self.digests.listener(node.name)
         sched_kw = {} if locality_weight is None else {
@@ -77,14 +80,18 @@ class Cluster:
     def node(self, name: str) -> Node:
         return self.nodes[name]
 
-    def transfer(self, src: Node, dst: Node, payload: bytes) -> float:
-        """Move bytes between nodes over the fabric (blocking, whole-blob)."""
-        return self.network.channel(src, dst).transfer(payload)
+    def transfer(self, src: Node, dst: Node, payload: bytes,
+                 wire_ratio: float = 1.0) -> float:
+        """Move bytes between nodes over the fabric (blocking, whole-blob).
+        ``wire_ratio < 1`` grants only the compressed wire bytes."""
+        return self.network.channel(src, dst).transfer(payload,
+                                                       wire_ratio=wire_ratio)
 
     def stream(self, src: Node, dst: Node, payload: bytes,
-               chunk_bytes: Optional[int] = None):
+               chunk_bytes: Optional[int] = None, wire_ratio: float = 1.0):
         """Chunk-granularity fabric transfer: yields chunks as they arrive
         (per-chunk bandwidth grants — see netsim.Channel.stream)."""
         from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
         return self.network.channel(src, dst).stream(
-            payload, chunk_bytes or DEFAULT_CHUNK_BYTES)
+            payload, chunk_bytes or DEFAULT_CHUNK_BYTES,
+            wire_ratio=wire_ratio)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 
 @dataclass
@@ -24,6 +24,10 @@ class ContentRef:
     key: str
     size: int = 0
     digest: Optional[str] = None  # content address (enables dedup downstream)
+    #: per-dep content hints for a fan-in input: ((digest, size), ...) — one
+    #: entry per upstream edge, so the locality-aware scheduler can score
+    #: placement on the SUM of resident inputs instead of a joined-blob hash
+    inputs: Optional[Tuple[Tuple[str, int], ...]] = None
 
 
 @dataclass
@@ -70,6 +74,8 @@ class LifecycleRecord:
     locality_hit: bool = False    # placed on a node already holding the input
     relay_shared: bool = False    # transfer piggybacked on an in-flight relay
     transfer_stalled: bool = False  # data-path thread outlived its join budget
+    prefetched: bool = False      # scheduler kicked the relay at placement
+    compress_ratio: Optional[float] = None  # wire bytes / payload bytes
     io_blocked_s: Optional[float] = None  # measured blocked wait (streaming)
 
     # --- derived phases (seconds) ---

@@ -40,8 +40,18 @@ class Channel:
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _busy_until: float = field(default=0.0, repr=False)  # wall, last grant end
 
-    def transfer_time(self, nbytes: int) -> float:
-        return self.latency + nbytes / self.bandwidth
+    @staticmethod
+    def wire_bytes(nbytes: int, wire_ratio: float = 1.0) -> int:
+        """Bytes that actually cross the link for an ``nbytes`` payload.
+        ``wire_ratio < 1`` models chunk compression (lz4-like on WAN
+        tiers): the grant shrinks, the consumer still receives the
+        original chunk (decompressed at arrival)."""
+        if nbytes <= 0 or wire_ratio >= 1.0:
+            return nbytes
+        return max(1, int(nbytes * wire_ratio))
+
+    def transfer_time(self, nbytes: int, wire_ratio: float = 1.0) -> float:
+        return self.latency + self.wire_bytes(nbytes, wire_ratio) / self.bandwidth
 
     def _grant(self, nbytes: int, after: float = None) -> float:
         """Reserve serialized link time for ``nbytes``; returns the wall
@@ -61,12 +71,13 @@ class Channel:
             self._busy_until = start + wall
             return self._busy_until
 
-    def transfer(self, payload: bytes) -> float:
+    def transfer(self, payload: bytes, wire_ratio: float = 1.0) -> float:
         """Whole-blob: blocks for the modeled duration holding the bandwidth
         grant for the full payload. Returns simulated seconds."""
-        t = self.transfer_time(len(payload))
+        t = self.transfer_time(len(payload), wire_ratio)
         self.clock.sleep(self.latency)
-        self.clock.sleep_until(self._grant(len(payload)))
+        self.clock.sleep_until(self._grant(self.wire_bytes(len(payload),
+                                                           wire_ratio)))
         return t
 
     def transfer_chunk(self, nbytes: int, *, pay_latency: bool = False,
@@ -81,18 +92,22 @@ class Channel:
         return deadline
 
     def stream(self, payload: bytes,
-               chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Iterator[memoryview]:
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+               wire_ratio: float = 1.0) -> Iterator[memoryview]:
         """Chunk-granularity transfer: yields each chunk after its modeled
         arrival. Bandwidth is granted per chunk, so concurrent streams
         interleave instead of head-of-line blocking. Chunks are zero-copy
         ``memoryview`` slices (the blob path hands over the payload object
-        unchanged — same semantics, measured time stays modeled time)."""
+        unchanged — same semantics, measured time stays modeled time).
+        ``wire_ratio < 1`` grants only the compressed size per chunk (WAN
+        chunk compression); the consumer still receives the full chunk."""
         self.clock.sleep(self.latency)
         view = memoryview(payload)
         deadline = None
         for off in range(0, len(payload), chunk_bytes):
             chunk = view[off:off + chunk_bytes]
-            deadline = self.transfer_chunk(len(chunk), after=deadline)
+            deadline = self.transfer_chunk(
+                self.wire_bytes(len(chunk), wire_ratio), after=deadline)
             yield chunk
         if deadline is None:                  # empty payload: one empty chunk
             yield b""

@@ -1,0 +1,201 @@
+"""Planner: compile a Workflow + DataPolicies into an immutable ExecutionPlan.
+
+The plan is the single source of truth the execution stack consumes —
+``WorkflowRunner`` dispatches from it, ``Platform``/``Scheduler`` receive
+its placement hints, SDP/CSP/DataEngine receive its per-edge policies —
+instead of each layer re-reading runner-global ``stream``/``dedup`` knobs.
+
+Resolution order for the edge ``src -> dst`` (most specific wins, whole
+policy at a time):
+
+    edge policy (``after(src, policy=...)``)
+      > dst stage policy (``stage(..., policy=...)``)
+      > workflow default (``WorkflowBuilder(default_policy=...)``)
+      > planner default (the legacy runner kwargs shim lands here)
+
+Per stage the planner derives:
+  * ``transport`` — the merged in-edge policy actually used to move the
+    stage's (joined) input: strategies must agree (:class:`PlanError`
+    otherwise), ``stream``/``dedup``/``prefetch`` are OR-ed, compression
+    engages if any in-edge asks, ``speculation`` takes the max.
+  * ``hint_deps`` — deps whose edge has ``dedup``: the stage's placement
+    hint carries one digest per such dep (fan-in stages are scored on the
+    SUM of resident inputs, not a joined-blob hash that resolves nowhere).
+  * ``seed_output`` — True when any consumer edge has ``dedup``: the
+    runner content-addresses the stage's output and seeds it on the node
+    that produced it, so downstream placement can follow the bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from types import MappingProxyType
+from typing import Mapping, Optional, Tuple
+
+from repro.core.errors import PlanError, WorkflowCycleError  # noqa: F401
+from repro.runtime.policy import DataPolicy
+
+
+@dataclass(frozen=True)
+class EdgePlan:
+    """One resolved hop: ``src is None`` marks the workflow ingress."""
+    src: Optional[str]
+    dst: str
+    policy: DataPolicy
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    name: str
+    deps: Tuple[str, ...]
+    transport: DataPolicy                  # merged in-edge policy
+    in_edges: Tuple[EdgePlan, ...]         # one per dep (ingress for roots)
+    hint_deps: Tuple[str, ...] = ()        # deps contributing digest hints
+    seed_output: bool = False              # content-address + seed the output
+
+    def edge_policy(self, src: Optional[str]) -> DataPolicy:
+        for e in self.in_edges:
+            if e.src == src:
+                return e.policy
+        raise KeyError(f"no edge {src!r} -> {self.name!r} in plan")
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """Immutable compiled form of a workflow: per-edge resolved policies,
+    per-stage multi-input digest-hint structure, prefetch/speculation
+    directives, and the (cycle-checked) topological order."""
+    workflow: str
+    order: Tuple[str, ...]
+    stages: Mapping[str, StagePlan]
+    default: DataPolicy = field(default_factory=DataPolicy)
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", MappingProxyType(dict(self.stages)))
+
+    def edge_policy(self, src: Optional[str], dst: str) -> DataPolicy:
+        return self.stages[dst].edge_policy(src)
+
+    def uniform(self) -> Optional[DataPolicy]:
+        """The single policy every edge resolves to, or None if mixed.
+        (The legacy-kwargs shim compiles to a uniform plan by construction —
+        the back-compat tests assert exactly this.)"""
+        policies = {e.policy for sp in self.stages.values()
+                    for e in sp.in_edges}
+        return policies.pop() if len(policies) == 1 else None
+
+    def label(self) -> str:
+        """Storage label for traces: the uniform strategy, or ``mixed``."""
+        strategies = {e.policy.strategy for sp in self.stages.values()
+                      for e in sp.in_edges}
+        return strategies.pop() if len(strategies) == 1 else "mixed"
+
+    def describe(self) -> str:
+        lines = [f"plan {self.workflow!r} ({len(self.stages)} stages, "
+                 f"label={self.label()})"]
+        for name in self.order:
+            sp = self.stages[name]
+            t = sp.transport
+            lines.append(
+                f"  {name}: deps={list(sp.deps)} strategy={t.strategy} "
+                f"stream={t.stream} dedup={t.dedup} "
+                f"compression={t.compression} prefetch={t.prefetch} "
+                f"speculation={t.speculation} hint_deps={list(sp.hint_deps)} "
+                f"seed_output={sp.seed_output}")
+        return "\n".join(lines)
+
+
+class Planner:
+    def __init__(self, default: Optional[DataPolicy] = None):
+        self.default = default or DataPolicy()
+
+    def compile(self, wf) -> ExecutionPlan:
+        """Compile ``wf`` (a :class:`~repro.runtime.workflow.Workflow`,
+        hand-built or from :class:`WorkflowBuilder`). Raises
+        :class:`WorkflowCycleError` on cyclic deps, :class:`PlanError` on
+        incoherent policies."""
+        order = tuple(wf.topo_order())          # raises on cycles
+        wf_default = getattr(wf, "default_policy", None) or self.default
+
+        def edge_pol(src: Optional[str], dst: str) -> DataPolicy:
+            st = wf.stages[dst]
+            if src is not None:
+                pol = getattr(st, "dep_policies", None) or {}
+                if src in pol:
+                    return pol[src]
+            stage_pol = getattr(st, "policy", None)
+            return stage_pol if stage_pol is not None else wf_default
+
+        stages = {}
+        for name in order:
+            st = wf.stages[name]
+            deps = tuple(st.deps)
+            if deps:
+                in_edges = tuple(EdgePlan(d, name, edge_pol(d, name))
+                                 for d in deps)
+            else:
+                in_edges = (EdgePlan(None, name, edge_pol(None, name)),)
+            stages[name] = StagePlan(
+                name=name, deps=deps,
+                transport=self._merge(name, in_edges),
+                in_edges=in_edges,
+                hint_deps=tuple(e.src for e in in_edges
+                                if e.src is not None and e.policy.dedup))
+        # second pass: a stage seeds its output iff some consumer edge dedups
+        for name in order:
+            consumers = [e for sp in stages.values() for e in sp.in_edges
+                         if e.src == name]
+            if any(e.policy.dedup for e in consumers):
+                sp = stages[name]
+                stages[name] = StagePlan(
+                    name=sp.name, deps=sp.deps, transport=sp.transport,
+                    in_edges=sp.in_edges, hint_deps=sp.hint_deps,
+                    seed_output=True)
+        return ExecutionPlan(workflow=wf.name, order=order, stages=stages,
+                             default=wf_default)
+
+    @staticmethod
+    def _merge(name: str, in_edges: Tuple[EdgePlan, ...]) -> DataPolicy:
+        """Merge a stage's in-edge policies into the transport policy for
+        its (joined) input. Strategies must agree — the stage's input has
+        exactly one home in flight."""
+        pols = [e.policy for e in in_edges]
+        strategies = sorted({p.strategy for p in pols})
+        if len(strategies) > 1:
+            raise PlanError(
+                f"stage {name!r}: in-edges declare conflicting strategies "
+                f"{strategies}; a stage's input has one transport — set a "
+                f"stage-level policy or align the edge policies")
+        codecs = sorted({p.compression for p in pols} - {"none"})
+        if len(codecs) > 1:
+            raise PlanError(
+                f"stage {name!r}: in-edges declare conflicting compression "
+                f"codecs {codecs}; the stage's transport uses one wire "
+                f"codec — align the edge policies")
+        # locality_weight: None means "no opinion — scheduler default".
+        # Positive overrides win by max; an explicit 0 (disable) only
+        # sticks when EVERY edge says 0 — one edge opting out must not
+        # silently strip the default credit the other edges rely on.
+        weights = [p.locality_weight for p in pols
+                   if p.locality_weight is not None]
+        if any(w > 0 for w in weights):
+            weight = max(weights)
+        elif weights and len(weights) == len(pols):
+            weight = 0.0
+        else:
+            weight = None
+        merged = DataPolicy(
+            strategy=strategies[0],
+            stream=any(p.stream for p in pols),
+            dedup=any(p.dedup for p in pols),
+            compression=codecs[0] if codecs else "none",
+            locality_weight=weight,
+            speculation=max(p.speculation for p in pols))
+        if any(p.prefetch for p in pols):
+            # after the merge: prefetch requires dedup (DataPolicy enforces
+            # it per edge, so the OR-ed transport has dedup=True here)
+            merged = merged.but(prefetch=True)
+        return merged
+
+
+__all__ = ["EdgePlan", "ExecutionPlan", "Planner", "PlanError", "StagePlan",
+           "WorkflowCycleError"]

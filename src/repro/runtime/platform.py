@@ -48,9 +48,14 @@ class Platform:
     def invoke_async(self, request: Request, *,
                      lightweight_trigger: bool = False,
                      record: Optional[LifecycleRecord] = None,
+                     hint: Optional[PlacementHint] = None,
                      ) -> Tuple[Future, LifecycleRecord]:
         """Accept a request; returns (future, record). ``lightweight_trigger``
-        marks a Truffle reference-key event (no payload through the ingress)."""
+        marks a Truffle reference-key event (no payload through the ingress).
+        ``hint`` carries the execution plan's placement directives (per-dep
+        digests, locality-weight override, prefetch, avoid-node) straight to
+        the scheduler; without one it is derived from the request's content
+        ref and meta (``PlacementHint.from_request``)."""
         clock = self.cluster.clock
         rec = record or LifecycleRecord(fn=request.fn)
         if not rec.t_request:
@@ -61,7 +66,7 @@ class Platform:
         def run():
             try:
                 fut.set_result(self._invoke(request, rec, inv_id,
-                                            lightweight_trigger))
+                                            lightweight_trigger, hint))
             except BaseException as e:  # noqa: BLE001
                 fut.set_exception(e)
 
@@ -75,7 +80,8 @@ class Platform:
 
     # ----------------------------------------------------------- internals
     def _invoke(self, request: Request, rec: LifecycleRecord, inv_id: str,
-                lightweight: bool) -> bytes:
+                lightweight: bool,
+                hint: Optional[PlacementHint] = None) -> bytes:
         clock = self.cluster.clock
         spec = self._specs[request.fn]
         clock.sleep(self.REF_TRIGGER_OVERHEAD_S if lightweight
@@ -93,7 +99,9 @@ class Platform:
                 "invocation": inv_id, "warm": True, "t": clock.now()})
         else:
             node = self.cluster.scheduler.schedule(
-                spec, inv_id, hint=PlacementHint.from_request(request),
+                spec, inv_id,
+                hint=(hint if hint is not None
+                      else PlacementHint.from_request(request)),
                 record=rec)
             scheduled_node = node.name
             rec.t_placed = clock.now()

@@ -1,0 +1,199 @@
+"""Per-edge data-passing policy + fluent workflow builder.
+
+Truffle's gains come from matching the data-passing mechanism to each hop
+of the workflow: SDP on cold starts, CSP between functions, direct/kvs/s3
+per tier, dedup on fan-out hops, chunk streaming + compression on WAN hops.
+A :class:`DataPolicy` declares that choice at data-flow granularity — it
+can be attached to a whole workflow (default), to a stage (all of its
+in-edges), or to a single edge — and the
+:class:`~repro.runtime.planner.Planner` compiles the result into an
+immutable :class:`~repro.runtime.planner.ExecutionPlan` that the runner,
+platform, scheduler, SDP, CSP and Data Engine consume instead of reading
+runner-global booleans.
+
+:class:`WorkflowBuilder` is the fluent construction surface::
+
+    b = WorkflowBuilder("fire", default_policy=DataPolicy(dedup=True))
+    b.stage("decode", decode_spec)
+    b.stage("resize", resize_spec).after("decode")
+    b.stage("upload", upload_spec).after(
+        "resize", policy=DataPolicy(stream=True, compression="lz4-like"))
+    wf = b.build()              # cycle-checked Workflow with edge policies
+
+Hand-built ``Stage``/``Workflow`` dicts keep working (the builder produces
+exactly those), as do the legacy ``WorkflowRunner(stream=, dedup=,
+storage=, straggler_factor=)`` kwargs — they construct a uniform default
+policy through the same Planner path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.errors import WorkflowCycleError
+
+STRATEGIES = ("direct", "kvs", "s3")
+COMPRESSIONS = ("none", "lz4-like")
+
+
+@dataclass(frozen=True)
+class DataPolicy:
+    """How one hop of the workflow passes its data.
+
+    Attributes
+    ----------
+    strategy:
+        Where the bytes live in flight: ``direct`` (CSP node-to-node pass),
+        ``kvs`` or ``s3`` (producer writes to the storage service, consumer
+        fetches — SDP prefetches it during the cold start).
+    stream:
+        Pipeline the transfer at chunk granularity so the consumer starts
+        at first-chunk arrival (vs. whole-blob last-byte).
+    dedup:
+        Content-address the edge's bytes (BLAKE2b). Fan-out inputs alias
+        the already-resident chunks, the digest feeds the locality-aware
+        scheduler, and fan-in stages carry one digest hint per dep.
+    compression:
+        ``lz4-like`` compresses chunks on the wire (WAN edges are
+        bandwidth-bound; a LAN edge usually shouldn't pay the codec).
+    locality_weight:
+        Override of the scheduler's locality weight for placements this
+        edge hints (None = scheduler default; 0 disables locality).
+    prefetch:
+        Registry-driven prefetch: when the scheduler places *off* the data
+        (load skew), it kicks the relay at placement-decision time instead
+        of waiting for the data path to react to the trigger.
+    speculation:
+        Straggler factor: re-dispatch the stage when it exceeds this
+        multiple of its predicted time (0 = off). The backup attempt is
+        steered to a different node than the straggler.
+    """
+
+    strategy: str = "direct"
+    stream: bool = False
+    dedup: bool = False
+    compression: str = "none"
+    locality_weight: Optional[float] = None
+    prefetch: bool = False
+    speculation: float = 0.0
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}, "
+                             f"got {self.strategy!r}")
+        if self.compression not in COMPRESSIONS:
+            raise ValueError(f"compression must be one of {COMPRESSIONS}, "
+                             f"got {self.compression!r}")
+        if self.speculation < 0:
+            raise ValueError(f"speculation must be >= 0, "
+                             f"got {self.speculation!r}")
+        if self.locality_weight is not None and self.locality_weight < 0:
+            raise ValueError(f"locality_weight must be >= 0 or None, "
+                             f"got {self.locality_weight!r}")
+        if self.prefetch and not self.dedup:
+            raise ValueError(
+                "prefetch is registry-driven: it relays content the "
+                "DigestRegistry can resolve, so it requires dedup=True "
+                "(without a digest the hint is empty and the kick would "
+                "silently never fire)")
+
+    def but(self, **changes) -> "DataPolicy":
+        """A copy with ``changes`` applied — derive an edge policy from a
+        stage/workflow default: ``pol.but(compression="lz4-like")``."""
+        return dataclasses.replace(self, **changes)
+
+
+class _StageBuilder:
+    """Fluent handle returned by :meth:`WorkflowBuilder.stage`."""
+
+    def __init__(self, builder: "WorkflowBuilder", name: str):
+        self._builder = builder
+        self.name = name
+
+    def after(self, *deps: str,
+              policy: Optional[DataPolicy] = None) -> "_StageBuilder":
+        """Declare dependencies; ``policy`` applies to each (dep -> this)
+        edge and overrides the stage/workflow defaults for those edges."""
+        for dep in deps:
+            self._builder._add_edge(dep, self.name, policy)
+        return self
+
+    def policy(self, policy: DataPolicy) -> "_StageBuilder":
+        """Set this stage's default policy (all in-edges without their own
+        edge policy)."""
+        self._builder._stage_policies[self.name] = policy
+        return self
+
+
+class WorkflowBuilder:
+    def __init__(self, name: str,
+                 default_policy: Optional[DataPolicy] = None):
+        self.name = name
+        self.default_policy = default_policy
+        self._specs: Dict[str, object] = {}           # name -> FunctionSpec
+        self._deps: Dict[str, List[str]] = {}
+        self._edge_policies: Dict[Tuple[str, str], DataPolicy] = {}
+        self._stage_policies: Dict[str, DataPolicy] = {}
+
+    # ------------------------------------------------------------ declaring
+    def stage(self, name: str, spec,
+              policy: Optional[DataPolicy] = None) -> _StageBuilder:
+        if name in self._specs:
+            raise ValueError(f"duplicate stage {name!r} in workflow "
+                             f"{self.name!r}")
+        self._specs[name] = spec
+        self._deps[name] = []
+        if policy is not None:
+            self._stage_policies[name] = policy
+        return _StageBuilder(self, name)
+
+    def edge(self, src: str, dst: str,
+             policy: Optional[DataPolicy] = None) -> "WorkflowBuilder":
+        """Non-fluent spelling of ``stage(dst).after(src, policy=...)`` for
+        programmatic DAG construction."""
+        self._add_edge(src, dst, policy)
+        return self
+
+    def _add_edge(self, src: str, dst: str,
+                  policy: Optional[DataPolicy]) -> None:
+        if dst not in self._deps:
+            raise KeyError(f"stage {dst!r} not declared")
+        if src in self._deps[dst]:
+            raise ValueError(f"duplicate edge {src!r} -> {dst!r}")
+        self._deps[dst].append(src)
+        if policy is not None:
+            self._edge_policies[(src, dst)] = policy
+
+    # ------------------------------------------------------------- building
+    def build(self):
+        """Validate (unknown deps, cycles) and produce a
+        :class:`~repro.runtime.workflow.Workflow` carrying the per-stage /
+        per-edge policies. Raises :class:`WorkflowCycleError` on a cycle."""
+        from repro.runtime.workflow import Stage, Workflow
+
+        unknown = sorted({d for deps in self._deps.values() for d in deps
+                          if d not in self._specs})
+        if unknown:
+            raise KeyError(f"workflow {self.name!r}: stages depend on "
+                           f"undeclared stage(s) {unknown}")
+        stages = {
+            name: Stage(spec, deps=list(self._deps[name]),
+                        policy=self._stage_policies.get(name),
+                        dep_policies={src: pol for (src, dst), pol
+                                      in self._edge_policies.items()
+                                      if dst == name})
+            for name, spec in self._specs.items()}
+        wf = Workflow(self.name, stages, default_policy=self.default_policy)
+        wf.topo_order()                 # raises WorkflowCycleError on cycles
+        return wf
+
+    def plan(self, default: Optional[DataPolicy] = None):
+        """Build and compile in one step (convenience)."""
+        from repro.runtime.planner import Planner
+        return Planner(default=default or self.default_policy).compile(
+            self.build())
+
+
+__all__ = ["DataPolicy", "WorkflowBuilder", "WorkflowCycleError",
+           "STRATEGIES", "COMPRESSIONS"]

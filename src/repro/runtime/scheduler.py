@@ -3,14 +3,22 @@ events on the bus — the Truffle Watcher's entire CSP mechanism hangs off
 the fact that the host is known HERE, long before the sandbox is up.
 
 Locality-aware placement: a request carrying a :class:`PlacementHint`
-(digest + size of its input, threaded down from ``Request.content_ref``)
-is scored against the cluster-wide :class:`~repro.runtime.registry.
-DigestRegistry` — a node already holding the input's bytes gets a load
-credit of ``locality_weight × resident_fraction``, so fan-out stages and
-repeated inputs land *on the data* and the CSP/SDP transfer degenerates to
-a zero-cost local alias. Load skew still wins once it exceeds the credit
-(``locality_weight`` load units for a fully resident input); affinity pins
-override everything.
+(one ``(digest, size)`` per input — fan-in stages hint each dep
+separately) is scored against the cluster-wide
+:class:`~repro.runtime.registry.DigestRegistry` — a node holding input
+bytes gets a load credit of ``weight × resident_fraction``, where the
+fraction is the size-weighted SUM over all hinted inputs. Fan-out stages
+and repeated inputs land *on the data* and the CSP/SDP transfer
+degenerates to a zero-cost local alias; a fan-in stage lands on the node
+holding the biggest share of its inputs. Load skew still wins once it
+exceeds the credit; affinity pins override everything.
+
+The hint also carries the compiled :class:`~repro.runtime.planner.
+ExecutionPlan`'s per-edge directives for this placement:
+``weight`` (a per-edge ``DataPolicy.locality_weight`` override),
+``prefetch`` (registry-driven: placing OFF the data kicks the relay at
+placement-decision time, not at trigger time), and ``avoid`` (speculative
+backups steer away from the straggler's node for failure independence).
 
 Knobs: ``scheduling_s`` (α, the activator + kube-scheduler path) and
 ``locality_weight`` (load units a fully resident input is worth; 0 disables
@@ -20,29 +28,87 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.runtime.function import FunctionSpec, Request
-from repro.runtime.registry import DigestRegistry
 
 
 @dataclass(frozen=True)
 class PlacementHint:
-    """Where-the-bytes-live hint for one placement decision."""
+    """Where-the-bytes-live (and how-to-place) hint for one decision.
+
+    ``digest``/``size`` is the legacy single-input form; ``inputs`` is the
+    per-dep form (((digest, size), ...)). ``input_hints()`` canonicalizes.
+    """
     digest: Optional[str] = None
     size: int = 0
+    inputs: Optional[Tuple[Tuple[str, int], ...]] = None
+    weight: Optional[float] = None        # per-edge locality_weight override
+    prefetch: bool = False                # kick relay at placement decision
+    compression: str = "none"             # wire codec for a prefetch relay
+    avoid: Optional[str] = None           # steer off this node (speculation)
+
+    def input_hints(self) -> Tuple[Tuple[str, int], ...]:
+        if self.inputs:
+            return tuple((d, s) for d, s in self.inputs if d is not None)
+        if self.digest is not None:
+            return ((self.digest, self.size),)
+        return ()
+
+    @classmethod
+    def from_policy(cls, policy, digest: Optional[str], size: int,
+                    inputs, avoid: Optional[str]) -> Optional["PlacementHint"]:
+        """The compiled plan's placement directives for one edge — the ONE
+        construction CSP and SDP share (the two paths must not diverge).
+
+        ``digest`` content-addresses the bytes the data path will actually
+        ship/land (for a fan-in pass: the JOINED blob, seeded on the source
+        node); ``inputs`` are the per-dep hints. Both signals matter: the
+        per-dep digests credit nodes holding parts, and the joined digest
+        credits the source node where placement degenerates to a
+        zero-transfer alias — so the joined pair is appended to ``inputs``
+        rather than replaced by them."""
+        if inputs is not None and digest is not None \
+                and all(d != digest for d, _ in inputs):
+            inputs = tuple(inputs) + ((digest, size),)
+        elif inputs is None and digest is not None:
+            inputs = ((digest, size),)
+        if inputs is None and avoid is None and not policy.prefetch \
+                and policy.locality_weight is None:
+            return None
+        return cls(digest=digest, size=size, inputs=inputs,
+                   weight=policy.locality_weight, prefetch=policy.prefetch,
+                   compression=policy.compression, avoid=avoid)
 
     @classmethod
     def from_request(cls, request: Request) -> Optional["PlacementHint"]:
-        """Hint from the request's content ref; None when the input carries
-        no digest (nothing for locality to match on)."""
+        """Hint from the request's content ref + meta; None when there is
+        nothing to score or steer on."""
         ref = request.content_ref
-        if ref is None or ref.digest is None:
+        meta = request.meta or {}
+        inputs = None
+        if ref is not None:
+            if ref.inputs:
+                inputs = tuple((d, s) for d, s in ref.inputs
+                               if d is not None) or None
+            elif ref.digest is not None:
+                inputs = ((ref.digest, ref.size),)
+        avoid = meta.get("avoid_node")
+        weight = meta.get("locality_weight")
+        prefetch = bool(meta.get("prefetch"))
+        if inputs is None and avoid is None and weight is None \
+                and not prefetch:
             return None
-        return cls(digest=ref.digest, size=ref.size)
+        first = inputs[0] if inputs else (None, 0)
+        return cls(digest=first[0], size=first[1], inputs=inputs,
+                   weight=weight, prefetch=prefetch, avoid=avoid)
 
 
 class Scheduler:
+    #: load penalty for a hint's ``avoid`` node — large enough that any
+    #: other node wins, finite so a single-node cluster still places
+    AVOID_PENALTY = 1e6
+
     def __init__(self, cluster, scheduling_s: float = 0.15,
                  locality_weight: float = 2.0):
         self.cluster = cluster
@@ -50,14 +116,15 @@ class Scheduler:
         self.locality_weight = locality_weight
         self._lock = threading.Lock()
         self._load: Dict[str, int] = {}
-        self.stats = {"placements": 0, "locality_hits": 0}
+        self.stats = {"placements": 0, "locality_hits": 0, "prefetch_kicks": 0}
 
     def schedule(self, spec: FunctionSpec, invocation_id: str,
                  hint: Optional[PlacementHint] = None, record=None):
         """Blocks for α, picks a node, publishes the placement event.
 
-        ``hint`` enables digest-aware scoring; ``record`` (a
-        LifecycleRecord) gets ``locality_hit`` stamped with the decision.
+        ``hint`` enables digest-aware scoring (plus weight/avoid/prefetch
+        directives from the execution plan); ``record`` (a
+        LifecycleRecord) gets ``locality_hit``/``prefetched`` stamped.
         """
         clock = self.cluster.clock
         clock.sleep(self.scheduling_s)
@@ -65,13 +132,14 @@ class Scheduler:
         node = self._pick(spec, hint, holders)
         # report from the SAME snapshot the decision scored — a second
         # registry read here could disagree with the placement it describes
-        resident = holders.get(node.name, 0)
+        resident = sum(holders.get(d, {}).get(node.name, 0)
+                       for d, _ in (hint.input_hints() if hint else ()))
         # a hit means locality scoring PLACED us on the data — coincidental
         # residency under an affinity pin or with locality disabled is not
         # one (keeps the load-only control runs honest)
-        scored = (hint is not None and not spec.affinity
-                  and self.locality_weight > 0)
-        locality_hit = scored and resident > 0
+        scored = (hint is not None and hint.input_hints()
+                  and not spec.affinity and self._weight(hint) > 0)
+        locality_hit = bool(scored and resident > 0)
         with self._lock:
             self._load[node.name] = self._load.get(node.name, 0) + 1
             self.stats["placements"] += 1
@@ -79,23 +147,59 @@ class Scheduler:
                 self.stats["locality_hits"] += 1
         if record is not None:
             record.locality_hit = locality_hit
+        # registry-driven prefetch: placing OFF (part of) the data under
+        # load skew kicks the relay NOW, at the placement decision, instead
+        # of when the data path reacts to the trigger. Kicked before the
+        # event publishes so the prefetch leads the relay table and the
+        # CSP/SDP ship becomes its follower (bytes cross the fabric once).
+        prefetched = False
+        if hint is not None and hint.prefetch:
+            prefetched = self._kick_prefetch(hint, node.name, holders)
+        if record is not None:
+            record.prefetched = prefetched
         self.cluster.bus.publish("scheduling.placed", {
             "function": spec.name, "node": node.name,
             "invocation": invocation_id, "t": clock.now(),
             "locality_hit": locality_hit, "resident_bytes": resident,
+            "prefetched": prefetched,
         })
         return node
 
-    def _holders(self, hint: Optional[PlacementHint]) -> Dict[str, int]:
-        """One registry snapshot per placement: {node: resident_bytes}."""
+    def _weight(self, hint: Optional[PlacementHint]) -> float:
+        if hint is not None and hint.weight is not None:
+            return hint.weight
+        return self.locality_weight
+
+    def _holders(self, hint: Optional[PlacementHint]
+                 ) -> Dict[str, Dict[str, int]]:
+        """One registry snapshot per placement:
+        {digest: {node: resident_bytes}} over every hinted input."""
         registry = getattr(self.cluster, "digests", None)
         if hint is None or registry is None:
             return {}
-        return registry.nodes_for(hint.digest)
+        return {d: registry.nodes_for(d) for d, _ in hint.input_hints()}
+
+    @staticmethod
+    def _resident_fraction(node_name: str, hint: PlacementHint,
+                           holders: Dict[str, Dict[str, int]]) -> float:
+        """Size-weighted resident fraction across ALL hinted inputs — the
+        ONE definition scoring and reporting share. A fan-in stage is
+        scored on the sum of its resident inputs; all-zero-size hints
+        count as fully resident when any bytes resolve."""
+        pairs = hint.input_hints()
+        if not pairs:
+            return 0.0
+        total = sum(s for _, s in pairs)
+        if total <= 0:
+            return 1.0 if any(holders.get(d, {}).get(node_name, 0) > 0
+                              for d, _ in pairs) else 0.0
+        res = sum(min(holders.get(d, {}).get(node_name, 0), max(s, 0))
+                  for d, s in pairs)
+        return res / total
 
     def _pick(self, spec: FunctionSpec,
               hint: Optional[PlacementHint] = None,
-              holders: Optional[Dict[str, int]] = None):
+              holders: Optional[Dict[str, Dict[str, int]]] = None):
         nodes = self.cluster.node_list
         if spec.affinity:
             for n in nodes:
@@ -108,12 +212,35 @@ class Scheduler:
             def score(n) -> float:
                 load = float(self._load.get(n.name, 0))
                 if hint is not None:
-                    load -= self.locality_weight * DigestRegistry.fraction(
-                        holders.get(n.name, 0), hint.size)
+                    w = self._weight(hint)
+                    if w > 0:
+                        load -= w * self._resident_fraction(n.name, hint,
+                                                            holders)
+                    if hint.avoid == n.name:
+                        load += self.AVOID_PENALTY
                 return load
             # min() is stable: ties keep the node_list order, so behavior
             # without hints is exactly the old least-loaded placement
             return min(nodes, key=score)
+
+    def _kick_prefetch(self, hint: PlacementHint, node_name: str,
+                       holders: Dict[str, Dict[str, int]]) -> bool:
+        """Relay ONLY ``hint.digest`` — the content the data path will ship
+        and alias-check (for a fan-in pass, the joined blob). Relaying
+        per-dep parts would be pure extra fabric traffic: the ship is keyed
+        on the joined digest and could never follow or alias them."""
+        prefetcher = getattr(self.cluster, "prefetcher", None)
+        if prefetcher is None or hint.digest is None:
+            return False
+        nodes = holders.get(hint.digest, {})
+        if nodes.get(node_name, 0) >= max(hint.size, 1):
+            return False                      # (fully) resident already
+        kicked = prefetcher.kick(hint.digest, node_name,
+                                 compression=hint.compression)
+        if kicked:
+            with self._lock:
+                self.stats["prefetch_kicks"] += 1
+        return kicked
 
     def release(self, node_name: str) -> None:
         with self._lock:

@@ -5,16 +5,27 @@ Video Analytics with fan-out/fan-in) under four data-passing strategies:
   baseline x {direct, kvs, s3}  — sequential lifecycle (Fig. 2)
   truffle  x {direct, kvs, s3}  — SDP/CSP overlap (Figs. 5/6)
 
-Also provides speculative straggler mitigation: a stage exceeding
-``straggler_factor`` x its predicted time is re-dispatched and the first
-finisher wins (duplicate results are idempotent by construction here).
+The data plane is configured at DATA-FLOW granularity: every edge of the
+DAG resolves to a :class:`~repro.runtime.policy.DataPolicy` (strategy /
+stream / dedup / compression / locality_weight / prefetch / speculation),
+and the :class:`~repro.runtime.planner.Planner` compiles workflow +
+policies into an immutable :class:`~repro.runtime.planner.ExecutionPlan`
+that this runner dispatches from — a WAN hop can compress while a fan-out
+hop dedups, and a fan-in stage hints one digest PER DEP so the scheduler
+scores the sum of its resident inputs. Build workflows with
+:class:`~repro.runtime.policy.WorkflowBuilder` (or hand-built
+``Stage``/``Workflow`` dicts, which still work).
 
-Data-plane knobs (truffle mode): ``stream=True`` pipelines stage-to-stage
-transfers at chunk granularity; ``dedup=True`` content-addresses stage
-outputs so identical fan-out inputs alias the target buffer instead of
-re-shipping — and propagates each stage input's digest on its ContentRef,
-so the locality-aware scheduler can place downstream stages on the node
-already holding their bytes. Defaults keep the whole-blob behavior."""
+Back-compat shim: the legacy ``WorkflowRunner(stream=, dedup=, storage=,
+straggler_factor=)`` kwargs construct a uniform default policy and compile
+through the same Planner — every pre-existing call site behaves exactly as
+before.
+
+Speculative straggler mitigation: a stage exceeding its policy's
+``speculation`` factor x its predicted time is re-dispatched; the backup
+attempt carries an ``avoid`` hint for the straggler's node (failure
+independence), and the first finisher wins (duplicate results are
+idempotent by construction here)."""
 from __future__ import annotations
 
 import threading
@@ -24,34 +35,56 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.buffer import content_digest
+from repro.core.errors import PlanError, WorkflowCycleError
 from repro.core.model import PhaseEstimate, baseline_time, truffle_time
+from repro.core.transfer import publish_content
 from repro.runtime.function import ContentRef, FunctionSpec, LifecycleRecord, Request
+from repro.runtime.planner import ExecutionPlan, Planner, StagePlan
+from repro.runtime.policy import DataPolicy
 
 
 @dataclass
 class Stage:
     spec: FunctionSpec
     deps: List[str] = field(default_factory=list)
+    #: stage-level policy: default for every in-edge of this stage
+    policy: Optional[DataPolicy] = None
+    #: per-edge overrides: {dep name -> policy for the (dep -> this) edge}
+    dep_policies: Dict[str, DataPolicy] = field(default_factory=dict)
 
 
 @dataclass
 class Workflow:
     name: str
     stages: Dict[str, Stage]
+    #: workflow-level default policy (stage/edge policies override it)
+    default_policy: Optional[DataPolicy] = None
 
     def topo_order(self) -> List[str]:
-        order, seen = [], set()
+        """Dependency-respecting order. Raises
+        :class:`~repro.core.errors.WorkflowCycleError` (naming the cycle)
+        on cyclic deps instead of recursing forever, and ``KeyError`` on a
+        dep that names no stage."""
+        order: List[str] = []
+        state: Dict[str, int] = {}       # 1 = on the current DFS path, 2 = done
 
-        def visit(n):
-            if n in seen:
+        def visit(n: str, path: Tuple[str, ...]) -> None:
+            if state.get(n) == 2:
                 return
+            if state.get(n) == 1:
+                cycle = path[path.index(n):] + (n,)
+                raise WorkflowCycleError(cycle)
+            if n not in self.stages:
+                raise KeyError(f"workflow {self.name!r}: dep {n!r} names no "
+                               f"stage (have: {sorted(self.stages)})")
+            state[n] = 1
             for d in self.stages[n].deps:
-                visit(d)
-            seen.add(n)
+                visit(d, path + (n,))
+            state[n] = 2
             order.append(n)
 
         for n in self.stages:
-            visit(n)
+            visit(n, ())
         return order
 
     def roots(self) -> List[str]:
@@ -65,13 +98,14 @@ class StageResult:
     record: LifecycleRecord
     put_s: float = 0.0            # storage write time (kvs/s3 passing)
     speculated: bool = False
+    digest: Optional[str] = None  # output content address (seed_output plans)
 
 
 @dataclass
 class WorkflowTrace:
     workflow: str
     mode: str                     # baseline | truffle
-    storage: str                  # direct | kvs | s3
+    storage: str                  # direct | kvs | s3 | mixed (plan label)
     stages: Dict[str, StageResult] = field(default_factory=dict)
     t_start: float = 0.0
     t_end: float = 0.0
@@ -96,26 +130,48 @@ class WorkflowTrace:
 
 
 class WorkflowRunner:
-    def __init__(self, cluster, *, use_truffle: bool, storage: str = "direct",
+    def __init__(self, cluster, *, use_truffle: bool = True,
+                 plan: Optional[ExecutionPlan] = None,
+                 policy: Optional[DataPolicy] = None,
+                 storage: str = "direct",
                  straggler_factor: float = 0.0, prewarm_roots: bool = False,
                  estimates: Optional[Dict[str, PhaseEstimate]] = None,
                  stream: bool = False, dedup: bool = False):
+        """``policy`` (or a precompiled ``plan``) is the native surface.
+        The legacy runner-global knobs — ``storage``/``stream``/``dedup``/
+        ``straggler_factor`` — are a back-compat shim: they construct the
+        equivalent uniform :class:`DataPolicy` and compile through the same
+        Planner, so old call sites keep their exact behavior."""
         self.cluster = cluster
         self.use_truffle = use_truffle
-        self.storage = storage
-        self.straggler_factor = straggler_factor
         self.prewarm_roots = prewarm_roots
         self.estimates = estimates or {}
-        # chunked-streaming data plane knobs (truffle mode only): stream
-        # pipelines transfers at chunk granularity, dedup content-addresses
-        # stage outputs so fan-out inputs alias instead of re-shipping
-        self.stream = stream
-        self.dedup = dedup
+        if policy is None:
+            policy = DataPolicy(strategy=storage, stream=stream, dedup=dedup,
+                                speculation=straggler_factor)
+        self.default_policy = policy
+        self.plan = plan
+        # legacy mirrors (kept readable for old call sites; the data plane
+        # itself consumes the compiled ExecutionPlan, never these)
+        self.storage = policy.strategy
+        self.stream = policy.stream
+        self.dedup = policy.dedup
+        self.straggler_factor = policy.speculation
+
+    def compile(self, wf: Workflow) -> ExecutionPlan:
+        """Compile ``wf`` against this runner's default policy."""
+        return Planner(default=self.default_policy).compile(wf)
 
     # ------------------------------------------------------------------ run
     def run(self, wf: Workflow, input_data: bytes,
-            source_node: str = None) -> WorkflowTrace:
+            source_node: str = None,
+            plan: Optional[ExecutionPlan] = None) -> WorkflowTrace:
         cluster = self.cluster
+        plan = plan or self.plan or self.compile(wf)
+        if set(plan.stages) != set(wf.stages):
+            raise PlanError(f"plan {plan.workflow!r} does not cover workflow "
+                            f"{wf.name!r}: plan stages {sorted(plan.stages)} "
+                            f"!= workflow stages {sorted(wf.stages)}")
         for st in wf.stages.values():
             cluster.platform.register(st.spec)
         source_node = source_node or cluster.node_list[0].name
@@ -127,7 +183,7 @@ class WorkflowRunner:
                                                 payload=b"",
                                                 source_node=source_node))
         trace = WorkflowTrace(wf.name, "truffle" if self.use_truffle else "baseline",
-                              self.storage)
+                              plan.label())
         trace.t_start = cluster.clock.now()
 
         results: Dict[str, StageResult] = {}
@@ -135,18 +191,24 @@ class WorkflowRunner:
         done_cv = threading.Condition(lock)
         errbox: List[BaseException] = []
 
-        def stage_input(name: str) -> Tuple[bytes, str]:
-            st = wf.stages[name]
-            if not st.deps:
-                return input_data, source_node
-            outs = [results[d].output for d in st.deps]
-            src = results[st.deps[-1]].record.node or source_node
-            return b"".join(outs), src
+        def stage_input(name: str) -> Tuple[bytes, str, tuple]:
+            sp = plan.stages[name]
+            if not sp.deps:
+                return input_data, source_node, ()
+            outs = [results[d].output for d in sp.deps]
+            src = results[sp.deps[-1]].record.node or source_node
+            hints = tuple((results[d].digest, len(results[d].output))
+                          for d in sp.hint_deps
+                          if results[d].digest is not None)
+            # single dep: hand the output through without a join copy
+            return (outs[0] if len(outs) == 1 else b"".join(outs)), src, hints
 
         def run_stage(name: str):
             try:
-                data, src = stage_input(name)
-                sr = self._dispatch(name, wf.stages[name], data, src)
+                data, src, hints = stage_input(name)
+                sr = self._dispatch(name, wf.stages[name].spec,
+                                    plan.stages[name], data, src, hints)
+                self._seed_output(plan.stages[name], sr)
                 with done_cv:
                     results[name] = sr
                     done_cv.notify_all()
@@ -155,14 +217,14 @@ class WorkflowRunner:
                     errbox.append(e)
                     done_cv.notify_all()
 
-        order = wf.topo_order()
+        order = plan.order
         started = set()
         with done_cv:
             while len(results) < len(order) and not errbox:
                 for name in order:
                     if name in started:
                         continue
-                    if all(d in results for d in wf.stages[name].deps):
+                    if all(d in results for d in plan.stages[name].deps):
                         started.add(name)
                         threading.Thread(target=run_stage, args=(name,),
                                          daemon=True).start()
@@ -174,15 +236,29 @@ class WorkflowRunner:
         trace.stages = results
         return trace
 
+    def _seed_output(self, sp: StagePlan, sr: StageResult) -> None:
+        """Content-address a stage's output and publish it on the node that
+        produced it (plan ``seed_output`` directive: some consumer edge
+        dedups). Downstream placement hints then score each dep's bytes
+        where they actually live — the multi-input fan-in hint."""
+        if not sp.seed_output or not self.use_truffle:
+            return
+        sr.digest = content_digest(sr.output)
+        node = self.cluster.nodes.get(sr.record.node)
+        if node is not None:
+            publish_content(node, sr.output, sr.digest)
+
     # ------------------------------------------------------- stage dispatch
-    def _dispatch(self, name: str, stage: Stage, data: bytes,
-                  source_node: str) -> StageResult:
-        def attempt() -> StageResult:
-            return self._invoke_once(name, stage, data, source_node)
+    def _dispatch(self, name: str, spec: FunctionSpec, sp: StagePlan,
+                  data: bytes, source_node: str,
+                  input_hints: tuple) -> StageResult:
+        def attempt(avoid: Optional[str] = None) -> StageResult:
+            return self._invoke_once(name, spec, sp, data, source_node,
+                                     input_hints, avoid=avoid)
 
         est = self.estimates.get(name)
-        if self.straggler_factor and est is not None:
-            budget = self.straggler_factor * (
+        if sp.transport.speculation and est is not None:
+            budget = sp.transport.speculation * (
                 truffle_time(est) if self.use_truffle else baseline_time(est))
             budget *= self.cluster.clock.scale      # sim -> wall seconds
             pool = ThreadPoolExecutor(max_workers=2)
@@ -191,7 +267,10 @@ class WorkflowRunner:
                 done, _ = wait([first], timeout=budget)
                 if done:
                     return first.result()
-                backup = pool.submit(attempt)    # speculative duplicate
+                # failure independence: steer the backup OFF the node the
+                # straggler was placed on (its placement event is on the bus
+                # even though the attempt itself is still stuck)
+                backup = pool.submit(attempt, self._placed_node(spec.name))
                 wait([first, backup], return_when=FIRST_COMPLETED)
                 # deterministic winner: the original attempt wins whenever it
                 # has finished (results are idempotent, and preferring it
@@ -208,39 +287,77 @@ class WorkflowRunner:
                 pool.shutdown(wait=False, cancel_futures=True)
         return attempt()
 
-    def _invoke_once(self, name: str, stage: Stage, data: bytes,
-                     source_node: str) -> StageResult:
-        cluster = self.cluster
-        fn = stage.spec.name
-        put_s = 0.0
+    def _placed_node(self, fn: str) -> Optional[str]:
+        """Node the straggling attempt landed on, from the scheduling event
+        stream (the attempt is stuck — its record isn't back yet)."""
+        for ev in reversed(self.cluster.bus.history("scheduling.placed")):
+            if ev["function"] == fn:
+                return ev["node"]
+        return None
 
-        if self.storage in ("kvs", "s3"):
+    @staticmethod
+    def _known_digest(pol: DataPolicy, data: bytes,
+                      input_hints: tuple) -> Optional[str]:
+        """The stage input's digest when an upstream seed already computed
+        it (single-dep stage: input IS the dep's output) — re-hashing tens
+        of MB per hop is pure waste on the dispatch path."""
+        if not pol.dedup:
+            return None
+        if len(input_hints) == 1 and input_hints[0][1] == len(data):
+            return input_hints[0][0]
+        return content_digest(data)
+
+    def _invoke_once(self, name: str, spec: FunctionSpec, sp: StagePlan,
+                     data: bytes, source_node: str, input_hints: tuple,
+                     avoid: Optional[str] = None) -> StageResult:
+        cluster = self.cluster
+        fn = spec.name
+        pol = sp.transport
+        put_s = 0.0
+        meta = {}
+        # baseline paths have no policy plumbing — the hint directives ride
+        # the request meta and PlacementHint.from_request picks them up
+        if avoid is not None:
+            meta["avoid_node"] = avoid
+        if pol.prefetch and self.use_truffle:
+            # a prefetch relay lands in Truffle buffers — meaningless (and
+            # wasted fabric) for the baseline's payload-carrying path
+            meta["prefetch"] = True
+        if pol.locality_weight is not None:
+            meta["locality_weight"] = pol.locality_weight
+
+        if pol.strategy in ("kvs", "s3"):
             # producer writes to the storage service first (both modes — the
             # storage flavor defines where the data lives; paper Fig. 9b/9c)
             key = f"{fn}/{uuid.uuid4().hex[:8]}"
             t0 = cluster.clock.now()
-            cluster.storage[self.storage].put(key, data)
+            cluster.storage[pol.strategy].put(key, data)
             put_s = cluster.clock.now() - t0
             # dedup: content-address the stage input so downstream placement
             # (and the target buffer's alias check) can see where it lives
-            digest = content_digest(data) if self.dedup else None
-            req = Request(fn=fn, content_ref=ContentRef(self.storage, key,
+            digest = self._known_digest(pol, data, input_hints)
+            req = Request(fn=fn, content_ref=ContentRef(pol.strategy, key,
                                                         len(data),
-                                                        digest=digest),
-                          source_node=source_node)
+                                                        digest=digest,
+                                                        inputs=(input_hints
+                                                                or None)),
+                          source_node=source_node, meta=meta)
             if self.use_truffle:
                 truffle = cluster.node(source_node).truffle
-                out, rec = truffle.handle_request(
-                    req, stream=self.stream, dedup=self.dedup)   # SDP
+                out, rec = truffle.handle_request(req, policy=pol,
+                                                  avoid=avoid)     # SDP
             else:
                 out, rec = cluster.platform.invoke(req)      # fetch after start
         else:  # direct
             if self.use_truffle:
                 truffle = cluster.node(source_node).truffle
                 out, rec = truffle.pass_data(
-                    fn, data, stream=self.stream, dedup=self.dedup)  # CSP
+                    fn, data, policy=pol, input_hints=input_hints or None,
+                    avoid=avoid,
+                    digest=self._known_digest(pol, data, input_hints))  # CSP
             else:
-                req = Request(fn=fn, payload=data, source_node=source_node)
+                req = Request(fn=fn, payload=data, source_node=source_node,
+                              meta=meta)
                 out, rec = cluster.platform.invoke(req)      # body held at ingress
 
         return StageResult(name=name, output=out, record=rec, put_s=put_s)

@@ -1,0 +1,620 @@
+"""Per-edge DataPolicy + compiled ExecutionPlan: builder fluency, cycle
+detection, planner resolution/merging, the legacy-kwargs back-compat shim,
+multi-input fan-in hints, registry-driven prefetch, WAN chunk compression,
+and speculative-backup failure independence."""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.core.buffer import content_digest
+from repro.core.errors import PlanError, WorkflowCycleError
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import ContentRef, FunctionSpec, Request
+from repro.runtime.planner import ExecutionPlan, Planner
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.scheduler import PlacementHint
+from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+MB = 1 << 20
+
+
+def _spec(name, **kw):
+    kw.setdefault("provision_s", 0.2)
+    kw.setdefault("startup_s", 0.05)
+    kw.setdefault("exec_s", 0.01)
+    return FunctionSpec(name, lambda d, inv: d, **kw)
+
+
+# ----------------------------------------------------------------- DataPolicy
+def test_policy_validation():
+    with pytest.raises(ValueError, match="strategy"):
+        DataPolicy(strategy="redis")
+    with pytest.raises(ValueError, match="compression"):
+        DataPolicy(compression="zstd")
+    with pytest.raises(ValueError, match="speculation"):
+        DataPolicy(speculation=-1.0)
+    with pytest.raises(ValueError, match="locality_weight"):
+        DataPolicy(locality_weight=-0.5)
+    with pytest.raises(ValueError, match="requires dedup"):
+        DataPolicy(prefetch=True)            # registry-driven: needs digests
+
+
+def test_policy_but_derives_and_is_frozen():
+    base = DataPolicy(dedup=True)
+    wan = base.but(stream=True, compression="lz4-like")
+    assert wan.dedup and wan.stream and wan.compression == "lz4-like"
+    assert base.stream is False                    # original untouched
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        base.stream = True
+
+
+# ------------------------------------------------------------ WorkflowBuilder
+def test_builder_fluent_build():
+    b = WorkflowBuilder("wf", default_policy=DataPolicy(dedup=True))
+    b.stage("a", _spec("a"))
+    b.stage("b", _spec("b"), policy=DataPolicy(stream=True)).after("a")
+    b.stage("c", _spec("c")).after("a").after(
+        "b", policy=DataPolicy(compression="lz4-like"))
+    wf = b.build()
+    assert wf.stages["c"].deps == ["a", "b"]
+    assert wf.stages["b"].policy == DataPolicy(stream=True)
+    assert wf.stages["c"].dep_policies["b"].compression == "lz4-like"
+    assert wf.default_policy == DataPolicy(dedup=True)
+
+
+def test_builder_rejects_duplicates_and_unknown_deps():
+    b = WorkflowBuilder("wf")
+    b.stage("a", _spec("a"))
+    with pytest.raises(ValueError, match="duplicate stage"):
+        b.stage("a", _spec("a2"))
+    with pytest.raises(KeyError, match="not declared"):
+        b.edge("a", "ghost")
+    b.stage("b", _spec("b")).after("missing")
+    with pytest.raises(KeyError, match="missing"):
+        b.build()
+
+
+def test_builder_detects_cycle_and_names_it():
+    b = WorkflowBuilder("cyclic")
+    b.stage("a", _spec("a"))
+    b.stage("b", _spec("b")).after("a")
+    b.stage("c", _spec("c")).after("b")
+    b.edge("c", "a")                                # closes a -> b -> c -> a
+    with pytest.raises(WorkflowCycleError) as ei:
+        b.build()
+    assert set(ei.value.cycle) >= {"a", "b", "c"}
+    assert "->" in str(ei.value)
+
+
+def test_topo_order_raises_on_cycle_instead_of_recursing():
+    """Satellite fix: a hand-built cyclic Workflow used to recurse forever
+    (RecursionError at best, hang at worst)."""
+    wf = Workflow("loop", {"x": Stage(_spec("x"), deps=["y"]),
+                           "y": Stage(_spec("y"), deps=["x"])})
+    with pytest.raises(WorkflowCycleError) as ei:
+        wf.topo_order()
+    assert set(ei.value.cycle) >= {"x", "y"}
+    with pytest.raises(WorkflowCycleError):
+        Planner().compile(wf)
+
+
+def test_self_cycle():
+    wf = Workflow("self", {"x": Stage(_spec("x"), deps=["x"])})
+    with pytest.raises(WorkflowCycleError) as ei:
+        wf.topo_order()
+    assert ei.value.cycle == ["x", "x"]
+
+
+# ------------------------------------------------------------------- Planner
+def test_planner_resolution_precedence():
+    edge_pol = DataPolicy(compression="lz4-like")
+    stage_pol = DataPolicy(stream=True)
+    wf_pol = DataPolicy(dedup=True)
+    b = WorkflowBuilder("prec", default_policy=wf_pol)
+    b.stage("a", _spec("a"))
+    b.stage("b", _spec("b"), policy=stage_pol).after("a")
+    b.stage("c", _spec("c")).after("b", policy=edge_pol)
+    plan = Planner(default=DataPolicy(strategy="kvs")).compile(b.build())
+    # edge policy > stage policy > workflow default > planner default
+    assert plan.edge_policy("b", "c") == edge_pol
+    assert plan.edge_policy("a", "b") == stage_pol
+    assert plan.edge_policy(None, "a") == wf_pol      # ingress: wf default
+    # planner default only applies when the workflow declares nothing
+    plain = Workflow("plain", {"x": Stage(_spec("x"))})
+    plan2 = Planner(default=DataPolicy(strategy="kvs")).compile(plain)
+    assert plan2.edge_policy(None, "x").strategy == "kvs"
+
+
+def test_planner_merges_fanin_transport_and_hints():
+    b = WorkflowBuilder("fanin")
+    b.stage("a", _spec("a"))
+    b.stage("b", _spec("b"))
+    b.stage("j", _spec("j")) \
+        .after("a", policy=DataPolicy(dedup=True, speculation=2.0)) \
+        .after("b", policy=DataPolicy(stream=True, compression="lz4-like"))
+    plan = b.plan()
+    sp = plan.stages["j"]
+    assert sp.transport.stream and sp.transport.dedup
+    assert sp.transport.compression == "lz4-like"
+    assert sp.transport.speculation == 2.0
+    assert sp.hint_deps == ("a",)           # only the dedup edge hints
+    assert plan.stages["a"].seed_output     # a consumer edge dedups
+    assert not plan.stages["b"].seed_output
+
+
+def test_planner_rejects_conflicting_codecs():
+    b = WorkflowBuilder("codecs")
+    b.stage("a", _spec("a"))
+    b.stage("b", _spec("b"))
+    b.stage("j", _spec("j")) \
+        .after("a", policy=DataPolicy(compression="lz4-like")) \
+        .after("b", policy=DataPolicy(compression="none"))
+    # none + a codec merges to the codec (one edge opting out is fine)
+    assert b.plan().stages["j"].transport.compression == "lz4-like"
+
+
+def test_planner_rejects_conflicting_strategies():
+    b = WorkflowBuilder("conflict")
+    b.stage("a", _spec("a"))
+    b.stage("b", _spec("b"))
+    b.stage("j", _spec("j")) \
+        .after("a", policy=DataPolicy(strategy="kvs")) \
+        .after("b", policy=DataPolicy(strategy="s3"))
+    with pytest.raises(PlanError, match="conflicting strategies"):
+        b.plan()
+
+
+def test_planner_weight_merge_rules():
+    from repro.runtime.planner import EdgePlan, Planner
+
+    def merged(*weights):
+        edges = tuple(EdgePlan(f"d{i}", "j",
+                               DataPolicy(locality_weight=w))
+                      for i, w in enumerate(weights))
+        return Planner._merge("j", edges).locality_weight
+
+    assert merged(None, None) is None        # everyone defers to scheduler
+    assert merged(3.0, None) == 3.0          # positive override wins
+    assert merged(0.0, 3.0) == 3.0
+    assert merged(0.0, 0.0) == 0.0           # unanimous disable sticks
+    # one edge disabling must NOT strip the default the other relies on
+    assert merged(0.0, None) is None
+
+
+def test_plan_is_immutable():
+    b = WorkflowBuilder("frozen")
+    b.stage("a", _spec("a"))
+    plan = b.plan()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.workflow = "other"
+    with pytest.raises(TypeError):
+        plan.stages["zzz"] = None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.stages["a"].transport = DataPolicy()
+
+
+# ------------------------------------------------- legacy-kwargs shim mapping
+@pytest.mark.parametrize(
+    "storage,stream,dedup,straggler",
+    list(itertools.product(["direct", "kvs", "s3"], [False, True],
+                           [False, True], [0.0, 2.5])))
+def test_legacy_kwargs_compile_to_uniform_plan(storage, stream, dedup,
+                                               straggler):
+    """Property: EVERY legacy WorkflowRunner kwargs combination maps to the
+    equivalent uniform ExecutionPlan — same strategy/stream/dedup on every
+    edge, speculation on every stage, hints exactly when dedup."""
+    runner = WorkflowRunner(None, use_truffle=True, storage=storage,
+                            stream=stream, dedup=dedup,
+                            straggler_factor=straggler)
+    wf = Workflow("shim", {
+        "a": Stage(_spec("a")),
+        "b": Stage(_spec("b"), deps=["a"]),
+        "c": Stage(_spec("c"), deps=["a"]),
+        "d": Stage(_spec("d"), deps=["b", "c"]),
+    })
+    plan = runner.compile(wf)
+    expected = DataPolicy(strategy=storage, stream=stream, dedup=dedup,
+                          speculation=straggler)
+    assert plan.uniform() == expected
+    assert plan.label() == storage
+    for name, sp in plan.stages.items():
+        assert sp.transport == expected
+        assert all(e.policy == expected for e in sp.in_edges)
+        assert sp.hint_deps == (sp.deps if dedup else ())
+        consumers = [s for s in plan.stages.values() if name in s.deps]
+        assert sp.seed_output == (dedup and bool(consumers))
+    # legacy attribute mirrors stay readable
+    assert runner.storage == storage
+    assert runner.stream == stream
+    assert runner.dedup == dedup
+    assert runner.straggler_factor == straggler
+
+
+def test_legacy_kwargs_still_run_end_to_end(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    wf = Workflow("legacy", {"a": Stage(_spec("leg-a")),
+                             "b": Stage(_spec("leg-b"), deps=["a"])})
+    tr = WorkflowRunner(cluster, use_truffle=True, storage="kvs",
+                        stream=True, dedup=True).run(wf, b"x")
+    assert set(tr.stages) == {"a", "b"}
+    assert tr.storage == "kvs"
+
+
+# -------------------------------------------------- multi-input PlacementHint
+def test_hint_canonicalization_and_from_request():
+    legacy = PlacementHint(digest="d1", size=10)
+    assert legacy.input_hints() == (("d1", 10),)
+    multi = PlacementHint(inputs=(("d1", 10), ("d2", 20)))
+    assert multi.input_hints() == (("d1", 10), ("d2", 20))
+
+    req = Request(fn="f", content_ref=ContentRef(
+        "truffle", "k", size=30, digest="dj",
+        inputs=(("d1", 10), ("d2", 20))))
+    h = PlacementHint.from_request(req)
+    assert h.input_hints() == (("d1", 10), ("d2", 20))
+
+    # meta directives survive without any digest at all
+    req2 = Request(fn="f", payload=b"x", meta={"avoid_node": "edge-1"})
+    h2 = PlacementHint.from_request(req2)
+    assert h2.avoid == "edge-1" and h2.input_hints() == ()
+    assert PlacementHint.from_request(Request(fn="f", payload=b"x")) is None
+
+
+def test_pick_scores_sum_of_resident_inputs(fast_clock):
+    """Fan-in: the node holding the LARGER share of the hinted inputs wins,
+    even though neither holds the joined blob."""
+    cluster = Cluster(clock=fast_clock)
+    big, small = bytes(3 * MB), bytes([1]) * MB
+    db, ds = content_digest(big), content_digest(small)
+    cluster.node("edge-1").buffer.set("k-big", big, digest=db)
+    cluster.node("edge-0").buffer.set("k-small", small, digest=ds)
+    hint = PlacementHint(inputs=((db, len(big)), (ds, len(small))))
+    spec = FunctionSpec("sum-fn", lambda d, inv: d)
+    assert cluster.scheduler._pick(spec, hint).name == "edge-1"
+    # joined-blob hashing finds nothing: falls back to least-loaded
+    joined = PlacementHint(digest=content_digest(big + small),
+                           size=len(big) + len(small))
+    assert cluster.scheduler._pick(spec, joined).name == "edge-0"
+
+
+def test_hint_weight_override(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(MB)
+    d = content_digest(payload)
+    cluster.node("edge-1").buffer.set("seed", payload, digest=d)
+    spec = FunctionSpec("w-fn", lambda d, inv: d)
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-1"] = 3
+    # default weight 2.0 < load skew 3: locality loses
+    assert cluster.scheduler._pick(
+        spec, PlacementHint(digest=d, size=MB)).name != "edge-1"
+    # per-edge weight override 5.0 > skew: the data wins again
+    assert cluster.scheduler._pick(
+        spec, PlacementHint(digest=d, size=MB, weight=5.0)).name == "edge-1"
+
+
+def test_avoid_steers_placement(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("av-fn", lambda d, inv: d)
+    # edge-0 is least-loaded (ties keep node order) — avoid pushes off it
+    assert cluster.scheduler._pick(spec, None).name == "edge-0"
+    hint = PlacementHint(avoid="edge-0")
+    assert cluster.scheduler._pick(spec, hint).name != "edge-0"
+
+
+# ------------------------------------------- fan-in workflow: per-dep digests
+def test_workflow_fanin_carries_per_dep_hints(fast_clock):
+    """A dedup fan-in stage lands on a producer node via per-dep digest
+    hints when the source node (which holds the seeded joined blob) is
+    load-skewed — joined-blob hashing alone would find no alternative."""
+    payloads = {"l": bytes([3]) * (2 * MB), "r": bytes([7]) * MB}
+
+    b = WorkflowBuilder("fanin-e2e", default_policy=DataPolicy(dedup=True))
+    b.stage("l", FunctionSpec("fi-l", lambda d, inv: payloads["l"],
+                              provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                              affinity="edge-1"))
+    b.stage("r", FunctionSpec("fi-r", lambda d, inv: payloads["r"],
+                              provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                              affinity="edge-0"))
+    b.stage("join", _spec("fi-join")).after("l").after("r")
+    cluster = Cluster(clock=fast_clock)
+    # the dispatch source is r's node (last dep, edge-0), where the joined
+    # blob gets seeded — overload it so the per-dep hints must decide
+    w = cluster.scheduler.locality_weight
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-0"] = int(w) + 3
+    tr = WorkflowRunner(cluster, use_truffle=True).run(b.build(), b"go")
+    join = tr.stages["join"].record
+    # edge-1 holds 2 MB of the inputs (part l) -> placement follows the sum
+    assert join.node == "edge-1"
+    assert join.locality_hit
+    assert tr.stages["join"].output == payloads["l"] + payloads["r"]
+    # producers' outputs were content-addressed and seeded where they ran
+    assert tr.stages["l"].digest == content_digest(payloads["l"])
+    assert cluster.node("edge-1").buffer.find_digest(tr.stages["l"].digest)
+
+
+def test_fanin_unloaded_source_keeps_joined_alias(fast_clock):
+    """Without load skew the source node wins: it holds the seeded JOINED
+    blob (full zero-transfer alias), which the appended joined-digest hint
+    credits on top of its resident part."""
+    payloads = {"l": bytes([3]) * MB, "r": bytes([7]) * MB}
+    b = WorkflowBuilder("fanin-alias", default_policy=DataPolicy(dedup=True))
+    b.stage("l", FunctionSpec("fa-l", lambda d, inv: payloads["l"],
+                              provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                              affinity="edge-1"))
+    b.stage("r", FunctionSpec("fa-r", lambda d, inv: payloads["r"],
+                              provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                              affinity="edge-0"))
+    b.stage("join", _spec("fa-join")).after("l").after("r")
+    cluster = Cluster(clock=fast_clock)
+    tr = WorkflowRunner(cluster, use_truffle=True).run(b.build(), b"go")
+    join = tr.stages["join"].record
+    assert join.node == "edge-0"             # source: joined blob + part r
+    assert join.locality_hit
+    assert join.dedup_hit                    # served by the joined alias
+
+
+# ------------------------------------------------- registry-driven prefetch
+def test_prefetch_relays_at_placement_time(fast_clock):
+    """Load-skew forces placement OFF the data; with DataPolicy.prefetch
+    the scheduler kicks the relay at decision time, the CSP ship becomes
+    its follower, and the bytes cross the fabric once."""
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(4 * MB)
+    cluster.platform.register(FunctionSpec("pf-fn", lambda d, inv: d,
+                                           provision_s=0.4, startup_s=0.05,
+                                           exec_s=0.01))
+    w = cluster.scheduler.locality_weight
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-0"] = int(w) + 2    # source overloaded
+    out, rec = cluster.node("edge-0").truffle.pass_data(
+        "pf-fn", payload, policy=DataPolicy(dedup=True, prefetch=True))
+    assert out == payload
+    assert rec.node != "edge-0"              # placed off the data
+    assert rec.prefetched                    # ...so the scheduler kicked it
+    assert cluster.prefetcher.stats["kicks"] >= 1
+    assert cluster.scheduler.stats["prefetch_kicks"] >= 1
+    # the prefetch relay led; the CSP ship aliased its landed bytes
+    assert rec.dedup_hit or rec.relay_shared
+    ev = cluster.bus.wait_for("scheduling.placed",
+                              lambda e: e["function"] == "pf-fn", timeout=1)
+    assert ev["prefetched"] is True
+
+
+def test_prefetch_skips_when_resident_or_unsourced(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(MB)
+    d = content_digest(payload)
+    cluster.node("edge-1").buffer.set("seed", payload, digest=d)
+    assert cluster.prefetcher.kick(d, "edge-1") is False   # already resident
+    assert cluster.prefetcher.kick("deadbeef", "edge-0") is False  # no holder
+    assert cluster.prefetcher.stats["relays"] == 0
+
+
+def test_prefetch_relay_honors_edge_compression():
+    """The prefetch relay REPLACES the CSP/SDP ship (the ship becomes its
+    RelayTable follower), so it must apply the edge's wire codec — a WAN
+    edge's compression must not silently vanish because the scheduler
+    moved the bytes at placement time."""
+    import time
+    from repro.runtime.clock import Clock
+    durations = {}
+    for compression in ("none", "lz4-like"):
+        cluster = Cluster(clock=Clock(0.05))
+        payload = bytes(32 * MB)
+        d = content_digest(payload)
+        cluster.node("edge-0").buffer.set(f"cas/{d}", payload, digest=d)
+        t0 = time.monotonic()
+        assert cluster.prefetcher.kick(d, "cloud-0", compression=compression)
+        deadline = time.monotonic() + 30
+        while (not cluster.node("cloud-0").buffer.find_digest(d)
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+        durations[compression] = time.monotonic() - t0
+        assert cluster.node("cloud-0").buffer.find_digest(d)
+        assert cluster.prefetcher.stats["relays"] == 1
+    # 32 MB over the 0.2 Gbit/s WAN: ~1.28 sim-s plain vs ~0.064 compressed
+    assert durations["lz4-like"] < durations["none"] / 3
+
+
+def test_prefetch_not_kicked_without_policy(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(MB)
+    cluster.platform.register(FunctionSpec("nopf-fn", lambda d, inv: d,
+                                           provision_s=0.3, startup_s=0.05,
+                                           exec_s=0.01))
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-0"] = 5
+    _, rec = cluster.node("edge-0").truffle.pass_data(
+        "nopf-fn", payload, policy=DataPolicy(dedup=True))
+    assert not rec.prefetched
+    assert cluster.prefetcher.stats["kicks"] == 0
+
+
+def test_fanin_prefetch_relays_only_the_shipped_blob(fast_clock):
+    """Multi-input prefetch must relay the JOINED digest (what the ship
+    aliases), never the per-dep parts — part relays are fabric traffic the
+    data path can neither follow nor alias."""
+    cluster = Cluster(clock=fast_clock)
+    part0, part1 = bytes([1]) * MB, bytes([2]) * MB
+    d0, d1 = content_digest(part0), content_digest(part1)
+    cluster.node("edge-1").buffer.set(f"cas/{d0}", part0, digest=d0)
+    cluster.node("edge-1").buffer.set(f"cas/{d1}", part1, digest=d1)
+    cluster.platform.register(FunctionSpec("fpf-fn", lambda d, inv: d,
+                                           provision_s=0.4, startup_s=0.05,
+                                           exec_s=0.01))
+    with cluster.scheduler._lock:            # push placement off edge-0/1
+        cluster.scheduler._load["edge-0"] = 9
+        cluster.scheduler._load["edge-1"] = 9
+    joined = part0 + part1
+    _, rec = cluster.node("edge-0").truffle.pass_data(
+        "fpf-fn", joined, policy=DataPolicy(dedup=True, prefetch=True),
+        input_hints=((d0, len(part0)), (d1, len(part1))))
+    assert rec.node not in ("edge-0", "edge-1")
+    assert rec.prefetched
+    target = cluster.node(rec.node)
+    dj = content_digest(joined)
+    assert target.buffer.find_digest(dj)     # the joined blob was relayed
+    assert not target.buffer.find_digest(d0)  # the parts were NOT
+    assert not target.buffer.find_digest(d1)
+    assert cluster.prefetcher.stats["kicks"] == 1
+
+
+def test_sdp_storage_fetch_does_not_prefetch(fast_clock):
+    """A storage-backed input fetches via the Data Engine, which reads the
+    service directly and never follows fabric relays — prefetch on such an
+    edge would ship the bytes twice, so SDP strips it from the hint."""
+    cluster = Cluster(clock=fast_clock)
+    payload = bytes(2 * MB)
+    cluster.storage["kvs"].put("pf-obj", payload)
+    # earlier consumer made edge-1 a registry holder of the content
+    cluster.platform.register(FunctionSpec("pf-a", lambda d, inv: d,
+                                           provision_s=0.3, startup_s=0.05,
+                                           exec_s=0.01, affinity="edge-1"))
+    cluster.platform.register(FunctionSpec("pf-b", lambda d, inv: d,
+                                           provision_s=0.3, startup_s=0.05,
+                                           exec_s=0.01, affinity="cloud-0"))
+    truffle = cluster.node("edge-0").truffle
+    ref = ContentRef("kvs", "pf-obj", len(payload))
+    pol = DataPolicy(strategy="kvs", dedup=True, prefetch=True)
+    truffle.handle_request(Request(fn="pf-a", content_ref=ref), policy=pol)
+    _, rec = truffle.handle_request(Request(fn="pf-b", content_ref=ref),
+                                    policy=pol)
+    assert rec.node == "cloud-0"             # pinned off the holder
+    assert not rec.prefetched                # kick suppressed: fetch path
+    assert cluster.prefetcher.stats["kicks"] == 0
+    # the bytes moved once per node, via the storage service only
+    assert cluster.node("cloud-0").truffle.engine.stats["fetches"] == 1
+
+
+# ------------------------------------------------------- WAN chunk compression
+def test_channel_wire_ratio_shrinks_grants():
+    from repro.runtime.clock import Clock
+    from repro.runtime.netsim import Channel
+    ch = Channel("t", bandwidth=1e6, latency=0.0, clock=Clock(0.0))
+    assert ch.transfer_time(1_000_000) == pytest.approx(1.0)
+    assert ch.transfer_time(1_000_000, wire_ratio=0.1) == pytest.approx(0.1)
+    chunks = list(ch.stream(bytes(2 << 20), wire_ratio=0.5))
+    assert sum(len(c) for c in chunks) == 2 << 20   # payload intact
+
+
+def test_csp_wan_compression_cuts_transfer(fast_clock):
+    """lz4-like on an edge->cloud pass: wire grants shrink to the sampled
+    ratio and the record carries it."""
+    times = {}
+    for label, policy in (("plain", DataPolicy(stream=True)),
+                          ("lz4", DataPolicy(stream=True,
+                                             compression="lz4-like"))):
+        cluster = Cluster(clock=fast_clock)
+        cluster.platform.register(
+            FunctionSpec(f"wan-{label}", lambda d, inv: d[:4],
+                         provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                         affinity="cloud-0"))
+        payload = bytes(16 * MB)        # highly compressible -> floor ratio
+        out, rec = cluster.node("edge-0").truffle.pass_data(
+            f"wan-{label}", payload, policy=policy)
+        assert out == payload[:4]
+        times[label] = rec.t_transfer_end - rec.t_transfer_start
+        if label == "lz4":
+            assert rec.compress_ratio == pytest.approx(0.05)
+        else:
+            assert rec.compress_ratio is None
+    assert times["lz4"] < times["plain"]
+
+
+def test_local_pass_skips_codec(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    cluster.platform.register(FunctionSpec("loc-cmp", lambda d, inv: d,
+                                           provision_s=0.2, startup_s=0.05,
+                                           exec_s=0.01, affinity="edge-0"))
+    _, rec = cluster.node("edge-0").truffle.pass_data(
+        "loc-cmp", bytes(MB), policy=DataPolicy(compression="lz4-like"))
+    assert rec.compress_ratio is None        # loopback: nothing crossed a wire
+
+
+# --------------------------------------- speculative backup on another node
+def test_speculative_backup_lands_on_different_node(fast_clock):
+    """Failure independence: the backup attempt avoids the straggler's node
+    even when that node is otherwise the best (least-loaded) choice."""
+    import itertools as it
+    calls = it.count()
+
+    def slow_first(d, inv):
+        if next(calls) == 0:
+            inv.cluster.clock.sleep(60.0)    # pathological straggler
+        return d + b"-ok"
+
+    from repro.core.model import PhaseEstimate
+    spec = FunctionSpec("ind-fn", slow_first, provision_s=0.1,
+                        startup_s=0.05, exec_s=0.01)
+    wf = Workflow("w", {"s": Stage(spec)})
+    est = {"s": PhaseEstimate(alpha=0.15, nu=0.1, eta=0.05, delta=0.01,
+                              gamma=0.01)}
+    cluster = Cluster(clock=fast_clock)
+    # every OTHER node is heavily loaded: without the avoid hint the backup
+    # would re-land on the straggler's (still least-loaded) node
+    with cluster.scheduler._lock:
+        for n in ("edge-1", "cloud-0"):
+            cluster.scheduler._load[n] = 5
+    runner = WorkflowRunner(cluster, use_truffle=False,
+                            straggler_factor=3.0, estimates=est)
+    tr = runner.run(wf, b"x")
+    sr = tr.stages["s"]
+    assert sr.speculated is True
+    assert sr.output == b"x-ok"
+    placed = [e["node"] for e in cluster.bus.history("scheduling.placed")
+              if e["function"] == "ind-fn"]
+    assert len(placed) >= 2
+    assert placed[-1] != placed[0]           # backup off the straggler's node
+    assert sr.record.node == placed[-1]
+
+
+# ----------------------------------------------------- per-edge model terms
+def test_model_per_edge_terms():
+    from repro.core import model as tm
+    p = tm.PhaseEstimate(alpha=0.1, nu=1.0, eta=0.5, delta=4.0, gamma=0.2)
+    assert tm.edge_delta(p) == 4.0
+    assert tm.edge_delta(p, wire_ratio=0.25) == 1.0
+    assert tm.edge_delta(p, wire_ratio=0.5, resident_fraction=0.5) == 1.0
+    # compression pulls δ under β: transfer fully hidden
+    assert tm.edge_time(p, wire_ratio=0.25) == pytest.approx(0.1 + 1.5 + 0.2)
+    assert tm.edge_time(p) == tm.truffle_time(p)
+    assert tm.edge_time(p, use_truffle=False) == tm.baseline_time(p)
+    # streamed edge: visible IO = δ_e − β − overlap
+    assert tm.edge_time(p, stream_exec_overlap=0.5) == pytest.approx(
+        0.1 + 1.5 + (4.0 - 1.5 - 0.5) + 0.2)
+    assert tm.edge_improvement(p, wire_ratio=0.25) == pytest.approx(4.0 - 1.5)
+    assert tm.plan_time([(p, {}), (p, {"wire_ratio": 0.25})]) == \
+        pytest.approx(tm.truffle_time(p) + 1.8)
+
+
+# -------------------------------------------------------- mixed plan e2e run
+def test_mixed_plan_workflow_end_to_end(fast_clock):
+    wan = DataPolicy(stream=True, dedup=True, compression="lz4-like")
+    b = WorkflowBuilder("mixed")
+    b.stage("src", FunctionSpec("mx-src", lambda d, inv: bytes(4 * MB),
+                                provision_s=0.2, startup_s=0.05,
+                                exec_s=0.01, affinity="edge-0"))
+    b.stage("f0", _spec("mx-f0")).after("src", policy=DataPolicy(dedup=True))
+    b.stage("f1", _spec("mx-f1")).after("src", policy=DataPolicy(dedup=True))
+    b.stage("up", FunctionSpec("mx-up", lambda d, inv: d[:8],
+                               provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                               affinity="cloud-0")) \
+        .after("f0", policy=wan).after("f1", policy=wan)
+    wf = b.build()
+    cluster = Cluster(clock=fast_clock)
+    runner = WorkflowRunner(cluster, use_truffle=True)
+    plan = runner.compile(wf)
+    assert plan.label() == "direct"
+    assert plan.stages["up"].transport.compression == "lz4-like"
+    tr = runner.run(wf, b"go", source_node="edge-0")
+    # dedup fan-out placed ON the source's seeded bytes
+    for s in ("f0", "f1"):
+        assert tr.stages[s].record.node == "edge-0"
+        assert tr.stages[s].record.dedup_hit
+    assert tr.stages["up"].record.compress_ratio == pytest.approx(0.05)
+    assert tr.stages["up"].output == (tr.stages["f0"].output
+                                      + tr.stages["f1"].output)[:8]
+    assert tr.storage == "direct"
