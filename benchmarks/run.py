@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   locality.*  load-only vs digest-aware placement (fan-out + video)
   policy.*    per-edge DataPolicy plans: mixed vs best global knob;
               multi-input fan-in hints vs joined-blob hashing
+  adaptive.*  telemetry-backed auto plans vs the exhaustive per-edge
+              oracle and the best uniform configuration (+ Eq. 4 error)
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
@@ -43,10 +45,10 @@ def main() -> None:
     fast = os.environ.get("BENCH_FAST") == "1"
     skip = set(os.environ.get("BENCH_SKIP", "").split(","))
 
-    from benchmarks import (chained_sweep, chained_total, coldstart_sweep,
-                            lifecycle, locality_sweep, model_validation,
-                            policy_sweep, roofline, streaming_sweep,
-                            video_analytics)
+    from benchmarks import (adaptive_sweep, chained_sweep, chained_total,
+                            coldstart_sweep, lifecycle, locality_sweep,
+                            model_validation, policy_sweep, roofline,
+                            streaming_sweep, video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -68,6 +70,9 @@ def main() -> None:
 
     print("# --- per-edge DataPolicy plans ---")
     policy_sweep.run()
+
+    print("# --- adaptive planner (auto vs oracle vs uniforms) ---")
+    adaptive_sweep.run()
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")

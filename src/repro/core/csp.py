@@ -61,6 +61,7 @@ class CSP:
         if policy is None:     # legacy kwargs -> uniform policy (shim)
             policy = DataPolicy(stream=stream, dedup=dedup)
         stream, dedup = policy.stream, policy.dedup
+        chunk_bytes = policy.chunk_bytes or chunk_bytes   # per-edge grant size
         codec = resolve_codec(policy.compression)
         t = self.truffle
         cluster = t.cluster

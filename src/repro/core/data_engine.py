@@ -12,6 +12,16 @@ Content-addressed dedup (``dedup=True``): the engine resolves the input's
 digest (from the ContentRef, or the service's digest index) and checks the
 node's buffer first — fan-out workflows and repeated inputs alias the
 already-resident chunks and skip the fetch entirely (``stats["dedup_hits"]``).
+
+Relay following: a dedup'd fetch consults the cluster
+:class:`~repro.core.transfer.RelayTable` before touching storage. If a
+relay of the same content toward this node is already in flight — a
+registry-driven prefetch kicked at placement time — the engine waits for
+it and aliases the landed bytes instead of issuing a second (storage)
+read; otherwise it takes the relay lead itself, so a racing prefetch
+becomes *its* follower. Either way the bytes move exactly once
+(``stats["relay_follows"]``), which is what lets storage-strategy
+(kvs/s3) edges use ``DataPolicy.prefetch``.
 """
 from __future__ import annotations
 
@@ -55,7 +65,8 @@ class DataEngine:
         self.node = node
         self.cluster = cluster
         self._adapters: Dict[str, StorageAdapter] = {}
-        self.stats = {"fetches": 0, "dedup_hits": 0, "bytes_fetched": 0}
+        self.stats = {"fetches": 0, "dedup_hits": 0, "bytes_fetched": 0,
+                      "relay_follows": 0}
         for name, svc in cluster.storage.items():
             self.register_adapter(StorageAdapter(name, svc))
 
@@ -84,10 +95,14 @@ class DataEngine:
         returns None — the consumer reads per-chunk via ``open_reader``
         (joining the blob here would add a full extra copy on the hot path).
         ``dedup`` consults the content-addressed index before any I/O (a hit
-        is flagged on ``record.dedup_hit`` when a LifecycleRecord is given).
+        is flagged on ``record.dedup_hit`` when a LifecycleRecord is given),
+        then the in-flight RelayTable: an already-kicked prefetch relay of
+        this content is waited for and aliased instead of double-moving the
+        bytes through a storage read.
         """
         if policy is not None:
             stream, dedup = policy.stream, policy.dedup
+            chunk_bytes = policy.chunk_bytes or chunk_bytes
         key = buffer_key or ref.key
         sc = self.adapter_for(ref)
         buf = self.node.buffer
@@ -102,15 +117,32 @@ class DataEngine:
                     record.dedup_hit = True
                 return None if stream else buf.get(key)
 
-        self.stats["fetches"] += 1
-        if stream:
-            # pipelined: chunks land in the buffer as they arrive; aborts
-            # (and re-raises) on a mid-stream failure instead of leaking
-            n = buf.ingest(key, sc.get_stream(ref.key, chunk_bytes),
-                           digest=digest)
-            self.stats["bytes_fetched"] += n
-            return None
-        data, _ = sc.get(ref.key)                 # line 13: C <- SC.get(C_R)
-        self.stats["bytes_fetched"] += len(data)
-        buf.set(key, data, digest=digest)         # line 14: B.set(C)
-        return data
+        lead = False
+        if dedup:
+            # a relay of these bytes toward this node may be in flight
+            # (registry-driven prefetch): wait and alias — the storage read
+            # would move the same bytes a second time. Otherwise take the
+            # lead so a racing prefetch becomes OUR follower.
+            from repro.core.transfer import relay_lead_or_alias
+            lead, aliased = relay_lead_or_alias(self.cluster, digest, buf,
+                                                self.node.name, key, record)
+            if aliased:
+                self.stats["dedup_hits"] += 1
+                self.stats["relay_follows"] += 1
+                return None if stream else buf.get(key)
+        try:
+            self.stats["fetches"] += 1
+            if stream:
+                # pipelined: chunks land in the buffer as they arrive; aborts
+                # (and re-raises) on a mid-stream failure instead of leaking
+                n = buf.ingest(key, sc.get_stream(ref.key, chunk_bytes),
+                               digest=digest)
+                self.stats["bytes_fetched"] += n
+                return None
+            data, _ = sc.get(ref.key)             # line 13: C <- SC.get(C_R)
+            self.stats["bytes_fetched"] += len(data)
+            buf.set(key, data, digest=digest)     # line 14: B.set(C)
+            return data
+        finally:
+            if lead:
+                self.cluster.relays.finish(digest, self.node.name)

@@ -105,9 +105,12 @@ def locality_improvement(p: PhaseEstimate,
 
 def edge_delta(p: PhaseEstimate, *, wire_ratio: float = 1.0,
                resident_fraction: float = 0.0) -> float:
-    """Per-edge transfer term: δ_e = r · (1 − f) · δ, r ∈ (0, 1],
-    f ∈ [0, 1] (compression acts only on the bytes that actually move)."""
-    r = min(max(wire_ratio, 0.0), 1.0)
+    """Per-edge transfer term: δ_e = r · (1 − f) · δ, r > 0, f ∈ [0, 1]
+    (compression acts only on the bytes that actually move). ``r > 1``
+    models a codec-bound transfer: the codec's throughput, not the wire,
+    sets the effective rate (r = bandwidth / codec_bps), so compressing on
+    a link faster than the codec *stretches* the transfer."""
+    r = max(wire_ratio, 0.0)
     f = min(max(resident_fraction, 0.0), 1.0)
     return p.delta * r * (1.0 - f)
 
@@ -115,14 +118,19 @@ def edge_delta(p: PhaseEstimate, *, wire_ratio: float = 1.0,
 def edge_time(p: PhaseEstimate, *, use_truffle: bool = True,
               stream_exec_overlap: Optional[float] = None,
               wire_ratio: float = 1.0,
-              resident_fraction: float = 0.0) -> float:
+              resident_fraction: float = 0.0,
+              overhead_s: float = 0.0) -> float:
     """Eq. 3/4 for ONE edge under its resolved policy.
 
     ``stream_exec_overlap`` is None for whole-blob edges; for streamed
     edges it is the portion of γ that overlaps the transfer ((n−1)·ε for
-    n chunks with per-chunk compute ε — see ``pipelined_io_visible``)."""
+    n chunks with per-chunk compute ε — see ``pipelined_io_visible``).
+    ``overhead_s`` is additive, un-compressible transfer overhead: link
+    RTT, per-chunk grant overhead (n × the channel's ``chunk_overhead_s``),
+    codec startup (first-chunk compression) — the terms the adaptive
+    planner's chunk-size/codec grid trades against the wire time."""
     d = edge_delta(p, wire_ratio=wire_ratio,
-                   resident_fraction=resident_fraction)
+                   resident_fraction=resident_fraction) + overhead_s
     if not use_truffle:
         return p.alpha + p.beta + d + p.gamma
     if stream_exec_overlap is None:

@@ -58,6 +58,7 @@ class SDP:
         if policy is None:     # legacy kwargs -> uniform policy (shim)
             policy = DataPolicy(stream=stream, dedup=dedup)
         stream, dedup = policy.stream, policy.dedup
+        chunk_bytes = policy.chunk_bytes or chunk_bytes   # per-edge grant size
         codec = resolve_codec(policy.compression)
         t = self.truffle
         cluster = t.cluster
@@ -91,11 +92,10 @@ class SDP:
                                              digest=digest, inputs=inputs),
                       source_node=t.node.name,
                       meta={"invocation": inv_id})
-        # storage-backed inputs fetch via the Data Engine, which reads the
-        # service directly and does NOT follow fabric relays — a prefetch
-        # kick would move the same bytes twice (relay + storage read)
-        hint_policy = policy.but(prefetch=False) if fetchable else policy
-        hint = PlacementHint.from_policy(hint_policy, digest, size,
+        # storage-backed inputs fetch via the Data Engine too — it follows
+        # the cluster RelayTable, so a prefetch relay kicked at placement
+        # time makes the engine's storage read a follower (single transfer)
+        hint = PlacementHint.from_policy(policy, digest, size,
                                          inputs, avoid)
 
         rec = LifecycleRecord(fn=request.fn, mode="truffle")

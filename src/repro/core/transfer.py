@@ -59,6 +59,38 @@ class RelayTable:
             ev.set()
 
 
+def relay_lead_or_alias(cluster, digest: Optional[str], buffer,
+                        node_name: str, key: str,
+                        record: Optional[LifecycleRecord] = None
+                        ) -> Tuple[bool, bool]:
+    """The ONE relay rendezvous both the CSP/SDP ship and the Data Engine's
+    storage fetch use (the two paths must not diverge). Returns
+    ``(lead, aliased)``:
+
+      * ``(True, False)`` — caller is the elected leader: move the bytes,
+        then call ``cluster.relays.finish(digest, node_name)`` (in a
+        ``finally``) to release followers.
+      * ``(False, True)`` — an in-flight relay of this content landed and
+        was aliased under ``key`` (``record.relay_shared``); nothing to
+        move.
+      * ``(False, False)`` — no relay table / no digest, or the leader
+        failed before we could alias: move the bytes yourself, without
+        holding (or finishing) a lead."""
+    relays = getattr(cluster, "relays", None)
+    if digest is None or relays is None:
+        return False, False
+    lead, ev = relays.lead_or_follow(digest, node_name)
+    if lead:
+        return True, False
+    ev.wait(RELAY_WAIT_S)
+    if buffer.alias(key, digest):
+        if record is not None:
+            record.dedup_hit = True
+            record.relay_shared = True
+        return False, True
+    return False, False
+
+
 def pin_of(cluster, fn: str) -> Optional[str]:
     """The node name ``fn`` is affinity-pinned to, if any."""
     spec = cluster.platform._specs.get(fn)
@@ -116,29 +148,22 @@ def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
             record.dedup_hit = True           # content already resident
         return
 
-    relays = getattr(cluster, "relays", None)
-    if digest is not None and relays is not None:
-        lead, ev = relays.lead_or_follow(digest, target.name)
-        if lead:
-            try:
-                _ship_direct(cluster, src_node, target, buf_key, data,
-                             stream=stream, digest=digest,
-                             chunk_bytes=chunk_bytes, codec=codec,
-                             record=record)
-            finally:
-                relays.finish(digest, target.name)
-            return
-        # follower: one relay of these bytes is already in flight to this
-        # node — wait for it, then alias instead of re-shipping
-        ev.wait(RELAY_WAIT_S)
-        if target.buffer.alias(buf_key, digest):
-            if record is not None:
-                record.dedup_hit = True
-                record.relay_shared = True
-            return
-        # leader failed or its entry was evicted before we aliased:
-        # fall through and ship ourselves
+    lead, aliased = relay_lead_or_alias(cluster, digest, target.buffer,
+                                        target.name, buf_key, record)
+    if aliased:
+        return          # piggybacked on an in-flight relay of these bytes
+    if lead:
+        try:
+            _ship_direct(cluster, src_node, target, buf_key, data,
+                         stream=stream, digest=digest,
+                         chunk_bytes=chunk_bytes, codec=codec,
+                         record=record)
+        finally:
+            cluster.relays.finish(digest, target.name)
+        return
 
+    # no relay table, or the leader failed / its entry was evicted before
+    # we could alias: ship ourselves
     _ship_direct(cluster, src_node, target, buf_key, data, stream=stream,
                  digest=digest, chunk_bytes=chunk_bytes, codec=codec,
                  record=record)
@@ -149,22 +174,29 @@ def _ship_direct(cluster, src_node, target, buf_key: str, data: bytes, *,
                  codec=None, record: Optional[LifecycleRecord] = None) -> None:
     if target.name != src_node.name:
         wire_ratio = 1.0
+        pace_bps = None
         if codec is not None:
             wire_ratio = codec.ratio(data)
-            # pipelined codec model: steady-state (de)compression at the
-            # codec's throughput hides behind the slower wire, so only the
-            # first chunk's compression is on the critical path
+            # pipelined codec model: compression overlaps the wire, so the
+            # stream's effective rate is min(wire rate, codec throughput) —
+            # the channel paces codec-bound transfers (``pace_bps``) and
+            # only the first chunk's compression is on the critical path
+            pace_bps = codec.compress_bps
             cluster.clock.sleep(codec.compress_s(min(len(data), chunk_bytes)))
             if record is not None:
                 record.compress_ratio = wire_ratio
+            telemetry = getattr(cluster, "telemetry", None)
+            if telemetry is not None:
+                telemetry.observe_codec(codec.name, wire_ratio)
         if stream:
             target.buffer.ingest(
                 buf_key, cluster.stream(src_node, target, data, chunk_bytes,
-                                        wire_ratio=wire_ratio),
+                                        wire_ratio=wire_ratio,
+                                        pace_bps=pace_bps),
                 digest=digest)
         else:
             cluster.transfer(src_node, target, data,    # during cold start
-                             wire_ratio=wire_ratio)
+                             wire_ratio=wire_ratio, pace_bps=pace_bps)
             target.buffer.set(buf_key, data, digest=digest)
     else:
         src_node.buffer.set(buf_key, data, digest=digest)

@@ -41,13 +41,19 @@ class ChunkCodec:
     ``ratio`` estimates the wire/payload byte ratio by deflating a sampled
     window (zlib level 1 ≈ an upper bound on what an lz4-class codec
     keeps); ``floor`` models the codec's framing overhead — even an
-    all-zeros payload ships ~5% of its bytes. ``compress_s`` is the
-    per-byte codec cost; at ~1.5 GB/s steady-state (de)compression hides
-    behind any WAN link, so the data plane charges only the first chunk."""
+    all-zeros payload ships ~5% of its bytes. ``compress_bps`` is the
+    codec's steady-state throughput (single core of the paper's 4-core
+    Xeon edge VMs, ~100 MB/s with small chunks): pipelined compression
+    hides behind links *slower* than the codec (every WAN tier), but on a
+    link faster than the codec the transfer becomes codec-bound — the
+    data plane paces the stream at ``compress_bps`` and the adaptive
+    planner models it as an effective wire ratio of bandwidth/codec_bps.
+    ``compress_s`` prices the startup (first-chunk) compression, the only
+    codec time on the critical path of a pipelined wire-bound stream."""
     name: str
     level: int = 1
     floor: float = 0.05
-    compress_bps: float = 1.5e9           # bytes/sec, single core
+    compress_bps: float = 1.0e8           # bytes/sec, single core
     sample_bytes: int = 64 * 1024
 
     def ratio(self, data) -> float:

@@ -17,7 +17,7 @@ from typing import Dict, List, Optional
 from repro.core.buffer import Buffer
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 from repro.runtime.events import EventBus
-from repro.runtime.netsim import NetworkFabric
+from repro.runtime.netsim import LinkTelemetry, NetworkFabric
 from repro.runtime.registry import DigestRegistry
 from repro.storage.base import StorageService, make_kvs, make_object_store
 
@@ -49,7 +49,12 @@ class Cluster:
                                     ("cloud-0", "cloud")]
         self.nodes: Dict[str, Node] = {
             name: Node(name, tier) for name, tier in node_specs}
-        self.network = NetworkFabric(clock=self.clock)
+        # passive link telemetry: channels report every grant; the adaptive
+        # planner reads EWMA estimates instead of the configured constants
+        self.telemetry = LinkTelemetry()
+        self.network = NetworkFabric(clock=self.clock,
+                                     telemetry=self.telemetry)
+        self.reseed_telemetry()
         self.bus = EventBus()
         self.storage: Dict[str, StorageService] = {
             "kvs": make_kvs(self.clock),
@@ -73,6 +78,21 @@ class Cluster:
             for node in self.nodes.values():
                 node.truffle = TruffleInstance(node, self)
 
+    def reseed_telemetry(self) -> None:
+        """Seed per-tier link priors from the fabric's configured links so
+        the planner has estimates before any traffic. Call again after
+        mutating ``network.tier_links`` (benchmarks that reshape the
+        continuum): already-materialized channels are re-calibrated too,
+        so the new configuration actually applies — not just the prior."""
+        for tiers, (bw, lat) in self.network.tier_links.items():
+            self.telemetry.seed(tier_key=tiers, bandwidth=bw, rtt=lat)
+        for ch in self.network._channels.values():
+            if ch.tier_key is not None:      # loopbacks keep their own rate
+                ch.bandwidth, ch.latency = self.network.tier_links[ch.tier_key]
+
+    def tier_of(self, node_name: str) -> str:
+        return self.nodes[node_name].tier
+
     @property
     def node_list(self) -> List[Node]:
         return list(self.nodes.values())
@@ -81,17 +101,20 @@ class Cluster:
         return self.nodes[name]
 
     def transfer(self, src: Node, dst: Node, payload: bytes,
-                 wire_ratio: float = 1.0) -> float:
+                 wire_ratio: float = 1.0,
+                 pace_bps: Optional[float] = None) -> float:
         """Move bytes between nodes over the fabric (blocking, whole-blob).
-        ``wire_ratio < 1`` grants only the compressed wire bytes."""
-        return self.network.channel(src, dst).transfer(payload,
-                                                       wire_ratio=wire_ratio)
+        ``wire_ratio < 1`` grants only the compressed wire bytes;
+        ``pace_bps`` bounds the producer's rate (codec-bound transfers)."""
+        return self.network.channel(src, dst).transfer(
+            payload, wire_ratio=wire_ratio, pace_bps=pace_bps)
 
     def stream(self, src: Node, dst: Node, payload: bytes,
-               chunk_bytes: Optional[int] = None, wire_ratio: float = 1.0):
+               chunk_bytes: Optional[int] = None, wire_ratio: float = 1.0,
+               pace_bps: Optional[float] = None):
         """Chunk-granularity fabric transfer: yields chunks as they arrive
         (per-chunk bandwidth grants — see netsim.Channel.stream)."""
         from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
         return self.network.channel(src, dst).stream(
             payload, chunk_bytes or DEFAULT_CHUNK_BYTES,
-            wire_ratio=wire_ratio)
+            wire_ratio=wire_ratio, pace_bps=pace_bps)

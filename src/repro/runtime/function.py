@@ -77,6 +77,10 @@ class LifecycleRecord:
     prefetched: bool = False      # scheduler kicked the relay at placement
     compress_ratio: Optional[float] = None  # wire bytes / payload bytes
     io_blocked_s: Optional[float] = None  # measured blocked wait (streaming)
+    predicted_s: Optional[float] = None  # Eq. 4 compile-time stage time (sim
+    #                                      seconds; stamped from the plan's
+    #                                      profiled prediction — compare to
+    #                                      clock.elapsed_sim(record.total))
 
     # --- derived phases (seconds) ---
     @property

@@ -13,13 +13,35 @@ Two grant granularities:
     transfers fair-share the link and a small transfer is never stuck behind
     a large one. Chunks are yielded as they "arrive", which is what lets the
     Truffle data plane pipeline storage-get -> relay -> buffer-append.
+
+Per-grant overhead (``chunk_overhead_s``): each bandwidth grant pays a small
+fixed cost (framing, syscall, per-chunk buffer handling). A whole-blob
+transfer pays it once; a stream pays it per chunk — which is exactly the
+cost that makes the adaptive planner's chunk-size grid a real trade-off
+(small chunks start the pipeline earlier but pay more per-chunk overhead).
+
+Producer pacing (``pace_bps``): an upstream stage that can only produce
+bytes at a bounded rate — in practice the chunk codec's compression
+throughput — caps the stream's effective rate at ``min(bandwidth_rate,
+pace_bps)``. The wire idles during codec stalls instead of the grant
+pretending the link was the bottleneck.
+
+Link telemetry (:class:`LinkTelemetry`): every grant is reported to an
+optional telemetry sink, which keeps seeded-deterministic EWMA estimates of
+each channel's *effective* bandwidth and RTT (plus observed codec ratios,
+fed by the data plane). The adaptive planner reads these estimates instead
+of the fabric's configured constants, so a degraded link (fault injection,
+congestion) steers future plans. Estimates derive from the modeled grant
+arithmetic, not wall-clock jitter — deterministic under tests by
+construction. Queue wait is excluded on purpose: queuing is load, not link
+capacity.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Iterator
+from typing import Dict, Iterator, Optional, Tuple
 
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 
@@ -29,6 +51,123 @@ GBPS = 1e9 / 8  # bytes/sec per Gbit/s
 #: negligible, small enough that time-to-first-chunk ~ chunk/bandwidth.
 DEFAULT_CHUNK_BYTES = 1 << 20
 
+#: Default per-grant overhead on fabric channels (framing + per-chunk
+#: buffer handling); individual ``Channel``s default to 0 so raw-channel
+#: math stays exact unless a fabric opts in.
+FABRIC_CHUNK_OVERHEAD_S = 2e-4
+
+
+@dataclass(frozen=True)
+class LinkEstimate:
+    """Telemetry's current belief about one link (sim-seconds domain)."""
+    bandwidth: float              # bytes / simulated second (EWMA)
+    rtt: float                    # simulated seconds per transfer (EWMA)
+    samples: int = 0              # observations folded in (0 = seed only)
+
+
+class LinkTelemetry:
+    """Passive per-link measurement: EWMA effective bandwidth + RTT per
+    channel (node pair) and per tier pair, plus observed codec wire ratios.
+
+    Channels report each grant (``observe_transfer``); the data plane
+    reports each codec engagement (``observe_codec``). ``seed`` installs
+    priors (the fabric's configured tier links) so the planner has
+    estimates before any traffic. All updates are EWMA with a fixed
+    ``alpha`` — deterministic given the observation sequence, which is
+    itself derived from modeled grant arithmetic, so plans compiled against
+    frozen telemetry are reproducible.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        # key -> [bandwidth_ewma, rtt_ewma, samples]
+        self._links: Dict[Tuple[str, str], list] = {}
+        self._tiers: Dict[Tuple[str, str], list] = {}
+        self._codecs: Dict[str, list] = {}          # name -> [ratio, samples]
+        self.stats = {"observations": 0, "codec_observations": 0}
+
+    # ------------------------------------------------------------- updates
+    def seed(self, *, link_key: Optional[Tuple[str, str]] = None,
+             tier_key: Optional[Tuple[str, str]] = None,
+             bandwidth: float, rtt: float) -> None:
+        """Install a prior (samples=0). Reseeding resets the estimate —
+        used after reconfiguring fabric links."""
+        with self._lock:
+            if link_key is not None:
+                self._links[link_key] = [bandwidth, rtt, 0]
+            if tier_key is not None:
+                self._tiers[tier_key] = [bandwidth, rtt, 0]
+
+    def _fold(self, table: dict, key, bandwidth: Optional[float],
+              rtt: Optional[float]) -> None:
+        ent = table.get(key)
+        if ent is None:      # first evidence for an unseeded link: adopt it
+            ent = table[key] = [bandwidth or 0.0, rtt or 0.0, 0]
+        a = self.alpha
+        if bandwidth is not None:
+            ent[0] = (1 - a) * ent[0] + a * bandwidth
+        if rtt is not None:
+            ent[1] = (1 - a) * ent[1] + a * rtt
+        ent[2] += 1
+
+    def observe_transfer(self, link_key: Optional[Tuple[str, str]],
+                         tier_key: Optional[Tuple[str, str]],
+                         nbytes: int, seconds: float,
+                         rtt: Optional[float] = None) -> None:
+        """One grant's worth of evidence: ``nbytes`` crossed in ``seconds``
+        (sim). ``rtt`` is reported once per transfer/stream, not per chunk."""
+        if nbytes <= 0 or seconds <= 0:
+            return
+        bw = nbytes / seconds
+        with self._lock:
+            if link_key is not None:
+                self._fold(self._links, link_key, bw, rtt)
+            if tier_key is not None:
+                self._fold(self._tiers, tier_key, bw, rtt)
+            self.stats["observations"] += 1
+
+    def observe_codec(self, name: str, ratio: float) -> None:
+        """Observed wire/payload ratio of one codec engagement."""
+        with self._lock:
+            ent = self._codecs.get(name)
+            if ent is None:
+                self._codecs[name] = [ratio, 1]
+            else:
+                ent[0] = (1 - self.alpha) * ent[0] + self.alpha * ratio
+                ent[1] += 1
+            self.stats["codec_observations"] += 1
+
+    # ------------------------------------------------------------- queries
+    def link(self, src: Optional[str] = None, dst: Optional[str] = None,
+             tiers: Optional[Tuple[str, str]] = None
+             ) -> Optional[LinkEstimate]:
+        """Best available estimate for a hop: node pair > tier pair. None
+        when telemetry has neither seen nor been seeded with the link."""
+        with self._lock:
+            ent = None
+            if src is not None and dst is not None:
+                ent = self._links.get((src, dst))
+            if ent is None and tiers is not None:
+                ent = self._tiers.get(tuple(tiers))
+            if ent is None:
+                return None
+            return LinkEstimate(bandwidth=ent[0], rtt=ent[1], samples=ent[2])
+
+    def codec_ratio(self, name: str,
+                    default: Optional[float] = None) -> Optional[float]:
+        with self._lock:
+            ent = self._codecs.get(name)
+            return ent[0] if ent is not None else default
+
+    def snapshot(self) -> dict:
+        """Frozen copy of every estimate (tests / dashboards)."""
+        with self._lock:
+            return {
+                "links": {k: LinkEstimate(*v) for k, v in self._links.items()},
+                "tiers": {k: LinkEstimate(*v) for k, v in self._tiers.items()},
+                "codecs": {k: tuple(v) for k, v in self._codecs.items()},
+            }
 
 
 @dataclass
@@ -37,6 +176,10 @@ class Channel:
     bandwidth: float                  # bytes / simulated second
     latency: float                    # simulated seconds, per transfer
     clock: Clock = field(default_factory=lambda: DEFAULT_CLOCK)
+    chunk_overhead_s: float = 0.0     # per-grant framing/handling cost
+    link_key: Optional[Tuple[str, str]] = None     # telemetry: node pair
+    tier_key: Optional[Tuple[str, str]] = None     # telemetry: tier pair
+    telemetry: Optional[LinkTelemetry] = None
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _busy_until: float = field(default=0.0, repr=False)  # wall, last grant end
 
@@ -51,12 +194,20 @@ class Channel:
         return max(1, int(nbytes * wire_ratio))
 
     def transfer_time(self, nbytes: int, wire_ratio: float = 1.0) -> float:
-        return self.latency + self.wire_bytes(nbytes, wire_ratio) / self.bandwidth
+        return self.latency + self.chunk_overhead_s \
+            + self.wire_bytes(nbytes, wire_ratio) / self.bandwidth
+
+    def _observe(self, nbytes: int, seconds: float,
+                 rtt: Optional[float] = None) -> None:
+        if self.telemetry is not None:
+            self.telemetry.observe_transfer(self.link_key, self.tier_key,
+                                            nbytes, seconds, rtt=rtt)
 
     def _grant(self, nbytes: int, after: float = None) -> float:
-        """Reserve serialized link time for ``nbytes``; returns the wall
-        deadline when those bytes have arrived. Grants queue back-to-back
-        (``_busy_until``), so concurrent transfers contend for bandwidth.
+        """Reserve serialized link time for ``nbytes`` (+ the per-grant
+        overhead); returns the wall deadline when those bytes have arrived.
+        Grants queue back-to-back (``_busy_until``), so concurrent transfers
+        contend for bandwidth.
 
         ``after`` chains grants within one stream: the next chunk starts at
         the previous chunk's deadline even if the requester woke up late —
@@ -64,21 +215,39 @@ class Channel:
         self-correct OS sleep overshoot; without this a 128-chunk stream
         accumulates ~a timer quantum of drift per chunk. A fresh transfer
         (``after=None``) can never start in the past."""
-        wall = (nbytes / self.bandwidth) * self.clock.scale
+        wall = (nbytes / self.bandwidth + self.chunk_overhead_s) \
+            * self.clock.scale
         with self._lock:
             floor = time.monotonic() if after is None else after
             start = max(floor, self._busy_until)
             self._busy_until = start + wall
             return self._busy_until
 
-    def transfer(self, payload: bytes, wire_ratio: float = 1.0) -> float:
+    def transfer(self, payload: bytes, wire_ratio: float = 1.0,
+                 pace_bps: Optional[float] = None) -> float:
         """Whole-blob: blocks for the modeled duration holding the bandwidth
-        grant for the full payload. Returns simulated seconds."""
+        grant for the full payload. Returns simulated seconds. ``pace_bps``
+        bounds the producer's rate (codec-bound transfers finish at the
+        codec's throughput, not the wire's)."""
         t = self.transfer_time(len(payload), wire_ratio)
+        wire = self.wire_bytes(len(payload), wire_ratio)
+        wire_time = wire / self.bandwidth + self.chunk_overhead_s
         self.clock.sleep(self.latency)
-        self.clock.sleep_until(self._grant(self.wire_bytes(len(payload),
-                                                           wire_ratio)))
-        return t
+        pace_wall = None
+        if pace_bps:
+            pace_wall = time.monotonic() \
+                + (len(payload) / pace_bps) * self.clock.scale
+        deadline = self._grant(wire)
+        surplus = 0.0
+        if pace_wall is not None and pace_wall > deadline:
+            deadline = pace_wall          # producer (codec) is the bottleneck
+            surplus = max(0.0, len(payload) / pace_bps - wire_time)
+        self.clock.sleep_until(deadline)
+        # report pure wire seconds (no grant overhead): the planner models
+        # chunk_overhead_s as its own additive term — folding it into the
+        # bandwidth estimate would double-count it per candidate chunk size
+        self._observe(wire, wire / self.bandwidth, rtt=self.latency)
+        return t + surplus
 
     def transfer_chunk(self, nbytes: int, *, pay_latency: bool = False,
                        after: float = None) -> float:
@@ -93,21 +262,38 @@ class Channel:
 
     def stream(self, payload: bytes,
                chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-               wire_ratio: float = 1.0) -> Iterator[memoryview]:
+               wire_ratio: float = 1.0,
+               pace_bps: Optional[float] = None) -> Iterator[memoryview]:
         """Chunk-granularity transfer: yields each chunk after its modeled
         arrival. Bandwidth is granted per chunk, so concurrent streams
         interleave instead of head-of-line blocking. Chunks are zero-copy
         ``memoryview`` slices (the blob path hands over the payload object
         unchanged — same semantics, measured time stays modeled time).
         ``wire_ratio < 1`` grants only the compressed size per chunk (WAN
-        chunk compression); the consumer still receives the full chunk."""
+        chunk compression); the consumer still receives the full chunk.
+        ``pace_bps`` bounds the producer's chunk rate (the codec): when the
+        codec is slower than the wire, arrivals pace at the codec and the
+        wire idles between grants. Pacing uses absolute wall deadlines
+        (like the grants themselves) so OS sleep overshoot does not
+        accumulate across chunks."""
         self.clock.sleep(self.latency)
         view = memoryview(payload)
         deadline = None
+        pace_wall = time.monotonic() if pace_bps else None
+        first = True
         for off in range(0, len(payload), chunk_bytes):
             chunk = view[off:off + chunk_bytes]
-            deadline = self.transfer_chunk(
-                self.wire_bytes(len(chunk), wire_ratio), after=deadline)
+            wire = self.wire_bytes(len(chunk), wire_ratio)
+            deadline = self.transfer_chunk(wire, after=deadline)
+            if pace_wall is not None:
+                # codec finishes chunk k at start + Σ chunk/pace (absolute)
+                pace_wall += (len(chunk) / pace_bps) * self.clock.scale
+                self.clock.sleep_until(pace_wall)
+            # pure wire seconds — see transfer(): overhead is the planner's
+            # own additive term, not part of the bandwidth estimate
+            self._observe(wire, wire / self.bandwidth,
+                          rtt=self.latency if first else None)
+            first = False
             yield chunk
         if deadline is None:                  # empty payload: one empty chunk
             yield b""
@@ -125,13 +311,20 @@ class NetworkFabric:
         ("cloud", "edge"): (0.2 * GBPS, 0.0200),
         ("cloud", "cloud"): (10.0 * GBPS, 0.0002),
     })
+    telemetry: Optional[LinkTelemetry] = None
+    chunk_overhead_s: float = FABRIC_CHUNK_OVERHEAD_S
     _channels: dict = field(default_factory=dict)
 
     def channel(self, src_node, dst_node) -> Channel:
         key = (src_node.name, dst_node.name)
         if key not in self._channels:
-            bw, lat = self.tier_links[(src_node.tier, dst_node.tier)]
+            tier_key = (src_node.tier, dst_node.tier)
+            bw, lat = self.tier_links[tier_key]
             if src_node.name == dst_node.name:
                 bw, lat = 40.0 * GBPS, 0.00001       # loopback
-            self._channels[key] = Channel(f"{key}", bw, lat, self.clock)
+                tier_key = None    # don't fold loopback into tier estimates
+            self._channels[key] = Channel(
+                f"{key}", bw, lat, self.clock,
+                chunk_overhead_s=self.chunk_overhead_s,
+                link_key=key, tier_key=tier_key, telemetry=self.telemetry)
         return self._channels[key]

@@ -17,30 +17,86 @@ Per stage the planner derives:
   * ``transport`` — the merged in-edge policy actually used to move the
     stage's (joined) input: strategies must agree (:class:`PlanError`
     otherwise), ``stream``/``dedup``/``prefetch`` are OR-ed, compression
-    engages if any in-edge asks, ``speculation`` takes the max.
+    engages if any in-edge asks, ``speculation`` takes the max,
+    ``chunk_bytes`` takes the finest declared grant.
   * ``hint_deps`` — deps whose edge has ``dedup``: the stage's placement
     hint carries one digest per such dep (fan-in stages are scored on the
     SUM of resident inputs, not a joined-blob hash that resolves nowhere).
   * ``seed_output`` — True when any consumer edge has ``dedup``: the
     runner content-addresses the stage's output and seeds it on the node
     that produced it, so downstream placement can follow the bytes.
+
+Adaptive planning (``DataPolicy(strategy="auto")``): an auto edge is
+resolved at compile time by evaluating the Eq. 4 per-edge model
+(:func:`repro.core.model.edge_time`) over the candidate grid
+{whole-blob, stream} × {none, lz4-like} × ``chunk_grid``, with link
+bandwidth/RTT taken from :class:`~repro.runtime.netsim.LinkTelemetry`
+(node-pair estimate if traffic has been seen, tier prior otherwise) and
+codec wire ratios from the edge's :class:`EdgeProfile` or telemetry's
+observed codec EWMA. The argmin candidate replaces the auto policy; every
+profiled ``direct``-strategy edge (auto or hand-set) additionally gets a
+compile-time prediction (``EdgePlan.predicted_s``) that the runner stamps
+onto the stage's ``LifecycleRecord`` — predicted-vs-measured Eq. 4 error
+is an assertable quantity. (``kvs``/``s3`` edges move through the storage
+service's own channels, which the fabric-link model doesn't cover — they
+get no prediction rather than a wrong one.) Candidate evaluation is
+deterministic given frozen telemetry: fixed candidate order,
+strict-improvement argmin.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from dataclasses import dataclass, field
 from types import MappingProxyType
 from typing import Mapping, Optional, Tuple
 
 from repro.core.errors import PlanError, WorkflowCycleError  # noqa: F401
+from repro.core.model import PhaseEstimate, edge_time
+from repro.runtime.netsim import (DEFAULT_CHUNK_BYTES,
+                                  FABRIC_CHUNK_OVERHEAD_S)
 from repro.runtime.policy import DataPolicy
+
+#: chunk-size grid an auto edge is evaluated over (the uniform-extreme
+#: candidates of the property tests — whole-blob and stream at the
+#: default chunk — are both members of the full candidate set)
+CHUNK_GRID = (256 * 1024, DEFAULT_CHUNK_BYTES, 4 * DEFAULT_CHUNK_BYTES)
+
+#: scheduler + lightweight-trigger path, matching Scheduler.scheduling_s
+#: and Platform.REF_TRIGGER_OVERHEAD_S (kept literal here to avoid a
+#: planner -> platform import; AdaptivePlanner reads the live values)
+DEFAULT_SCHEDULING_S = 0.15
+DEFAULT_TRIGGER_S = 0.05
+
+
+@dataclass(frozen=True)
+class EdgeProfile:
+    """What the planner knows about one edge's traffic, for auto selection
+    and Eq. 4 prediction.
+
+    ``size`` is the expected payload; ``src_node``/``dst_node`` name where
+    the bytes will originate/land when known (affinity pins — they select
+    the telemetry link estimate; ``tiers`` is the fallback estimate key);
+    ``compress_ratio`` is the expected codec wire ratio for THIS payload
+    (e.g. sampled from a probe run) — when None the planner falls back to
+    telemetry's observed codec EWMA, then to 1.0 (compression never looks
+    free until evidence says so)."""
+    size: int
+    src_node: Optional[str] = None
+    dst_node: Optional[str] = None
+    tiers: Optional[Tuple[str, str]] = None
+    compress_ratio: Optional[float] = None
 
 
 @dataclass(frozen=True)
 class EdgePlan:
-    """One resolved hop: ``src is None`` marks the workflow ingress."""
+    """One resolved hop: ``src is None`` marks the workflow ingress.
+    ``predicted_s`` is the compile-time Eq. 4 edge time under the resolved
+    policy (None when the edge had no profile to predict from)."""
     src: Optional[str]
     dst: str
     policy: DataPolicy
+    predicted_s: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -51,6 +107,7 @@ class StagePlan:
     in_edges: Tuple[EdgePlan, ...]         # one per dep (ingress for roots)
     hint_deps: Tuple[str, ...] = ()        # deps contributing digest hints
     seed_output: bool = False              # content-address + seed the output
+    predicted_s: Optional[float] = None    # Eq. 4 stage time (slowest in-edge)
 
     def edge_policy(self, src: Optional[str]) -> DataPolicy:
         for e in self.in_edges:
@@ -89,32 +146,66 @@ class ExecutionPlan:
                       for e in sp.in_edges}
         return strategies.pop() if len(strategies) == 1 else "mixed"
 
+    @property
+    def predicted_total(self) -> Optional[float]:
+        """Eq. 5 over the plan's predicted stage times (serialized-chain
+        upper bound — exact for pinned chains, conservative for DAGs whose
+        branches overlap). Stages without a prediction are skipped; None
+        when nothing was profiled."""
+        preds = [sp.predicted_s for sp in self.stages.values()
+                 if sp.predicted_s is not None]
+        return sum(preds) if preds else None
+
     def describe(self) -> str:
         lines = [f"plan {self.workflow!r} ({len(self.stages)} stages, "
                  f"label={self.label()})"]
         for name in self.order:
             sp = self.stages[name]
             t = sp.transport
+            pred = (f" predicted={sp.predicted_s:.3f}s"
+                    if sp.predicted_s is not None else "")
             lines.append(
                 f"  {name}: deps={list(sp.deps)} strategy={t.strategy} "
                 f"stream={t.stream} dedup={t.dedup} "
-                f"compression={t.compression} prefetch={t.prefetch} "
+                f"compression={t.compression} chunk={t.chunk_bytes} "
+                f"prefetch={t.prefetch} "
                 f"speculation={t.speculation} hint_deps={list(sp.hint_deps)} "
-                f"seed_output={sp.seed_output}")
+                f"seed_output={sp.seed_output}{pred}")
         return "\n".join(lines)
 
 
 class Planner:
-    def __init__(self, default: Optional[DataPolicy] = None):
+    def __init__(self, default: Optional[DataPolicy] = None, *,
+                 telemetry=None,
+                 chunk_grid: Tuple[int, ...] = CHUNK_GRID,
+                 scheduling_s: float = DEFAULT_SCHEDULING_S,
+                 trigger_s: float = DEFAULT_TRIGGER_S,
+                 chunk_overhead_s: float = FABRIC_CHUNK_OVERHEAD_S):
         self.default = default or DataPolicy()
+        self.telemetry = telemetry
+        self.chunk_grid = tuple(sorted(chunk_grid))
+        self.scheduling_s = scheduling_s
+        self.trigger_s = trigger_s
+        self.chunk_overhead_s = chunk_overhead_s
 
-    def compile(self, wf) -> ExecutionPlan:
+    def compile(self, wf, profiles: Optional[Mapping[Tuple[Optional[str],
+                                                           str],
+                                                     EdgeProfile]] = None
+                ) -> ExecutionPlan:
         """Compile ``wf`` (a :class:`~repro.runtime.workflow.Workflow`,
         hand-built or from :class:`WorkflowBuilder`). Raises
         :class:`WorkflowCycleError` on cyclic deps, :class:`PlanError` on
-        incoherent policies."""
+        incoherent policies.
+
+        ``profiles`` maps ``(src, dst)`` edges (``src=None`` for ingress)
+        to :class:`EdgeProfile`s. A profiled edge gets a compile-time
+        Eq. 4 prediction; an ``auto`` edge additionally gets its
+        ``stream``/``compression``/``chunk_bytes`` chosen by argmin over
+        the candidate grid (an unprofiled or telemetry-blind auto edge
+        conservatively resolves to whole-blob/uncompressed)."""
         order = tuple(wf.topo_order())          # raises on cycles
         wf_default = getattr(wf, "default_policy", None) or self.default
+        profiles = profiles or {}
 
         def edge_pol(src: Optional[str], dst: str) -> DataPolicy:
             st = wf.stages[dst]
@@ -129,17 +220,20 @@ class Planner:
         for name in order:
             st = wf.stages[name]
             deps = tuple(st.deps)
-            if deps:
-                in_edges = tuple(EdgePlan(d, name, edge_pol(d, name))
-                                 for d in deps)
-            else:
-                in_edges = (EdgePlan(None, name, edge_pol(None, name)),)
+            edge_srcs = deps if deps else (None,)
+            in_edges = tuple(
+                self._finalize_edge(src, name, edge_pol(src, name),
+                                    profiles.get((src, name)), st.spec)
+                for src in edge_srcs)
+            preds = [e.predicted_s for e in in_edges]
             stages[name] = StagePlan(
                 name=name, deps=deps,
                 transport=self._merge(name, in_edges),
                 in_edges=in_edges,
                 hint_deps=tuple(e.src for e in in_edges
-                                if e.src is not None and e.policy.dedup))
+                                if e.src is not None and e.policy.dedup),
+                predicted_s=(max(p for p in preds if p is not None)
+                             if any(p is not None for p in preds) else None))
         # second pass: a stage seeds its output iff some consumer edge dedups
         for name in order:
             consumers = [e for sp in stages.values() for e in sp.in_edges
@@ -149,9 +243,103 @@ class Planner:
                 stages[name] = StagePlan(
                     name=sp.name, deps=sp.deps, transport=sp.transport,
                     in_edges=sp.in_edges, hint_deps=sp.hint_deps,
-                    seed_output=True)
+                    seed_output=True, predicted_s=sp.predicted_s)
         return ExecutionPlan(workflow=wf.name, order=order, stages=stages,
                              default=wf_default)
+
+    # --------------------------------------------------- adaptive selection
+    def _link_estimate(self, profile: EdgeProfile):
+        if self.telemetry is None:
+            return None
+        return self.telemetry.link(profile.src_node, profile.dst_node,
+                                   tiers=profile.tiers)
+
+    def _codec_ratio(self, codec_name: str,
+                     profile: EdgeProfile) -> float:
+        """Expected wire ratio: edge profile (payload-specific evidence) >
+        telemetry's observed codec EWMA > 1.0 (no evidence: compression is
+        never assumed free)."""
+        if profile.compress_ratio is not None:
+            return profile.compress_ratio
+        if self.telemetry is not None:
+            obs = self.telemetry.codec_ratio(codec_name)
+            if obs is not None:
+                return obs
+        return 1.0
+
+    def _candidate_time(self, spec, profile: EdgeProfile, link, *,
+                        stream: bool, compression: str,
+                        chunk_bytes: Optional[int]) -> float:
+        """Eq. 4 edge time for one candidate configuration — the ONE model
+        both auto selection and prediction use, mirroring the measured
+        CSP/SDP direct path: α = trigger + scheduling; β from the dst spec;
+        δ = size/bandwidth shaped by the effective wire ratio (codec-bound
+        links stretch, see ``edge_delta``); RTT, per-grant overhead and
+        codec startup ride the un-compressible ``overhead_s`` term; a
+        streamed edge into a streaming handler overlaps (n−1)/n of γ."""
+        size = max(profile.size, 0)
+        gamma = spec.exec_s
+        p = PhaseEstimate(
+            alpha=self.scheduling_s + self.trigger_s,
+            nu=spec.provision_s + spec.extra_cold_start_s,
+            eta=spec.startup_s,
+            delta=size / link.bandwidth,
+            gamma=gamma)
+        chunk = chunk_bytes or DEFAULT_CHUNK_BYTES
+        n = max(1, math.ceil(size / chunk)) if stream else 1
+        overhead = link.rtt + n * self.chunk_overhead_s
+        ratio = 1.0
+        if compression != "none":
+            from repro.distributed.compression import chunk_codec
+            codec = chunk_codec(compression)
+            est = self._codec_ratio(compression, profile)
+            # codec-bound links stretch: effective rate = min(wire, codec)
+            ratio = max(est, link.bandwidth / codec.compress_bps)
+            overhead += codec.compress_s(min(size, chunk))
+        overlap = None
+        if stream:
+            overlap = gamma * (n - 1) / n if getattr(spec, "streaming",
+                                                     False) else 0.0
+        return edge_time(p, stream_exec_overlap=overlap, wire_ratio=ratio,
+                         overhead_s=overhead)
+
+    def _finalize_edge(self, src: Optional[str], dst: str, pol: DataPolicy,
+                       profile: Optional[EdgeProfile], spec) -> EdgePlan:
+        """Resolve an ``auto`` policy (argmin over the candidate grid) and
+        attach the Eq. 4 prediction for any profiled edge."""
+        link = self._link_estimate(profile) if profile is not None else None
+        if pol.strategy == "auto":
+            if link is None:
+                # no profile / no telemetry: conservative whole-blob default
+                pol = pol.but(strategy="direct", stream=False,
+                              compression="none", chunk_bytes=None)
+            else:
+                best = None
+                best_t = math.inf
+                for stream, comp, chunk in self._candidates():
+                    t = self._candidate_time(spec, profile, link,
+                                             stream=stream, compression=comp,
+                                             chunk_bytes=chunk)
+                    if t < best_t:          # strict: first-listed wins ties
+                        best, best_t = (stream, comp, chunk), t
+                stream, comp, chunk = best
+                pol = pol.but(strategy="direct", stream=stream,
+                              compression=comp, chunk_bytes=chunk)
+        predicted = None
+        if link is not None and pol.strategy == "direct":
+            predicted = self._candidate_time(
+                spec, profile, link, stream=pol.stream,
+                compression=pol.compression, chunk_bytes=pol.chunk_bytes)
+        return EdgePlan(src=src, dst=dst, policy=pol, predicted_s=predicted)
+
+    def _candidates(self):
+        """Deterministic candidate order: whole-blob first (ties keep the
+        simpler mechanism), then streams over the chunk grid."""
+        yield False, "none", None
+        yield False, "lz4-like", None
+        for comp in ("none", "lz4-like"):
+            for chunk in self.chunk_grid:
+                yield True, comp, chunk
 
     @staticmethod
     def _merge(name: str, in_edges: Tuple[EdgePlan, ...]) -> DataPolicy:
@@ -183,13 +371,18 @@ class Planner:
             weight = 0.0
         else:
             weight = None
+        # chunk_bytes: the stage's joined input moves once — the finest
+        # declared grant wins (fair-share safety; a coarse edge never
+        # degrades a fine one's pipelining)
+        chunks = [p.chunk_bytes for p in pols if p.chunk_bytes is not None]
         merged = DataPolicy(
             strategy=strategies[0],
             stream=any(p.stream for p in pols),
             dedup=any(p.dedup for p in pols),
             compression=codecs[0] if codecs else "none",
             locality_weight=weight,
-            speculation=max(p.speculation for p in pols))
+            speculation=max(p.speculation for p in pols),
+            chunk_bytes=min(chunks) if chunks else None)
         if any(p.prefetch for p in pols):
             # after the merge: prefetch requires dedup (DataPolicy enforces
             # it per edge, so the OR-ed transport has dedup=True here)
@@ -197,5 +390,38 @@ class Planner:
         return merged
 
 
-__all__ = ["EdgePlan", "ExecutionPlan", "Planner", "PlanError", "StagePlan",
+class AdaptivePlanner(Planner):
+    """Planner wired to a live cluster: telemetry, scheduler α, and fabric
+    grant overhead are read from the cluster, and profiles get their tier
+    fallback filled from node names — the ROADMAP's "pick stream/compression
+    per edge from the Eq. 4 per-edge terms + measured link state".
+
+    Re-planning: compile is cheap and pure, so replanning between stages is
+    just calling :meth:`compile` again — telemetry has folded the measured
+    transfers in the meantime, and an auto edge's argmin follows."""
+
+    def __init__(self, cluster, default: Optional[DataPolicy] = None, **kw):
+        from repro.runtime.platform import Platform
+        kw.setdefault("telemetry", cluster.telemetry)
+        kw.setdefault("scheduling_s", cluster.scheduler.scheduling_s)
+        kw.setdefault("trigger_s", Platform.REF_TRIGGER_OVERHEAD_S)
+        kw.setdefault("chunk_overhead_s", cluster.network.chunk_overhead_s)
+        super().__init__(default, **kw)
+        self.cluster = cluster
+
+    def compile(self, wf, profiles=None) -> ExecutionPlan:
+        if profiles:
+            filled = {}
+            for key, prof in profiles.items():
+                if prof.tiers is None and prof.src_node and prof.dst_node:
+                    prof = dataclasses.replace(
+                        prof, tiers=(self.cluster.tier_of(prof.src_node),
+                                     self.cluster.tier_of(prof.dst_node)))
+                filled[key] = prof
+            profiles = filled
+        return super().compile(wf, profiles)
+
+
+__all__ = ["AdaptivePlanner", "CHUNK_GRID", "EdgePlan", "EdgeProfile",
+           "ExecutionPlan", "Planner", "PlanError", "StagePlan",
            "WorkflowCycleError"]

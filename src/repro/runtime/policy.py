@@ -33,7 +33,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.errors import WorkflowCycleError
 
-STRATEGIES = ("direct", "kvs", "s3")
+STRATEGIES = ("direct", "kvs", "s3", "auto")
 COMPRESSIONS = ("none", "lz4-like")
 
 
@@ -46,7 +46,14 @@ class DataPolicy:
     strategy:
         Where the bytes live in flight: ``direct`` (CSP node-to-node pass),
         ``kvs`` or ``s3`` (producer writes to the storage service, consumer
-        fetches — SDP prefetches it during the cold start).
+        fetches — SDP prefetches it during the cold start), or ``auto`` —
+        the :class:`~repro.runtime.planner.Planner` picks ``stream``/
+        ``compression``/``chunk_bytes`` per edge at compile time by
+        evaluating the Eq. 4 per-edge model over telemetry-backed link
+        estimates (the other fields of an ``auto`` policy — ``dedup``,
+        ``prefetch``, ``locality_weight``, ``speculation`` — are kept).
+        ``auto`` only ever exists pre-compile; plans carry the resolved
+        concrete policy.
     stream:
         Pipeline the transfer at chunk granularity so the consumer starts
         at first-chunk arrival (vs. whole-blob last-byte).
@@ -68,6 +75,12 @@ class DataPolicy:
         Straggler factor: re-dispatch the stage when it exceeds this
         multiple of its predicted time (0 = off). The backup attempt is
         steered to a different node than the straggler.
+    chunk_bytes:
+        Streaming grant size for this edge (None = the fabric default,
+        ``DEFAULT_CHUNK_BYTES``). Small chunks start the pipeline earlier
+        and overlap more per-chunk compute; big chunks pay less per-chunk
+        grant overhead. The adaptive planner picks this per edge from its
+        chunk grid; hand-written policies may pin it too.
     """
 
     strategy: str = "direct"
@@ -77,6 +90,7 @@ class DataPolicy:
     locality_weight: Optional[float] = None
     prefetch: bool = False
     speculation: float = 0.0
+    chunk_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -97,6 +111,9 @@ class DataPolicy:
                 "DigestRegistry can resolve, so it requires dedup=True "
                 "(without a digest the hint is empty and the kick would "
                 "silently never fire)")
+        if self.chunk_bytes is not None and self.chunk_bytes <= 0:
+            raise ValueError(f"chunk_bytes must be positive or None, "
+                             f"got {self.chunk_bytes!r}")
 
     def but(self, **changes) -> "DataPolicy":
         """A copy with ``changes`` applied — derive an edge policy from a

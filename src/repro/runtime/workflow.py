@@ -360,4 +360,7 @@ class WorkflowRunner:
                               meta=meta)
                 out, rec = cluster.platform.invoke(req)      # body held at ingress
 
+        # profiled plans carry a compile-time Eq. 4 prediction per stage;
+        # stamping it here makes predicted-vs-measured error assertable
+        rec.predicted_s = sp.predicted_s
         return StageResult(name=name, output=out, record=rec, put_s=put_s)

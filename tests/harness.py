@@ -1,0 +1,98 @@
+"""Fault-injection harness: degrade a cluster's fabric links mid-workflow.
+
+Wraps a live :class:`~repro.runtime.cluster.Cluster` and mutates its
+channels in place — the same objects every in-flight CSP/SDP/prefetch
+transfer and every telemetry observation goes through — so tests can
+assert the system's *reaction* to link failure, not just its steady state:
+
+  * ``degrade(src, dst, bandwidth_factor=, extra_rtt=)`` — a congested or
+    rate-limited link: every subsequent grant is slower / later, and the
+    :class:`~repro.runtime.netsim.LinkTelemetry` EWMAs converge onto the
+    degraded values (which is what steers an adaptive re-plan).
+  * ``stall_streams(src, dst, after_chunks=k)`` — a wedged link: streamed
+    transfers deliver ``k`` chunks and then block until :meth:`restore`.
+    The data-path thread outlives its join budget and surfaces
+    ``TransferStallError`` instead of silently leaking.
+
+``restore()`` (also via context manager exit) releases every stalled
+stream and puts bandwidth/latency back, so no daemon thread outlives the
+test wedged on a harness gate.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Tuple
+
+from repro.runtime.netsim import Channel, DEFAULT_CHUNK_BYTES
+
+
+class LinkFaults:
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self._orig: Dict[int, Tuple[Channel, float, float]] = {}
+        self._gates: List[threading.Event] = []
+        self._stalled: List[Channel] = []
+
+    # ------------------------------------------------------------ plumbing
+    def channel(self, src: str, dst: str) -> Channel:
+        c = self.cluster
+        return c.network.channel(c.node(src), c.node(dst))
+
+    def _remember(self, ch: Channel) -> None:
+        self._orig.setdefault(id(ch), (ch, ch.bandwidth, ch.latency))
+
+    # -------------------------------------------------------------- faults
+    def degrade(self, src: str, dst: str, *, bandwidth_factor: float = 1.0,
+                extra_rtt: float = 0.0) -> Channel:
+        """Scale the link's bandwidth and/or add RTT, effective for every
+        grant from now on (in-flight chunk streams feel it mid-stream)."""
+        ch = self.channel(src, dst)
+        self._remember(ch)
+        ch.bandwidth *= bandwidth_factor
+        ch.latency += extra_rtt
+        return ch
+
+    def stall_streams(self, src: str, dst: str,
+                      after_chunks: int = 1) -> Channel:
+        """Wedge the link for chunk streams: deliver ``after_chunks`` chunks,
+        then block until :meth:`restore` (the consumer sees a transfer that
+        never completes — the TransferStallError path)."""
+        ch = self.channel(src, dst)
+        gate = threading.Event()
+        self._gates.append(gate)
+        self._stalled.append(ch)
+        real_stream = ch.stream          # bound method of the real channel
+
+        def stalled(payload, chunk_bytes=DEFAULT_CHUNK_BYTES,
+                    wire_ratio=1.0, pace_bps=None):
+            def gen():
+                it = real_stream(payload, chunk_bytes,
+                                 wire_ratio=wire_ratio, pace_bps=pace_bps)
+                for i, chunk in enumerate(it):
+                    if i >= after_chunks:
+                        gate.wait()      # wedged until restore()
+                    yield chunk
+            return gen()
+
+        # instance attribute shadows the dataclass method for THIS channel
+        ch.stream = stalled
+        return ch
+
+    # ------------------------------------------------------------- cleanup
+    def restore(self) -> None:
+        """Release every stalled stream and undo all degradations."""
+        for gate in self._gates:
+            gate.set()
+        self._gates.clear()
+        for ch in self._stalled:
+            ch.__dict__.pop("stream", None)
+        self._stalled.clear()
+        for ch, bw, lat in self._orig.values():
+            ch.bandwidth, ch.latency = bw, lat
+        self._orig.clear()
+
+    def __enter__(self) -> "LinkFaults":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.restore()

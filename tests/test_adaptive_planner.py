@@ -1,0 +1,366 @@
+"""Adaptive planner: telemetry-backed Eq. 4 auto-selection per edge.
+
+Covers: LinkTelemetry EWMA measurement/seeding, ``DataPolicy(strategy=
+"auto")`` argmin resolution (stream/compression/chunk grid), per-edge
+``chunk_bytes`` plumbing down to the channel grants, compile-time Eq. 4
+predictions stamped on LifecycleRecords (error ≤ 10% asserted), and the
+property suite: for random DAGs and random link matrices the auto plan's
+model time never exceeds either uniform extreme, and compilation is
+deterministic given frozen telemetry."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import model as tm
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import (Channel, DEFAULT_CHUNK_BYTES, GBPS,
+                                  LinkTelemetry)
+from repro.runtime.planner import (AdaptivePlanner, CHUNK_GRID, EdgeProfile,
+                                   Planner)
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
+
+MB = 1 << 20
+AUTO = DataPolicy(strategy="auto")
+BLOB = DataPolicy()
+STREAM_LZ4 = DataPolicy(stream=True, compression="lz4-like")
+
+
+def _spec(name, *, provision_s=0.5, startup_s=0.1, exec_s=0.2,
+          streaming=False, affinity=None, handler=None):
+    return FunctionSpec(name, handler or (lambda d, inv: d),
+                        provision_s=provision_s, startup_s=startup_s,
+                        exec_s=exec_s, streaming=streaming,
+                        affinity=affinity)
+
+
+def _streaming_consumer(gamma_s, total_bytes, out=None):
+    """Handler that drives get_input_stream with per-chunk compute summing
+    to ``gamma_s`` (the planner's γ), independent of chunk size."""
+    rate = gamma_s / max(total_bytes, 1)
+
+    def handler(_d, inv):
+        pacer = inv.cluster.clock.pacer()
+        n = 0
+        for chunk in inv.get_input_stream(timeout=120):
+            pacer.sleep(len(chunk) * rate)
+            n += len(chunk)
+        return out if out is not None else bytes(8)
+    return handler
+
+
+# ------------------------------------------------------------ LinkTelemetry
+def test_telemetry_seed_and_observe_ewma():
+    tel = LinkTelemetry(alpha=0.25)
+    tel.seed(tier_key=("edge", "edge"), bandwidth=100.0, rtt=0.01)
+    est = tel.link("a", "b", tiers=("edge", "edge"))
+    assert est.bandwidth == 100.0 and est.samples == 0
+    # node-pair observations take precedence over the tier prior
+    for _ in range(30):
+        tel.observe_transfer(("a", "b"), ("edge", "edge"),
+                             nbytes=1000, seconds=50.0, rtt=0.02)
+    est = tel.link("a", "b", tiers=("edge", "edge"))
+    assert est.bandwidth == pytest.approx(20.0, rel=0.05)   # 1000/50
+    assert est.rtt == pytest.approx(0.02, rel=0.05)
+    assert est.samples == 30
+    # the tier EWMA converged off its seed toward the same evidence
+    tier = tel.link(None, None, tiers=("edge", "edge"))
+    assert tier.bandwidth == pytest.approx(20.0, rel=0.05)
+    # unknown links resolve to nothing rather than a made-up number
+    assert tel.link("x", "y") is None
+
+
+def test_telemetry_codec_ratio_ewma():
+    tel = LinkTelemetry(alpha=0.5)
+    assert tel.codec_ratio("lz4-like") is None
+    assert tel.codec_ratio("lz4-like", default=1.0) == 1.0
+    tel.observe_codec("lz4-like", 0.1)
+    tel.observe_codec("lz4-like", 0.3)
+    assert tel.codec_ratio("lz4-like") == pytest.approx(0.2)
+
+
+def test_channel_reports_grants_to_telemetry():
+    tel = LinkTelemetry()
+    ch = Channel("t", bandwidth=1e8, latency=0.001, clock=Clock(0.0),
+                 link_key=("a", "b"), tier_key=("edge", "edge"),
+                 telemetry=tel)
+    ch.transfer(bytes(4 * MB))
+    for _ in ch.stream(bytes(4 * MB), chunk_bytes=MB):
+        pass
+    est = tel.link("a", "b")
+    assert est.bandwidth == pytest.approx(1e8, rel=0.01)
+    assert est.rtt == pytest.approx(0.001, rel=0.2)
+    assert est.samples == 5                       # 1 blob + 4 chunks
+    assert tel.stats["observations"] == 5
+
+
+def test_cluster_seeds_tier_priors():
+    cluster = Cluster(clock=Clock(0.0))
+    est = cluster.telemetry.link(None, None, tiers=("edge", "cloud"))
+    bw, lat = cluster.network.tier_links[("edge", "cloud")]
+    assert est.bandwidth == bw and est.rtt == lat and est.samples == 0
+
+
+# ------------------------------------------------------- auto resolution
+def _one_edge_plan(spec, profile, *, telemetry=None, default=AUTO):
+    tel = telemetry
+    if tel is None:
+        tel = LinkTelemetry()
+        tel.seed(link_key=("s", "d"), bandwidth=0.2 * GBPS, rtt=0.02)
+    b = WorkflowBuilder("auto1", default_policy=default)
+    b.stage("a", _spec("auto1-a"))
+    b.stage("b", spec).after("a")
+    plan = Planner(telemetry=tel).compile(
+        b.build(), profiles={("a", "b"): profile})
+    return plan.stages["b"].edge_policy("a")
+
+
+def test_auto_picks_compression_on_slow_wan():
+    """Compressible payload, bandwidth-bound WAN: stream + lz4 wins."""
+    spec = _spec("wan-auto", streaming=True)
+    pol = _one_edge_plan(
+        spec, EdgeProfile(size=64 * MB, src_node="s", dst_node="d",
+                          compress_ratio=0.05))
+    assert pol.strategy == "direct"
+    assert pol.compression == "lz4-like"
+    assert pol.stream and pol.chunk_bytes in CHUNK_GRID
+
+
+def test_auto_rejects_compression_on_codec_bound_link():
+    """A link faster than the codec makes compression a slowdown (the
+    transfer becomes codec-bound) — auto keeps the wire uncompressed."""
+    tel = LinkTelemetry()
+    tel.seed(link_key=("s", "d"), bandwidth=10.0 * GBPS, rtt=0.0002)
+    spec = _spec("cc-auto")
+    pol = _one_edge_plan(
+        spec, EdgeProfile(size=64 * MB, src_node="s", dst_node="d",
+                          compress_ratio=0.05),
+        telemetry=tel)
+    assert pol.compression == "none"
+
+
+def test_auto_without_telemetry_or_profile_is_conservative():
+    b = WorkflowBuilder("auto0", default_policy=AUTO)
+    b.stage("a", _spec("auto0-a"))
+    b.stage("b", _spec("auto0-b")).after("a")
+    plan = Planner().compile(b.build())          # no telemetry, no profiles
+    pol = plan.stages["b"].edge_policy("a")
+    assert pol.strategy == "direct"
+    assert not pol.stream and pol.compression == "none"
+    assert plan.predicted_total is None
+
+
+def test_auto_preserves_non_transport_fields():
+    tel = LinkTelemetry()
+    tel.seed(link_key=("s", "d"), bandwidth=0.2 * GBPS, rtt=0.02)
+    pol = _one_edge_plan(
+        _spec("keep-auto"),
+        EdgeProfile(size=32 * MB, src_node="s", dst_node="d"),
+        telemetry=tel,
+        default=DataPolicy(strategy="auto", dedup=True, prefetch=True,
+                           locality_weight=3.0, speculation=2.5))
+    assert pol.dedup and pol.prefetch
+    assert pol.locality_weight == 3.0 and pol.speculation == 2.5
+
+
+def test_chunk_bytes_validation_and_merge():
+    with pytest.raises(ValueError, match="chunk_bytes"):
+        DataPolicy(chunk_bytes=0)
+    b = WorkflowBuilder("chunks")
+    b.stage("a", _spec("ch-a"))
+    b.stage("b", _spec("ch-b"))
+    b.stage("j", _spec("ch-j")) \
+        .after("a", policy=DataPolicy(stream=True, chunk_bytes=4 * MB)) \
+        .after("b", policy=DataPolicy(stream=True, chunk_bytes=MB))
+    plan = b.plan()
+    # the joined input moves once: the finest declared grant wins
+    assert plan.stages["j"].transport.chunk_bytes == MB
+
+
+def test_policy_chunk_bytes_reaches_channel_grants(fast_clock):
+    """Per-edge chunk_bytes plumbs EdgePlan -> CSP -> Channel.stream: the
+    grant count (telemetry observations) matches the policy's chunk size."""
+    payload = bytes(4 * MB)
+    counts = {}
+    for chunk in (MB, 256 * 1024):
+        cluster = Cluster(clock=fast_clock)
+        cluster.platform.register(
+            FunctionSpec(f"chunk-{chunk}", lambda d, inv: d[:4],
+                         provision_s=0.2, startup_s=0.05, exec_s=0.01,
+                         affinity="edge-1"))
+        before = cluster.telemetry.stats["observations"]
+        cluster.node("edge-0").truffle.pass_data(
+            f"chunk-{chunk}", payload,
+            policy=DataPolicy(stream=True, chunk_bytes=chunk))
+        counts[chunk] = cluster.telemetry.stats["observations"] - before
+    assert counts[MB] == 4
+    assert counts[256 * 1024] == 16
+
+
+# --------------------------------------------------- Eq. 4 predictions
+def _hetero_chain(tag, *, size, gamma=0.2):
+    """src(edge-0) -> mid(edge-1) -> fin(cloud-0): LAN hop carrying
+    incompressible bytes, WAN hop carrying compressible bytes."""
+    import random
+    rnd = random.Random(7)
+    lan_payload = rnd.randbytes(size)
+
+    b = WorkflowBuilder(f"het{tag}", default_policy=AUTO)
+    b.stage("src", _spec(f"src{tag}", exec_s=0.05, affinity="edge-0",
+                         handler=lambda d, inv: lan_payload))
+    b.stage("mid", _spec(f"mid{tag}", streaming=True, exec_s=gamma,
+                         affinity="edge-1",
+                         handler=_streaming_consumer(gamma, size,
+                                                     out=bytes(size)))
+            ).after("src")
+    b.stage("fin", _spec(f"fin{tag}", streaming=True, exec_s=gamma,
+                         affinity="cloud-0",
+                         handler=_streaming_consumer(gamma, size))
+            ).after("mid")
+    wf = b.build()
+    profiles = {
+        ("src", "mid"): EdgeProfile(size=size, src_node="edge-0",
+                                    dst_node="edge-1", compress_ratio=1.0),
+        ("mid", "fin"): EdgeProfile(size=size, src_node="edge-1",
+                                    dst_node="cloud-0", compress_ratio=0.05),
+    }
+    return wf, profiles
+
+
+def test_eq4_prediction_error_within_10pct():
+    """Compile-time Eq. 4 per-edge predictions vs measured stage times on
+    the auto plan: error ≤ 10% for every cold stage."""
+    clock = Clock(0.1)
+    cluster = Cluster(clock=clock)
+    wf, profiles = _hetero_chain("-eq4", size=24 * MB)
+    plan = AdaptivePlanner(cluster).compile(wf, profiles=profiles)
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True,
+                            plan=plan)
+    tr = runner.run(wf, b"go", source_node="edge-0")
+    checked = 0
+    for name in ("mid", "fin"):
+        rec = tr.stages[name].record
+        if not rec.cold:
+            continue
+        assert rec.predicted_s is not None
+        measured = clock.elapsed_sim(rec.total)
+        err = abs(rec.predicted_s - measured) / measured
+        assert err <= 0.10, (name, rec.predicted_s, measured)
+        checked += 1
+    assert checked >= 1
+
+
+def test_auto_plan_measured_no_worse_than_uniform_extremes():
+    """Measured end-to-end: the auto plan is not beaten by either uniform
+    extreme (all whole-blob, all stream+lz4) on the heterogeneous chain."""
+    clock = Clock(0.05)
+    totals = {}
+    for label, default in (("auto", AUTO), ("blob", BLOB),
+                           ("slz4", STREAM_LZ4)):
+        cluster = Cluster(clock=clock)
+        wf, profiles = _hetero_chain(f"-mx-{label}", size=24 * MB)
+        wf.default_policy = default
+        plan = AdaptivePlanner(cluster).compile(wf, profiles=profiles)
+        runner = WorkflowRunner(cluster, use_truffle=True,
+                                prewarm_roots=True, plan=plan)
+        tr = runner.run(wf, b"go", source_node="edge-0")
+        totals[label] = clock.elapsed_sim(tr.total)
+    floor = min(totals["blob"], totals["slz4"])
+    assert totals["auto"] <= floor * 1.05 + 0.1, totals
+
+
+# ------------------------------------------------------- property suite
+N = 5
+TRI = [(i, j) for i in range(N) for j in range(i + 1, N)]
+
+
+def _compile_three(edge_flags, sizes_mb, bws, rtts, ratios):
+    """Build the random DAG + link matrix; compile auto and the two
+    uniform extremes against identical profiles/telemetry."""
+    tel = LinkTelemetry()
+    edges = [(i, j) for flag, (i, j) in zip(edge_flags, TRI) if flag]
+    profiles = {}
+    for k, (i, j) in enumerate(edges):
+        tel.seed(link_key=(f"n{i}", f"n{j}"),
+                 bandwidth=bws[k % len(bws)], rtt=rtts[k % len(rtts)])
+        profiles[(f"s{i}", f"s{j}")] = EdgeProfile(
+            size=int(sizes_mb[k % len(sizes_mb)] * MB),
+            src_node=f"n{i}", dst_node=f"n{j}",
+            compress_ratio=ratios[k % len(ratios)])
+
+    def build():
+        b = WorkflowBuilder("prop")
+        for i in range(N):
+            b.stage(f"s{i}", _spec(f"p{i}", streaming=(i % 2 == 0)))
+        for i, j in edges:
+            b.edge(f"s{i}", f"s{j}")
+        return b.build()
+
+    plans = {}
+    for label, default in (("auto", AUTO), ("blob", BLOB),
+                           ("slz4", STREAM_LZ4)):
+        plans[label] = Planner(default=default, telemetry=tel).compile(
+            build(), profiles=profiles)
+    return plans
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.tuples(*[st.booleans()] * len(TRI)),
+    st.tuples(*[st.floats(min_value=0.5, max_value=192.0)] * 4),
+    st.tuples(*[st.floats(min_value=1e6, max_value=2e9)] * 4),
+    st.tuples(*[st.floats(min_value=0.0, max_value=0.05)] * 4),
+    st.tuples(*[st.floats(min_value=0.03, max_value=1.0)] * 4),
+)
+def test_auto_never_exceeds_uniform_extremes(edge_flags, sizes_mb, bws,
+                                             rtts, ratios):
+    """Property: for random DAGs and random link matrices, the auto plan's
+    model time (Eq. 5 over per-edge Eq. 4 terms) never exceeds EITHER
+    uniform extreme — per-edge argmin dominates any uniform choice."""
+    plans = _compile_three(edge_flags, sizes_mb, bws, rtts, ratios)
+    auto_t = plans["auto"].predicted_total
+    for extreme in ("blob", "slz4"):
+        ext_t = plans[extreme].predicted_total
+        if auto_t is None or ext_t is None:
+            assert auto_t is None and ext_t is None    # edgeless DAG
+            continue
+        assert auto_t <= ext_t + 1e-9, (auto_t, ext_t, extreme)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.tuples(*[st.booleans()] * len(TRI)),
+    st.tuples(*[st.floats(min_value=0.5, max_value=192.0)] * 4),
+    st.tuples(*[st.floats(min_value=1e6, max_value=2e9)] * 4),
+    st.tuples(*[st.floats(min_value=0.0, max_value=0.05)] * 4),
+    st.tuples(*[st.floats(min_value=0.03, max_value=1.0)] * 4),
+)
+def test_compile_deterministic_given_frozen_telemetry(edge_flags, sizes_mb,
+                                                      bws, rtts, ratios):
+    """Property: same workflow + frozen telemetry -> identical plans
+    (resolved policies AND predictions), twice over."""
+    a = _compile_three(edge_flags, sizes_mb, bws, rtts, ratios)["auto"]
+    b = _compile_three(edge_flags, sizes_mb, bws, rtts, ratios)["auto"]
+    assert a.order == b.order
+    for name in a.order:
+        ea = a.stages[name].in_edges
+        eb = b.stages[name].in_edges
+        assert [(e.src, e.policy, e.predicted_s) for e in ea] \
+            == [(e.src, e.policy, e.predicted_s) for e in eb]
+    assert a.predicted_total == b.predicted_total
+    assert a.describe() == b.describe()
+
+
+# ---------------------------------------------------- model edge cases
+def test_edge_delta_allows_codec_bound_stretch():
+    p = tm.PhaseEstimate(alpha=0.1, nu=0.5, eta=0.1, delta=1.0, gamma=0.2)
+    assert tm.edge_delta(p, wire_ratio=3.0) == pytest.approx(3.0)
+    assert tm.edge_time(p, wire_ratio=3.0) == pytest.approx(0.1 + 3.0 + 0.2)
+    # overhead is additive and un-compressible
+    assert tm.edge_time(p, wire_ratio=0.1, overhead_s=0.7) \
+        == pytest.approx(0.1 + max(0.6, 0.1 + 0.7) + 0.2)

@@ -1,0 +1,111 @@
+"""Compression accounting: wire grants charge wire bytes (not raw bytes),
+codec-bound transfers pace at the codec, and the lifecycle record's
+``compress_ratio`` matches the codec's sampled estimate."""
+import random
+import time
+import zlib
+
+import pytest
+
+from repro.distributed.compression import LZ4_LIKE, chunk_codec
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import Channel, LinkTelemetry
+from repro.runtime.policy import DataPolicy
+
+MB = 1 << 20
+
+
+def _observed(tel):
+    snap = tel.snapshot()["links"][("a", "b")]
+    return snap
+
+
+def test_transfer_grants_charge_wire_bytes():
+    """Whole-blob with wire_ratio: the bandwidth grant (what telemetry sees
+    as seconds-on-the-wire) covers the COMPRESSED bytes only."""
+    for ratio in (1.0, 0.25):
+        tel = LinkTelemetry()
+        ch = Channel("t", bandwidth=1e8, latency=0.0, clock=Clock(0.0),
+                     link_key=("a", "b"), telemetry=tel)
+        payload = bytes(8 * MB)
+        ch.transfer(payload, wire_ratio=ratio)
+        est = _observed(tel)
+        wire = Channel.wire_bytes(len(payload), ratio)
+        assert wire == int(len(payload) * ratio)
+        # one observation: bandwidth = wire_bytes / wire_seconds = nominal
+        assert est.bandwidth == pytest.approx(1e8, rel=0.01)
+
+
+def test_stream_grants_charge_wire_bytes_wall_time():
+    """Chunk streams with wire_ratio=0.25 take ~1/4 the wall time of the
+    uncompressed stream — grants shrink with the wire bytes."""
+    clock = Clock(0.5)
+    durations = {}
+    for ratio in (1.0, 0.25):
+        ch = Channel("t", bandwidth=2e8, latency=0.0, clock=clock)
+        t0 = time.monotonic()
+        for _ in ch.stream(bytes(64 * MB), wire_ratio=ratio):
+            pass
+        durations[ratio] = clock.elapsed_sim(time.monotonic() - t0)
+    expected = durations[1.0] * 0.25
+    assert durations[0.25] == pytest.approx(expected, rel=0.3)
+
+
+def test_codec_bound_transfer_paces_at_codec_throughput():
+    """pace_bps below the wire rate: the transfer finishes at the codec's
+    rate (payload/pace), not the wire's — compression on a fat link is a
+    slowdown, which is exactly what the adaptive planner prices in."""
+    clock = Clock(0.5)
+    ch = Channel("t", bandwidth=1e9, latency=0.0, clock=clock)
+    payload = bytes(16 * MB)
+    t0 = time.monotonic()
+    ch.transfer(payload, wire_ratio=0.05, pace_bps=1e8)
+    paced = clock.elapsed_sim(time.monotonic() - t0)
+    assert paced == pytest.approx(len(payload) / 1e8, rel=0.25)
+
+    t0 = time.monotonic()
+    for _ in ch.stream(payload, wire_ratio=0.05, pace_bps=1e8):
+        pass
+    paced = clock.elapsed_sim(time.monotonic() - t0)
+    assert paced == pytest.approx(len(payload) / 1e8, rel=0.25)
+
+
+def test_codec_ratio_sampled_estimate():
+    """The codec's ratio comes from deflating a sampled head window, with
+    the framing floor as a lower bound and 1.0 as the cap."""
+    codec = chunk_codec("lz4-like")
+    zeros = bytes(4 * MB)
+    assert codec.ratio(zeros) == pytest.approx(codec.floor)
+    rnd = random.Random(3).randbytes(4 * MB)
+    assert codec.ratio(rnd) == pytest.approx(1.0)
+    sample = rnd[:codec.sample_bytes]
+    expected = min(1.0, max(codec.floor,
+                            len(zlib.compress(sample, codec.level))
+                            / len(sample)))
+    assert codec.ratio(rnd) == expected
+
+
+@pytest.mark.parametrize("stream", [False, True])
+def test_record_compress_ratio_matches_sampled_estimate(fast_clock, stream):
+    """CSP pass with lz4-like: record.compress_ratio equals the codec's
+    sampled estimate of THIS payload (both blob and stream paths), and
+    telemetry's codec EWMA tracks it."""
+    cluster = Cluster(clock=fast_clock)
+    name = f"cmp-acct-{stream}"
+    cluster.platform.register(
+        FunctionSpec(name, lambda d, inv: d[:4], provision_s=0.2,
+                     startup_s=0.05, exec_s=0.01, affinity="cloud-0"))
+    # half-compressible payload -> a mid-range sampled ratio
+    rnd = random.Random(11)
+    payload = b"".join(rnd.randbytes(32 * 1024) + bytes(32 * 1024)
+                       for _ in range(64))
+    expected = LZ4_LIKE.ratio(payload)
+    assert 0.1 < expected < 0.9               # genuinely mid-range
+    _, rec = cluster.node("edge-0").truffle.pass_data(
+        name, payload,
+        policy=DataPolicy(stream=stream, compression="lz4-like"))
+    assert rec.compress_ratio == pytest.approx(expected, rel=0.01)
+    assert cluster.telemetry.codec_ratio("lz4-like") \
+        == pytest.approx(expected, rel=0.01)

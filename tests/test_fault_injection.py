@@ -1,0 +1,131 @@
+"""Fault injection (tests/harness.py): degraded and wedged fabric links.
+
+Regression surface: a stalled chunk stream surfaces TransferStallError
+(not a silent daemon-thread leak), speculation steers the backup attempt
+off the node behind the degraded link, telemetry EWMAs converge onto the
+degraded link values, and an adaptive re-plan against the converged
+telemetry flips the edge policy the degradation invalidated."""
+import pytest
+
+from harness import LinkFaults
+from repro.core.errors import TransferStallError
+from repro.core.model import PhaseEstimate
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import GBPS
+from repro.runtime.planner import AdaptivePlanner, EdgeProfile
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.workflow import Stage, Workflow, WorkflowRunner
+
+MB = 1 << 20
+
+
+def test_stalled_chunk_surfaces_transfer_stall_error(fast_clock):
+    """A link that wedges mid-stream: the function consumes what arrived,
+    but the data-path thread outlives its join budget — recorded on the
+    lifecycle record and raised, never silently leaked."""
+    cluster = Cluster(clock=fast_clock)
+
+    def first_chunk_only(_d, inv):
+        next(iter(inv.get_input_stream(timeout=30)))
+        return b"partial"
+
+    cluster.platform.register(
+        FunctionSpec("stall-strm", first_chunk_only, provision_s=0.2,
+                     startup_s=0.05, exec_s=0.01, streaming=True,
+                     affinity="edge-1"))
+    truffle = cluster.node("edge-0").truffle
+    truffle.csp.join_timeout_s = 0.3
+    with LinkFaults(cluster) as faults:
+        faults.stall_streams("edge-0", "edge-1", after_chunks=1)
+        with pytest.raises(TransferStallError) as exc:
+            truffle.pass_data("stall-strm", bytes(4 * MB),
+                              policy=DataPolicy(stream=True))
+    assert exc.value.record.transfer_stalled
+
+
+def test_speculation_steers_off_degraded_node(fast_clock):
+    """The first attempt lands behind a near-dead link and straggles; the
+    speculative backup carries an avoid hint for that node and finishes
+    elsewhere."""
+    cluster = Cluster(clock=fast_clock)
+    # edge-0 is the source (loaded out of contention), so the first attempt
+    # places on edge-1 — whose ingress link we then kill
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-0"] = 5
+    spec = FunctionSpec("spec-fn", lambda d, inv: d[:4], provision_s=0.1,
+                        startup_s=0.05, exec_s=0.01)
+    wf = Workflow("w", {"s": Stage(spec, policy=DataPolicy(speculation=2.0))})
+    est = {"s": PhaseEstimate(alpha=0.15, nu=0.1, eta=0.05, delta=0.05,
+                              gamma=0.01)}
+    runner = WorkflowRunner(cluster, use_truffle=True, estimates=est)
+    with LinkFaults(cluster) as faults:
+        faults.degrade("edge-0", "edge-1", bandwidth_factor=1e-5)
+        tr = runner.run(wf, bytes(4 * MB), source_node="edge-0")
+    sr = tr.stages["s"]
+    assert sr.speculated                      # the backup won
+    assert sr.record.node != "edge-1"         # steered off the straggler
+    assert sr.output == bytes(4)
+
+
+def test_telemetry_converges_to_degraded_link(fast_clock):
+    """Passive measurement tracks the fault: after a bandwidth drop + RTT
+    spike, the EWMA estimates converge onto the degraded values."""
+    cluster = Cluster(clock=Clock(0.0))
+    src, dst = cluster.node("edge-0"), cluster.node("edge-1")
+    bw0, _ = cluster.network.tier_links[("edge", "edge")]
+    with LinkFaults(cluster) as faults:
+        faults.degrade("edge-0", "edge-1", bandwidth_factor=0.1,
+                       extra_rtt=0.05)
+        for _ in range(30):
+            cluster.transfer(src, dst, bytes(MB))
+        est = cluster.telemetry.link("edge-0", "edge-1")
+        assert est.samples == 30
+        assert est.bandwidth == pytest.approx(0.1 * bw0, rel=0.05)
+        assert est.rtt == pytest.approx(0.0505, rel=0.1)
+    # restore + fresh traffic converges back up
+    for _ in range(40):
+        cluster.transfer(src, dst, bytes(MB))
+    est = cluster.telemetry.link("edge-0", "edge-1")
+    assert est.bandwidth == pytest.approx(bw0, rel=0.05)
+
+
+def test_replan_after_degradation_flips_edge_policy():
+    """Re-planning between stages is just compiling again: a fat link that
+    made compression codec-bound (auto says none) degrades into a
+    bandwidth-bound one, telemetry converges, and the next compile flips
+    the same edge to stream+lz4."""
+    cluster = Cluster(node_specs=[("cloud-0", "cloud"), ("cloud-1", "cloud")],
+                      clock=Clock(0.0))
+    b = WorkflowBuilder("replan",
+                        default_policy=DataPolicy(strategy="auto"))
+    b.stage("a", FunctionSpec("rp-a", lambda d, inv: d, provision_s=0.2,
+                              startup_s=0.05, exec_s=0.05))
+    b.stage("b", FunctionSpec("rp-b", lambda d, inv: d, provision_s=0.2,
+                              startup_s=0.05, exec_s=0.05)).after("a")
+    wf = b.build()
+    profiles = {("a", "b"): EdgeProfile(size=32 * MB, src_node="cloud-0",
+                                        dst_node="cloud-1",
+                                        compress_ratio=0.05)}
+    planner = AdaptivePlanner(cluster)
+
+    plan = planner.compile(wf, profiles=profiles)
+    # 10 Gbit/s link: the codec is the bottleneck — ship uncompressed
+    assert plan.stages["b"].edge_policy("a").compression == "none"
+
+    src, dst = cluster.node("cloud-0"), cluster.node("cloud-1")
+    faults = LinkFaults(cluster)
+    faults.degrade("cloud-0", "cloud-1", bandwidth_factor=1e-3)
+    for _ in range(30):
+        cluster.transfer(src, dst, bytes(MB))
+    est = cluster.telemetry.link("cloud-0", "cloud-1")
+    assert est.bandwidth == pytest.approx(1e-3 * 10 * GBPS, rel=0.05)
+
+    replanned = planner.compile(wf, profiles=profiles)
+    pol = replanned.stages["b"].edge_policy("a")
+    # now bandwidth-bound: compression (and pipelining) win the argmin
+    assert pol.compression == "lz4-like"
+    assert plan.stages["b"].predicted_s is not None
+    assert replanned.stages["b"].predicted_s is not None
+    faults.restore()

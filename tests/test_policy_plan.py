@@ -415,8 +415,9 @@ def test_prefetch_relay_honors_edge_compression():
         durations[compression] = time.monotonic() - t0
         assert cluster.node("cloud-0").buffer.find_digest(d)
         assert cluster.prefetcher.stats["relays"] == 1
-    # 32 MB over the 0.2 Gbit/s WAN: ~1.28 sim-s plain vs ~0.064 compressed
-    assert durations["lz4-like"] < durations["none"] / 3
+    # 32 MB over the 0.2 Gbit/s WAN: ~1.28 sim-s plain vs ~0.33 compressed
+    # (the relay is codec-bound at compress_bps, not wire-bound)
+    assert durations["lz4-like"] < durations["none"] / 1.7
 
 
 def test_prefetch_not_kicked_without_policy(fast_clock):
@@ -462,10 +463,12 @@ def test_fanin_prefetch_relays_only_the_shipped_blob(fast_clock):
     assert cluster.prefetcher.stats["kicks"] == 1
 
 
-def test_sdp_storage_fetch_does_not_prefetch(fast_clock):
-    """A storage-backed input fetches via the Data Engine, which reads the
-    service directly and never follows fabric relays — prefetch on such an
-    edge would ship the bytes twice, so SDP strips it from the hint."""
+def test_sdp_storage_fetch_follows_prefetch_relay(fast_clock):
+    """A storage-strategy edge CAN prefetch: the Data Engine consults the
+    cluster RelayTable before touching storage, so the relay kicked at
+    placement time moves the bytes exactly once and the engine's fetch
+    becomes its follower (no second storage read — single-transfer
+    accounting)."""
     cluster = Cluster(clock=fast_clock)
     payload = bytes(2 * MB)
     cluster.storage["kvs"].put("pf-obj", payload)
@@ -480,13 +483,22 @@ def test_sdp_storage_fetch_does_not_prefetch(fast_clock):
     ref = ContentRef("kvs", "pf-obj", len(payload))
     pol = DataPolicy(strategy="kvs", dedup=True, prefetch=True)
     truffle.handle_request(Request(fn="pf-a", content_ref=ref), policy=pol)
+    engine = cluster.node("cloud-0").truffle.engine
+    fetches_before = engine.stats["fetches"]
     _, rec = truffle.handle_request(Request(fn="pf-b", content_ref=ref),
                                     policy=pol)
     assert rec.node == "cloud-0"             # pinned off the holder
-    assert not rec.prefetched                # kick suppressed: fetch path
-    assert cluster.prefetcher.stats["kicks"] == 0
-    # the bytes moved once per node, via the storage service only
-    assert cluster.node("cloud-0").truffle.engine.stats["fetches"] == 1
+    assert rec.prefetched                    # scheduler kicked the relay
+    assert cluster.prefetcher.stats["kicks"] == 1
+    assert cluster.prefetcher.stats["relays"] == 1
+    # single-transfer accounting: the engine aliased the relayed bytes —
+    # no storage read happened on the target, the fabric moved them once
+    assert rec.dedup_hit and rec.relay_shared
+    assert engine.stats["relay_follows"] == 1
+    assert engine.stats["fetches"] == fetches_before
+    assert engine.stats["bytes_fetched"] == 0
+    assert cluster.node("cloud-0").buffer.find_digest(
+        content_digest(payload))
 
 
 # ------------------------------------------------------- WAN chunk compression
