@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
               multi-input fan-in hints vs joined-blob hashing
   adaptive.*  telemetry-backed auto plans vs the exhaustive per-edge
               oracle and the best uniform configuration (+ Eq. 4 error)
+  replan.*    mid-flight re-planning under a wave-2 link degradation:
+              frozen plan vs replanned vs post-degradation oracle, plus
+              speculation="auto" budget resolution
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
@@ -47,8 +50,8 @@ def main() -> None:
 
     from benchmarks import (adaptive_sweep, chained_sweep, chained_total,
                             coldstart_sweep, lifecycle, locality_sweep,
-                            model_validation, policy_sweep, roofline,
-                            streaming_sweep, video_analytics)
+                            model_validation, policy_sweep, replan_sweep,
+                            roofline, streaming_sweep, video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -73,6 +76,9 @@ def main() -> None:
 
     print("# --- adaptive planner (auto vs oracle vs uniforms) ---")
     adaptive_sweep.run()
+
+    print("# --- mid-flight re-planning (frozen vs replanned vs oracle) ---")
+    replan_sweep.run()
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")

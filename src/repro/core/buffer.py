@@ -19,6 +19,10 @@ under a new invocation key with zero copy and zero transfer (dedup hit).
 
 Knobs: ``capacity_bytes`` bounds resident bytes (LRU over complete unpinned
 entries, O(1) amortized eviction); chunk size is chosen by the writer.
+With a ``replica_oracle`` wired (Cluster does, from the DigestRegistry),
+eviction is residency-aware: replicas that still resolve on another node
+go first, and the cluster's last copy of a digest survives LRU pressure
+while any other victim remains.
 
 Residency reporting: assigning ``on_residency`` (a callable
 ``(digest, size, resident: bool) -> None``) makes the buffer report every
@@ -127,6 +131,12 @@ class Buffer:
                       "dedup_hits": 0, "streams": 0}
         #: residency listener: (digest, size, resident) — see module docstring
         self.on_residency: Optional[Callable[[str, int, bool], None]] = None
+        #: residency-aware eviction oracle: ``digest -> True`` when the
+        #: content still resolves on some OTHER node (wired by Cluster from
+        #: the DigestRegistry). With an oracle set, eviction sheds replicas
+        #: that exist elsewhere first and keeps the cluster's LAST copy of
+        #: a digest alive as long as any other victim is available.
+        self.replica_oracle: Optional[Callable[[str], bool]] = None
         self._pending_residency: List[tuple] = []    # queued under the lock
         # serializes flushes so a preempted flusher cannot deliver a stale
         # "resident" AFTER another thread delivered the matching "evicted"
@@ -404,14 +414,21 @@ class Buffer:
             self._lru.move_to_end(e.key)
 
     def _evict_locked(self, exempt: Optional[str] = None) -> None:
-        """O(1) amortized: pop the LRU evictable key; pinned and in-flight
+        """Pop evictable keys until under capacity; pinned and in-flight
         entries are never in ``_lru``, so no scanning past them. ``exempt``
         protects the entry just inserted: evicting it would strand the
         function that is about to wait_for it (it is the newest entry, so
-        it surfaces only once everything else evictable is gone)."""
+        it surfaces only once everything else evictable is gone).
+
+        Without a ``replica_oracle`` this is the O(1)-amortized plain LRU
+        pop. With one, each eviction prefers the LRU victim whose bytes
+        are NOT the cluster's last copy — a digest resolving on another
+        node (or an entry with no digest at all) goes first, and a sole
+        replica is only shed once no other victim remains (an O(n) scan,
+        paid only under capacity pressure on registry-wired buffers)."""
         while self._size > self.capacity and self._lru:
-            key = next(iter(self._lru))
-            if key == exempt:
+            key = self._pick_victim_locked(exempt)
+            if key is None:
                 return                        # only the new entry is left
             del self._lru[key]
             e = self._entries.pop(key)
@@ -420,6 +437,22 @@ class Buffer:
                 del self._digests[e.digest]
                 self._queue_residency_locked(e.digest, e.size, False)
             self.stats["evictions"] += 1
+
+    def _pick_victim_locked(self, exempt: Optional[str]) -> Optional[str]:
+        """LRU order, sole-replica entries deferred (see _evict_locked)."""
+        oracle = self.replica_oracle
+        fallback = None
+        for key in self._lru:
+            if key == exempt:
+                continue
+            if oracle is None:
+                return key                    # plain LRU: front wins
+            digest = self._entries[key].digest
+            if digest is None or oracle(digest):
+                return key                    # replicated (or anonymous)
+            if fallback is None:
+                fallback = key                # oldest sole replica
+        return fallback
 
     @property
     def size(self) -> int:

@@ -32,8 +32,8 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.transfer import (join_or_stall, resolve_codec, seed_content,
-                                 ship_payload)
+from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
+                                 seed_content, ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 from repro.runtime.policy import DataPolicy
@@ -92,6 +92,14 @@ class CSP:
                                                  record=rec, hint=hint)
         errbox = []
 
+        # a speculative backup (avoid set) exists because the original
+        # attempt is already stuck: bound its wait on any in-flight relay
+        # of the same content by the join budget instead of the full
+        # follower default — better to re-ship than to park behind a
+        # possibly-wedged leader
+        relay_wait_s = (min(RELAY_WAIT_S, self.join_timeout_s)
+                        if avoid is not None else RELAY_WAIT_S)
+
         # (2a) ... while listening for the target host; (6a) early transfer.
         def transfer_path():
             try:
@@ -99,7 +107,8 @@ class CSP:
                 placed = t.watcher.resolve_placement(target_fn, inv_id)
                 ship_payload(cluster, t.node, cluster.node(placed["node"]),
                              buf_key, data, stream=stream, digest=digest,
-                             chunk_bytes=chunk_bytes, codec=codec, record=rec)
+                             chunk_bytes=chunk_bytes, codec=codec, record=rec,
+                             relay_wait_s=relay_wait_s)
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)

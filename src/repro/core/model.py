@@ -151,6 +151,41 @@ def plan_time(edges: Iterable[tuple]) -> float:
     return sum(edge_time(p, **kw) for p, kw in edges)
 
 
+# --------------------------------------------------- re-planning drift terms
+# Mid-flight re-planning extension of Eqs. 4/5: a compiled plan carries a
+# frozen per-stage prediction; between stage waves the same per-edge model
+# is re-evaluated against CURRENT telemetry over the not-yet-dispatched
+# subgraph. The ratio between the fresh and frozen remaining-time sums is
+# the drift signal a ReplanPolicy thresholds.
+
+def remaining_time(preds: Iterable[Optional[float]]) -> Optional[float]:
+    """Eq. 5 over the remaining (not-yet-dispatched) stages' predicted
+    times. Unprofiled stages (None) are skipped — same convention as
+    ``ExecutionPlan.predicted_total``; None when nothing was profiled
+    (no drift signal exists, so no replan can trigger)."""
+    vals = [p for p in preds if p is not None]
+    return sum(vals) if vals else None
+
+
+def drift(fresh_s: Optional[float], frozen_s: Optional[float]) -> float:
+    """Symmetric drift ratio ``max(fresh/frozen, frozen/fresh) >= 1``
+    between the re-predicted and compile-time remaining times. Both
+    directions matter: a degraded link makes the frozen plan slower than
+    promised (fresh > frozen), a recovered one strands it on a policy that
+    is now paying for nothing (fresh < frozen). Missing or non-positive
+    predictions yield 1.0 — no evidence is never drift."""
+    if not fresh_s or not frozen_s or fresh_s <= 0 or frozen_s <= 0:
+        return 1.0
+    return max(fresh_s / frozen_s, frozen_s / fresh_s)
+
+
+def should_replan(fresh_s: Optional[float], frozen_s: Optional[float],
+                  drift_ratio: float) -> bool:
+    """ReplanPolicy trigger: predicted remaining time drifted past the
+    threshold (``drift_ratio > 1``, validated by ReplanPolicy)."""
+    return drift(fresh_s, frozen_s) >= drift_ratio
+
+
 def workflow_time(phases: Iterable[PhaseEstimate], use_truffle: bool = True) -> float:
     """Eq. 3/5: end-to-end over a function chain."""
     f = truffle_time if use_truffle else baseline_time

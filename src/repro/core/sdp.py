@@ -35,8 +35,8 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.transfer import (join_or_stall, resolve_codec, seed_content,
-                                 ship_payload)
+from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
+                                 seed_content, ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 from repro.runtime.policy import DataPolicy
@@ -124,12 +124,18 @@ class SDP:
                                                 record=rec)  # (3)-(4a)
                 else:
                     # inline body (or non-adapter-ref fallback): ``digest``
-                    # already content-addresses exactly these bytes
+                    # already content-addresses exactly these bytes. A
+                    # speculative backup (avoid set) bounds its wait on an
+                    # in-flight relay by the join budget — see CSP
                     ship_payload(cluster, t.node, target, buf_key,
                                  request.payload or b"",
                                  stream=stream, digest=digest,
                                  chunk_bytes=chunk_bytes, codec=codec,
-                                 record=rec)
+                                 record=rec,
+                                 relay_wait_s=(min(RELAY_WAIT_S,
+                                                   self.join_timeout_s)
+                                               if avoid is not None
+                                               else RELAY_WAIT_S))
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)

@@ -61,11 +61,14 @@ class RelayTable:
 
 def relay_lead_or_alias(cluster, digest: Optional[str], buffer,
                         node_name: str, key: str,
-                        record: Optional[LifecycleRecord] = None
-                        ) -> Tuple[bool, bool]:
+                        record: Optional[LifecycleRecord] = None,
+                        wait_s: float = RELAY_WAIT_S) -> Tuple[bool, bool]:
     """The ONE relay rendezvous both the CSP/SDP ship and the Data Engine's
-    storage fetch use (the two paths must not diverge). Returns
-    ``(lead, aliased)``:
+    storage fetch use (the two paths must not diverge). ``wait_s`` bounds
+    the follower's wait on an in-flight leader — a speculative backup
+    passes a tighter budget (the backup exists because something is
+    already stuck; parking behind a possibly-wedged relay for the full
+    default would defeat it). Returns ``(lead, aliased)``:
 
       * ``(True, False)`` — caller is the elected leader: move the bytes,
         then call ``cluster.relays.finish(digest, node_name)`` (in a
@@ -82,7 +85,7 @@ def relay_lead_or_alias(cluster, digest: Optional[str], buffer,
     lead, ev = relays.lead_or_follow(digest, node_name)
     if lead:
         return True, False
-    ev.wait(RELAY_WAIT_S)
+    ev.wait(wait_s)
     if buffer.alias(key, digest):
         if record is not None:
             record.dedup_hit = True
@@ -135,21 +138,26 @@ def ship_payload(cluster, src_node, target, buf_key: str, data: bytes, *,
                  stream: bool, digest: Optional[str],
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  codec=None,
-                 record: Optional[LifecycleRecord] = None) -> None:
+                 record: Optional[LifecycleRecord] = None,
+                 relay_wait_s: float = RELAY_WAIT_S) -> None:
     """Move an inline payload into ``target``'s buffer: dedup alias if the
     content is already resident, piggyback on an in-flight relay of the same
     content, else chunk-streamed or whole-blob over the fabric (local
     placement skips the network entirely). ``codec`` (a
     :class:`~repro.distributed.compression.ChunkCodec`) compresses the
     wire bytes on remote hops — the per-edge policy enables it on WAN
-    tiers where the link, not the codec, is the bottleneck."""
+    tiers where the link, not the codec, is the bottleneck.
+    ``relay_wait_s`` bounds a follower's wait on an in-flight relay of the
+    same content (speculative backups pass a tighter budget — see
+    :func:`relay_lead_or_alias`)."""
     if digest is not None and target.buffer.alias(buf_key, digest):
         if record is not None:
             record.dedup_hit = True           # content already resident
         return
 
     lead, aliased = relay_lead_or_alias(cluster, digest, target.buffer,
-                                        target.name, buf_key, record)
+                                        target.name, buf_key, record,
+                                        wait_s=relay_wait_s)
     if aliased:
         return          # piggybacked on an in-flight relay of these bytes
     if lead:

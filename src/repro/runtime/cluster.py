@@ -69,6 +69,10 @@ class Cluster:
         self.prefetcher = Prefetcher(self)
         for node in self.nodes.values():
             node.buffer.on_residency = self.digests.listener(node.name)
+            # residency-aware eviction: under capacity pressure a buffer
+            # sheds replicas that still resolve elsewhere before touching
+            # the cluster's LAST copy of a digest (ROADMAP follow-up)
+            node.buffer.replica_oracle = self._replica_elsewhere(node.name)
         sched_kw = {} if locality_weight is None else {
             "locality_weight": locality_weight}
         self.scheduler = Scheduler(self, scheduling_s=scheduling_s,
@@ -83,12 +87,28 @@ class Cluster:
         the planner has estimates before any traffic. Call again after
         mutating ``network.tier_links`` (benchmarks that reshape the
         continuum): already-materialized channels are re-calibrated too,
-        so the new configuration actually applies — not just the prior."""
-        for tiers, (bw, lat) in self.network.tier_links.items():
-            self.telemetry.seed(tier_key=tiers, bandwidth=bw, rtt=lat)
+        so the new configuration actually applies — not just the prior.
+
+        Both steps are tear-proof against concurrent traffic: the priors
+        are replaced in one telemetry lock hold (a racing snapshot or
+        compile sees the old OR the new continuum, never half of each) and
+        each channel is reconfigured under its own grant lock (a racing
+        grant never prices bytes at a bandwidth/latency mix that was never
+        configured)."""
+        self.telemetry.reseed(self.network.tier_links)
         for ch in self.network._channels.values():
             if ch.tier_key is not None:      # loopbacks keep their own rate
-                ch.bandwidth, ch.latency = self.network.tier_links[ch.tier_key]
+                bw, lat = self.network.tier_links[ch.tier_key]
+                ch.reconfigure(bandwidth=bw, latency=lat)
+
+    def _replica_elsewhere(self, node_name: str):
+        """Oracle for one node's Buffer: does ``digest`` still resolve on
+        some OTHER node? (Registry reads only — safe under the buffer lock:
+        the registry never calls back into a buffer.)"""
+        def elsewhere(digest: str) -> bool:
+            return any(n != node_name
+                       for n in self.digests.nodes_for(digest))
+        return elsewhere
 
     def tier_of(self, node_name: str) -> str:
         return self.nodes[node_name].tier

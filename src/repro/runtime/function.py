@@ -78,9 +78,15 @@ class LifecycleRecord:
     compress_ratio: Optional[float] = None  # wire bytes / payload bytes
     io_blocked_s: Optional[float] = None  # measured blocked wait (streaming)
     predicted_s: Optional[float] = None  # Eq. 4 compile-time stage time (sim
-    #                                      seconds; stamped from the plan's
-    #                                      profiled prediction — compare to
+    #                                      seconds; stamped from the plan IN
+    #                                      FORCE at dispatch — post-replan
+    #                                      stages carry the replanned plan's
+    #                                      prediction — compare to
     #                                      clock.elapsed_sim(record.total))
+    replan_count: int = 0         # plan generation at dispatch (0 = original
+    #                               compile; N = dispatched after N replans)
+    speculation_budget_s: Optional[float] = None  # straggler budget (sim s)
+    #                               this dispatch armed, None = no speculation
 
     # --- derived phases (seconds) ---
     @property

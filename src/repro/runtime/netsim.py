@@ -59,10 +59,30 @@ FABRIC_CHUNK_OVERHEAD_S = 2e-4
 
 @dataclass(frozen=True)
 class LinkEstimate:
-    """Telemetry's current belief about one link (sim-seconds domain)."""
+    """Telemetry's current belief about one link (sim-seconds domain).
+
+    ``bandwidth_var``/``rtt_var`` are EWMA variances of the observations
+    around the running mean — a link that keeps its modeled grant rate has
+    ~0 variance; a flapping or congested one does not. ``variability`` is
+    the dimensionless coefficient of variation the adaptive speculation
+    budget keys on (max over bandwidth and RTT, so either kind of
+    instability counts)."""
     bandwidth: float              # bytes / simulated second (EWMA)
     rtt: float                    # simulated seconds per transfer (EWMA)
     samples: int = 0              # observations folded in (0 = seed only)
+    bandwidth_var: float = 0.0    # EWMA variance of bandwidth observations
+    rtt_var: float = 0.0          # EWMA variance of RTT observations
+
+    @property
+    def variability(self) -> float:
+        """Coefficient of variation, max over bandwidth and RTT (0 for a
+        seed-only or perfectly steady link)."""
+        cvs = []
+        if self.bandwidth > 0:
+            cvs.append(self.bandwidth_var ** 0.5 / self.bandwidth)
+        if self.rtt > 0:
+            cvs.append(self.rtt_var ** 0.5 / self.rtt)
+        return max(cvs) if cvs else 0.0
 
 
 class LinkTelemetry:
@@ -81,7 +101,7 @@ class LinkTelemetry:
     def __init__(self, alpha: float = 0.25):
         self.alpha = alpha
         self._lock = threading.Lock()
-        # key -> [bandwidth_ewma, rtt_ewma, samples]
+        # key -> [bw_ewma, rtt_ewma, samples, bw_var_ewma, rtt_var_ewma]
         self._links: Dict[Tuple[str, str], list] = {}
         self._tiers: Dict[Tuple[str, str], list] = {}
         self._codecs: Dict[str, list] = {}          # name -> [ratio, samples]
@@ -91,24 +111,41 @@ class LinkTelemetry:
     def seed(self, *, link_key: Optional[Tuple[str, str]] = None,
              tier_key: Optional[Tuple[str, str]] = None,
              bandwidth: float, rtt: float) -> None:
-        """Install a prior (samples=0). Reseeding resets the estimate —
-        used after reconfiguring fabric links."""
+        """Install a prior (samples=0, zero variance). Reseeding resets the
+        estimate — used after reconfiguring fabric links."""
         with self._lock:
             if link_key is not None:
-                self._links[link_key] = [bandwidth, rtt, 0]
+                self._links[link_key] = [bandwidth, rtt, 0, 0.0, 0.0]
             if tier_key is not None:
-                self._tiers[tier_key] = [bandwidth, rtt, 0]
+                self._tiers[tier_key] = [bandwidth, rtt, 0, 0.0, 0.0]
+
+    def reseed(self, tier_links: Dict[Tuple[str, str],
+                                      Tuple[float, float]]) -> None:
+        """Atomically replace every tier prior in ONE lock hold. A
+        concurrent :meth:`snapshot` (or planner compile) sees either the
+        old configuration or the new one for ALL tiers — never a torn mix
+        of half-reseeded priors."""
+        with self._lock:
+            for tiers, (bw, lat) in tier_links.items():
+                self._tiers[tuple(tiers)] = [bw, lat, 0, 0.0, 0.0]
 
     def _fold(self, table: dict, key, bandwidth: Optional[float],
               rtt: Optional[float]) -> None:
         ent = table.get(key)
         if ent is None:      # first evidence for an unseeded link: adopt it
-            ent = table[key] = [bandwidth or 0.0, rtt or 0.0, 0]
+            ent = table[key] = [bandwidth or 0.0, rtt or 0.0, 0, 0.0, 0.0]
         a = self.alpha
+        # EWMA mean + EWMA variance (West's recursion): a steady link decays
+        # toward zero variance; a flapping one keeps a spread — which is the
+        # signal the adaptive speculation budget keys on
         if bandwidth is not None:
-            ent[0] = (1 - a) * ent[0] + a * bandwidth
+            diff = bandwidth - ent[0]
+            ent[0] += a * diff
+            ent[3] = (1 - a) * (ent[3] + a * diff * diff)
         if rtt is not None:
-            ent[1] = (1 - a) * ent[1] + a * rtt
+            diff = rtt - ent[1]
+            ent[1] += a * diff
+            ent[4] = (1 - a) * (ent[4] + a * diff * diff)
         ent[2] += 1
 
     def observe_transfer(self, link_key: Optional[Tuple[str, str]],
@@ -152,7 +189,8 @@ class LinkTelemetry:
                 ent = self._tiers.get(tuple(tiers))
             if ent is None:
                 return None
-            return LinkEstimate(bandwidth=ent[0], rtt=ent[1], samples=ent[2])
+            return LinkEstimate(bandwidth=ent[0], rtt=ent[1], samples=ent[2],
+                                bandwidth_var=ent[3], rtt_var=ent[4])
 
     def codec_ratio(self, name: str,
                     default: Optional[float] = None) -> Optional[float]:
@@ -197,17 +235,41 @@ class Channel:
         return self.latency + self.chunk_overhead_s \
             + self.wire_bytes(nbytes, wire_ratio) / self.bandwidth
 
+    def _link_params(self) -> Tuple[float, float]:
+        """One consistent (bandwidth, latency) read."""
+        with self._lock:
+            return self.bandwidth, self.latency
+
+    def reconfigure(self, bandwidth: Optional[float] = None,
+                    latency: Optional[float] = None) -> None:
+        """Atomically change the link (fault injection, fabric reseed): a
+        concurrent grant sees either the old or the new configuration —
+        never the bandwidth of one and the latency of the other, and never
+        a grant deadline computed from a bandwidth that changed under it."""
+        with self._lock:
+            if bandwidth is not None:
+                self.bandwidth = bandwidth
+            if latency is not None:
+                self.latency = latency
+
     def _observe(self, nbytes: int, seconds: float,
                  rtt: Optional[float] = None) -> None:
         if self.telemetry is not None:
             self.telemetry.observe_transfer(self.link_key, self.tier_key,
                                             nbytes, seconds, rtt=rtt)
 
-    def _grant(self, nbytes: int, after: float = None) -> float:
+    def _grant(self, nbytes: int, after: float = None,
+               bw: Optional[float] = None) -> Tuple[float, float]:
         """Reserve serialized link time for ``nbytes`` (+ the per-grant
-        overhead); returns the wall deadline when those bytes have arrived.
-        Grants queue back-to-back (``_busy_until``), so concurrent transfers
-        contend for bandwidth.
+        overhead); returns ``(deadline, bandwidth)`` — the wall deadline
+        when those bytes have arrived plus the bandwidth the grant was
+        priced at, so the caller's telemetry observation cannot tear
+        against a concurrent :meth:`reconfigure`. ``bw`` pins the price to
+        a configuration the caller already committed to (a whole-blob
+        transfer that has slept that configuration's latency); by default
+        the current configuration is read under the lock. Grants queue
+        back-to-back (``_busy_until``), so concurrent transfers contend
+        for bandwidth.
 
         ``after`` chains grants within one stream: the next chunk starts at
         the previous chunk's deadline even if the requester woke up late —
@@ -215,29 +277,35 @@ class Channel:
         self-correct OS sleep overshoot; without this a 128-chunk stream
         accumulates ~a timer quantum of drift per chunk. A fresh transfer
         (``after=None``) can never start in the past."""
-        wall = (nbytes / self.bandwidth + self.chunk_overhead_s) \
-            * self.clock.scale
         with self._lock:
+            if bw is None:
+                bw = self.bandwidth
+            wall = (nbytes / bw + self.chunk_overhead_s) * self.clock.scale
             floor = time.monotonic() if after is None else after
             start = max(floor, self._busy_until)
             self._busy_until = start + wall
-            return self._busy_until
+            return self._busy_until, bw
 
     def transfer(self, payload: bytes, wire_ratio: float = 1.0,
                  pace_bps: Optional[float] = None) -> float:
         """Whole-blob: blocks for the modeled duration holding the bandwidth
         grant for the full payload. Returns simulated seconds. ``pace_bps``
         bounds the producer's rate (codec-bound transfers finish at the
-        codec's throughput, not the wire's)."""
-        t = self.transfer_time(len(payload), wire_ratio)
+        codec's throughput, not the wire's). The (bandwidth, latency) pair
+        is read in ONE lock hold and used throughout: a reconfigure racing
+        this transfer applies to the next one, and telemetry never sees
+        the latency of one configuration paired with the bandwidth of
+        another."""
+        bw, lat = self._link_params()
         wire = self.wire_bytes(len(payload), wire_ratio)
-        wire_time = wire / self.bandwidth + self.chunk_overhead_s
-        self.clock.sleep(self.latency)
+        self.clock.sleep(lat)
         pace_wall = None
         if pace_bps:
             pace_wall = time.monotonic() \
                 + (len(payload) / pace_bps) * self.clock.scale
-        deadline = self._grant(wire)
+        deadline, bw = self._grant(wire, bw=bw)
+        wire_time = wire / bw + self.chunk_overhead_s
+        t = lat + wire_time
         surplus = 0.0
         if pace_wall is not None and pace_wall > deadline:
             deadline = pace_wall          # producer (codec) is the bottleneck
@@ -245,8 +313,11 @@ class Channel:
         self.clock.sleep_until(deadline)
         # report pure wire seconds (no grant overhead): the planner models
         # chunk_overhead_s as its own additive term — folding it into the
-        # bandwidth estimate would double-count it per candidate chunk size
-        self._observe(wire, wire / self.bandwidth, rtt=self.latency)
+        # bandwidth estimate would double-count it per candidate chunk size.
+        # The observation uses the bandwidth the grant was PRICED at, so a
+        # racing reconfigure cannot make telemetry record a rate that never
+        # carried these bytes.
+        self._observe(wire, wire / bw, rtt=lat)
         return t + surplus
 
     def transfer_chunk(self, nbytes: int, *, pay_latency: bool = False,
@@ -255,8 +326,9 @@ class Channel:
         Returns the wall deadline — pass it back as ``after`` on the next
         chunk to chain a stream's grants."""
         if pay_latency:
-            self.clock.sleep(self.latency)
-        deadline = self._grant(nbytes, after=after)
+            _, lat = self._link_params()
+            self.clock.sleep(lat)
+        deadline, _ = self._grant(nbytes, after=after)
         self.clock.sleep_until(deadline)
         return deadline
 
@@ -276,7 +348,8 @@ class Channel:
         wire idles between grants. Pacing uses absolute wall deadlines
         (like the grants themselves) so OS sleep overshoot does not
         accumulate across chunks."""
-        self.clock.sleep(self.latency)
+        _, lat = self._link_params()
+        self.clock.sleep(lat)
         view = memoryview(payload)
         deadline = None
         pace_wall = time.monotonic() if pace_bps else None
@@ -284,15 +357,20 @@ class Channel:
         for off in range(0, len(payload), chunk_bytes):
             chunk = view[off:off + chunk_bytes]
             wire = self.wire_bytes(len(chunk), wire_ratio)
-            deadline = self.transfer_chunk(wire, after=deadline)
+            # per-chunk grant: unlike transfer(), a mid-stream reconfigure
+            # (fault injection) DOES apply from the next chunk on — the
+            # stream feels the fault — and each observation reports the
+            # bandwidth ITS OWN grant was priced at (no torn estimates;
+            # the once-per-stream RTT was genuinely slept at stream start)
+            deadline, bw = self._grant(wire, after=deadline)
+            self.clock.sleep_until(deadline)
             if pace_wall is not None:
                 # codec finishes chunk k at start + Σ chunk/pace (absolute)
                 pace_wall += (len(chunk) / pace_bps) * self.clock.scale
                 self.clock.sleep_until(pace_wall)
             # pure wire seconds — see transfer(): overhead is the planner's
             # own additive term, not part of the bandwidth estimate
-            self._observe(wire, wire / self.bandwidth,
-                          rtt=self.latency if first else None)
+            self._observe(wire, wire / bw, rtt=lat if first else None)
             first = False
             yield chunk
         if deadline is None:                  # empty payload: one empty chunk

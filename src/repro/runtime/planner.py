@@ -42,6 +42,19 @@ service's own channels, which the fabric-link model doesn't cover — they
 get no prediction rather than a wrong one.) Candidate evaluation is
 deterministic given frozen telemetry: fixed candidate order,
 strict-improvement argmin.
+
+Mid-flight re-planning: a compiled plan keeps the EdgeProfiles it was
+built from (``ExecutionPlan.profiles``). Between stage waves the runner
+calls :meth:`Planner.predict_remaining` — the SAME per-edge Eq. 4 model
+re-evaluated against current telemetry over the not-yet-dispatched
+subgraph — and, when the fresh/frozen ratio crosses its
+:class:`~repro.runtime.policy.ReplanPolicy` threshold,
+:meth:`Planner.recompile_remaining` splices a fresh compile over the
+remaining stages only (dispatched stages keep their plan; ``generation``
+increments). ``DataPolicy(speculation="auto")`` rides the same telemetry:
+the straggler factor is resolved per edge from the link's observed
+variability (EWMA variance — steady links resolve to 0 and never pay a
+backup; flappy links re-dispatch earlier) and refreshes on every replan.
 """
 from __future__ import annotations
 
@@ -67,6 +80,17 @@ CHUNK_GRID = (256 * 1024, DEFAULT_CHUNK_BYTES, 4 * DEFAULT_CHUNK_BYTES)
 #: planner -> platform import; AdaptivePlanner reads the live values)
 DEFAULT_SCHEDULING_S = 0.15
 DEFAULT_TRIGGER_S = 0.05
+
+#: link variability (LinkEstimate.variability, a coefficient of variation)
+#: below which ``speculation="auto"`` resolves to 0 — a steady link never
+#: pays for a backup dispatch
+SPECULATION_CV_TRIGGER = 0.20
+#: resolved auto-speculation factor bounds: a barely-variable link
+#: re-dispatches late (factor near MAX), a wildly variable one earliest
+#: (factor floors at MIN — below that every routine wobble would fork a
+#: backup)
+SPECULATION_MAX_FACTOR = 3.0
+SPECULATION_MIN_FACTOR = 1.5
 
 
 @dataclass(frozen=True)
@@ -108,6 +132,11 @@ class StagePlan:
     hint_deps: Tuple[str, ...] = ()        # deps contributing digest hints
     seed_output: bool = False              # content-address + seed the output
     predicted_s: Optional[float] = None    # Eq. 4 stage time (slowest in-edge)
+    #: straggler budget in sim-seconds (speculation factor × predicted_s):
+    #: the runner re-dispatches once the stage exceeds it. None when
+    #: speculation is off or the stage has no prediction — speculation then
+    #: needs a caller-provided PhaseEstimate, as before.
+    speculation_budget_s: Optional[float] = None
 
     def edge_policy(self, src: Optional[str]) -> DataPolicy:
         for e in self.in_edges:
@@ -120,14 +149,32 @@ class StagePlan:
 class ExecutionPlan:
     """Immutable compiled form of a workflow: per-edge resolved policies,
     per-stage multi-input digest-hint structure, prefetch/speculation
-    directives, and the (cycle-checked) topological order."""
+    directives, and the (cycle-checked) topological order.
+
+    ``profiles`` preserves the EdgeProfiles the plan was compiled from (the
+    re-planning hook re-predicts the remaining subgraph against them under
+    fresh telemetry); ``generation`` counts mid-flight recompiles — 0 for
+    an original compile, +1 per replan splice (``replanned`` is the
+    boolean spelling). Each replan produces a NEW plan object; the trail
+    of flips lives in the runner's ``plan.replanned`` bus events and
+    ``WorkflowTrace.replans``."""
     workflow: str
     order: Tuple[str, ...]
     stages: Mapping[str, StagePlan]
     default: DataPolicy = field(default_factory=DataPolicy)
+    profiles: Mapping[Tuple[Optional[str], str], EdgeProfile] = \
+        field(default_factory=dict)
+    generation: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "stages", MappingProxyType(dict(self.stages)))
+        object.__setattr__(self, "profiles",
+                           MappingProxyType(dict(self.profiles)))
+
+    @property
+    def replanned(self) -> bool:
+        """True iff this plan came out of a mid-flight recompile."""
+        return self.generation > 0
 
     def edge_policy(self, src: Optional[str], dst: str) -> DataPolicy:
         return self.stages[dst].edge_policy(src)
@@ -226,26 +273,30 @@ class Planner:
                                     profiles.get((src, name)), st.spec)
                 for src in edge_srcs)
             preds = [e.predicted_s for e in in_edges]
+            transport = self._merge(name, in_edges)
+            predicted = (max(p for p in preds if p is not None)
+                         if any(p is not None for p in preds) else None)
             stages[name] = StagePlan(
                 name=name, deps=deps,
-                transport=self._merge(name, in_edges),
+                transport=transport,
                 in_edges=in_edges,
                 hint_deps=tuple(e.src for e in in_edges
                                 if e.src is not None and e.policy.dedup),
-                predicted_s=(max(p for p in preds if p is not None)
-                             if any(p is not None for p in preds) else None))
+                predicted_s=predicted,
+                # straggler budget: factor × Eq. 4 stage prediction (the
+                # runner converts to wall seconds at dispatch)
+                speculation_budget_s=(transport.speculation * predicted
+                                      if transport.speculation and
+                                      predicted is not None else None))
         # second pass: a stage seeds its output iff some consumer edge dedups
         for name in order:
             consumers = [e for sp in stages.values() for e in sp.in_edges
                          if e.src == name]
             if any(e.policy.dedup for e in consumers):
-                sp = stages[name]
-                stages[name] = StagePlan(
-                    name=sp.name, deps=sp.deps, transport=sp.transport,
-                    in_edges=sp.in_edges, hint_deps=sp.hint_deps,
-                    seed_output=True, predicted_s=sp.predicted_s)
+                stages[name] = dataclasses.replace(stages[name],
+                                                   seed_output=True)
         return ExecutionPlan(workflow=wf.name, order=order, stages=stages,
-                             default=wf_default)
+                             default=wf_default, profiles=profiles)
 
     # --------------------------------------------------- adaptive selection
     def _link_estimate(self, profile: EdgeProfile):
@@ -303,11 +354,28 @@ class Planner:
         return edge_time(p, stream_exec_overlap=overlap, wire_ratio=ratio,
                          overhead_s=overhead)
 
+    def _auto_speculation(self, link) -> float:
+        """Resolve ``speculation="auto"`` from the link's observed
+        variability (telemetry EWMA variance, netsim.LinkEstimate): a
+        seed-only or steady link resolves to 0 — no backup is ever paid —
+        and past the trigger the factor shrinks monotonically with the
+        coefficient of variation, so flappier links re-dispatch earlier."""
+        if link is None or link.samples == 0:
+            return 0.0
+        cv = link.variability
+        if cv < SPECULATION_CV_TRIGGER:
+            return 0.0
+        return min(SPECULATION_MAX_FACTOR,
+                   max(SPECULATION_MIN_FACTOR,
+                       SPECULATION_MAX_FACTOR / (1.0 + cv)))
+
     def _finalize_edge(self, src: Optional[str], dst: str, pol: DataPolicy,
                        profile: Optional[EdgeProfile], spec) -> EdgePlan:
         """Resolve an ``auto`` policy (argmin over the candidate grid) and
         attach the Eq. 4 prediction for any profiled edge."""
         link = self._link_estimate(profile) if profile is not None else None
+        if pol.speculation == "auto":
+            pol = pol.but(speculation=self._auto_speculation(link))
         if pol.strategy == "auto":
             if link is None:
                 # no profile / no telemetry: conservative whole-blob default
@@ -340,6 +408,69 @@ class Planner:
         for comp in ("none", "lz4-like"):
             for chunk in self.chunk_grid:
                 yield True, comp, chunk
+
+    # ---------------------------------------------------------- re-planning
+    def predict_remaining(self, wf, plan: ExecutionPlan,
+                          remaining) -> Optional[Tuple[float, float]]:
+        """Eq. 5 over the not-yet-dispatched subgraph, twice: ``(fresh,
+        frozen)`` — the same per-edge Eq. 4 model under the plan's RESOLVED
+        policies, evaluated against current telemetry (fresh) and as
+        stamped at compile time (frozen). The ratio between the two is the
+        drift signal (:func:`repro.core.model.drift`).
+
+        Only edges that are comparable on both sides count — profiled at
+        compile AND resolvable in telemetry now — so the ratio never mixes
+        a stage into one sum but not the other. None when no remaining
+        edge is comparable (no drift signal exists)."""
+        fresh_total = frozen_total = 0.0
+        comparable = False
+        for name in remaining:
+            sp = plan.stages.get(name)
+            if sp is None:
+                continue
+            spec = wf.stages[name].spec
+            fresh_preds, frozen_preds = [], []
+            for e in sp.in_edges:
+                prof = plan.profiles.get((e.src, e.dst))
+                if e.predicted_s is None or prof is None:
+                    continue
+                link = self._link_estimate(prof)
+                if link is None:
+                    continue
+                t = self._candidate_time(
+                    spec, prof, link, stream=e.policy.stream,
+                    compression=e.policy.compression,
+                    chunk_bytes=e.policy.chunk_bytes)
+                fresh_preds.append(t)
+                frozen_preds.append(e.predicted_s)
+            if fresh_preds:       # stage time = slowest in-edge (as compile)
+                fresh_total += max(fresh_preds)
+                frozen_total += max(frozen_preds)
+                comparable = True
+        if not comparable:
+            return None
+        return fresh_total, frozen_total
+
+    def recompile_remaining(self, wf, plan: ExecutionPlan, dispatched,
+                            profiles=None) -> ExecutionPlan:
+        """Mid-flight recompile of ONLY the not-yet-dispatched subgraph:
+        compile the whole workflow fresh (compile is pure and cheap —
+        telemetry has folded the measured transfers in the meantime, auto
+        edges re-run their argmin, ``speculation="auto"`` budgets refresh)
+        and splice — every stage in ``dispatched`` keeps its CURRENT
+        StagePlan untouched (in-flight transfers are never re-routed), the
+        rest adopt the fresh one. The spliced plan's ``generation``
+        increments; its predictions are the ones the runner stamps on
+        records dispatched from here on."""
+        profiles = dict(profiles) if profiles else dict(plan.profiles)
+        fresh = self.compile(wf, profiles=profiles)
+        stages = {name: (plan.stages[name] if name in dispatched
+                         else fresh.stages[name])
+                  for name in plan.order}
+        return ExecutionPlan(workflow=plan.workflow, order=plan.order,
+                             stages=stages, default=plan.default,
+                             profiles=profiles,
+                             generation=plan.generation + 1)
 
     @staticmethod
     def _merge(name: str, in_edges: Tuple[EdgePlan, ...]) -> DataPolicy:
@@ -423,5 +554,6 @@ class AdaptivePlanner(Planner):
 
 
 __all__ = ["AdaptivePlanner", "CHUNK_GRID", "EdgePlan", "EdgeProfile",
-           "ExecutionPlan", "Planner", "PlanError", "StagePlan",
-           "WorkflowCycleError"]
+           "ExecutionPlan", "Planner", "PlanError",
+           "SPECULATION_CV_TRIGGER", "SPECULATION_MAX_FACTOR",
+           "SPECULATION_MIN_FACTOR", "StagePlan", "WorkflowCycleError"]

@@ -74,7 +74,12 @@ class DataPolicy:
     speculation:
         Straggler factor: re-dispatch the stage when it exceeds this
         multiple of its predicted time (0 = off). The backup attempt is
-        steered to a different node than the straggler.
+        steered to a different node than the straggler. ``"auto"`` hands
+        the factor to the planner: it is resolved per edge at compile time
+        from the link's observed telemetry variability — a flappy link
+        speculates early, a steady link never pays the backup (resolves to
+        0). Like ``strategy="auto"``, the string only ever exists
+        pre-compile; plans carry the resolved float.
     chunk_bytes:
         Streaming grant size for this edge (None = the fabric default,
         ``DEFAULT_CHUNK_BYTES``). Small chunks start the pipeline earlier
@@ -99,7 +104,11 @@ class DataPolicy:
         if self.compression not in COMPRESSIONS:
             raise ValueError(f"compression must be one of {COMPRESSIONS}, "
                              f"got {self.compression!r}")
-        if self.speculation < 0:
+        if isinstance(self.speculation, str):
+            if self.speculation != "auto":
+                raise ValueError(f"speculation must be a factor >= 0 or "
+                                 f"'auto', got {self.speculation!r}")
+        elif self.speculation < 0:
             raise ValueError(f"speculation must be >= 0, "
                              f"got {self.speculation!r}")
         if self.locality_weight is not None and self.locality_weight < 0:
@@ -119,6 +128,49 @@ class DataPolicy:
         """A copy with ``changes`` applied — derive an edge policy from a
         stage/workflow default: ``pol.but(compression="lz4-like")``."""
         return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class ReplanPolicy:
+    """When may the runner recompile a workflow mid-flight?
+
+    Between stage waves the runner re-predicts the Eq. 4 time of every
+    not-yet-dispatched stage against CURRENT telemetry and compares it to
+    the prediction the active plan was compiled from. The remaining
+    subgraph is recompiled when the ratio between the two (either
+    direction — a degraded link slows the plan, a recovered one strands it
+    on a too-conservative policy) reaches ``drift_ratio``. In-flight
+    stages always keep the plan they were dispatched under.
+
+    Attributes
+    ----------
+    drift_ratio:
+        Replan when ``max(fresh/frozen, frozen/fresh) >= drift_ratio``
+        over the remaining stages' predicted time. Must be > 1 (at 1.0
+        every telemetry wiggle would trigger a recompile).
+    min_interval:
+        Simulated seconds that must elapse between replans (flap damping:
+        a link oscillating faster than this can flip the plan at most once
+        per interval).
+    max_replans:
+        Hard cap on recompiles per ``run`` (0 freezes the plan — useful as
+        the control arm of an experiment).
+    """
+
+    drift_ratio: float = 1.3
+    min_interval: float = 0.0
+    max_replans: int = 3
+
+    def __post_init__(self):
+        if self.drift_ratio <= 1.0:
+            raise ValueError(f"drift_ratio must be > 1 (a ratio of 1 means "
+                             f"ANY drift replans), got {self.drift_ratio!r}")
+        if self.min_interval < 0:
+            raise ValueError(f"min_interval must be >= 0 sim-seconds, "
+                             f"got {self.min_interval!r}")
+        if not isinstance(self.max_replans, int) or self.max_replans < 0:
+            raise ValueError(f"max_replans must be an int >= 0, "
+                             f"got {self.max_replans!r}")
 
 
 class _StageBuilder:
@@ -212,5 +264,5 @@ class WorkflowBuilder:
             self.build())
 
 
-__all__ = ["DataPolicy", "WorkflowBuilder", "WorkflowCycleError",
-           "STRATEGIES", "COMPRESSIONS"]
+__all__ = ["DataPolicy", "ReplanPolicy", "WorkflowBuilder",
+           "WorkflowCycleError", "STRATEGIES", "COMPRESSIONS"]

@@ -116,7 +116,8 @@ class Scheduler:
         self.locality_weight = locality_weight
         self._lock = threading.Lock()
         self._load: Dict[str, int] = {}
-        self.stats = {"placements": 0, "locality_hits": 0, "prefetch_kicks": 0}
+        self.stats = {"placements": 0, "locality_hits": 0,
+                      "prefetch_kicks": 0, "speculative_placements": 0}
 
     def schedule(self, spec: FunctionSpec, invocation_id: str,
                  hint: Optional[PlacementHint] = None, record=None):
@@ -140,11 +141,17 @@ class Scheduler:
         scored = (hint is not None and hint.input_hints()
                   and not spec.affinity and self._weight(hint) > 0)
         locality_hit = bool(scored and resident > 0)
+        # ``avoid`` is only ever set by a speculative backup dispatch
+        # (failure independence): count it, and mark the event, so tests
+        # and benchmarks can assert WHERE auto-speculation actually fired
+        speculative = bool(hint is not None and hint.avoid is not None)
         with self._lock:
             self._load[node.name] = self._load.get(node.name, 0) + 1
             self.stats["placements"] += 1
             if locality_hit:
                 self.stats["locality_hits"] += 1
+            if speculative:
+                self.stats["speculative_placements"] += 1
         if record is not None:
             record.locality_hit = locality_hit
         # registry-driven prefetch: placing OFF (part of) the data under
@@ -161,7 +168,7 @@ class Scheduler:
             "function": spec.name, "node": node.name,
             "invocation": invocation_id, "t": clock.now(),
             "locality_hit": locality_hit, "resident_bytes": resident,
-            "prefetched": prefetched,
+            "prefetched": prefetched, "speculative": speculative,
         })
         return node
 

@@ -25,10 +25,30 @@ Speculative straggler mitigation: a stage exceeding its policy's
 ``speculation`` factor x its predicted time is re-dispatched; the backup
 attempt carries an ``avoid`` hint for the straggler's node (failure
 independence), and the first finisher wins (duplicate results are
-idempotent by construction here)."""
+idempotent by construction here). The budget comes from a caller-provided
+``estimates`` PhaseEstimate when given, else from the compiled plan's own
+Eq. 4 prediction (``StagePlan.speculation_budget_s``) — which is what
+makes ``DataPolicy(speculation="auto")`` self-contained: the planner
+resolves the factor from link variability and the budget from its own
+prediction, no user numbers required.
+
+Mid-flight re-planning: construct the runner with
+``replan=ReplanPolicy(...)`` (optionally ``planner=``; defaults to an
+:class:`~repro.runtime.planner.AdaptivePlanner` on the cluster). Between
+stage waves — every time a stage completes, before the newly-unblocked
+stages are dispatched — a :class:`ReplanController` re-predicts the
+remaining subgraph against current telemetry and, past the policy's drift
+threshold, swaps in a plan recompiled for the not-yet-dispatched stages
+only. In-flight stages keep the plan they were dispatched under; every
+flip is published as a ``plan.replanned`` bus event and recorded on
+``WorkflowTrace.replans``; each record's ``replan_count`` says which plan
+generation dispatched it. The runner also publishes a
+``workflow.stage_done`` event per completed stage (wave counter — the
+fault-timeline harness keys on it)."""
 from __future__ import annotations
 
 import threading
+import time
 import uuid
 from concurrent.futures import Future, ThreadPoolExecutor, FIRST_COMPLETED, wait
 from dataclasses import dataclass, field
@@ -36,11 +56,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.buffer import content_digest
 from repro.core.errors import PlanError, WorkflowCycleError
-from repro.core.model import PhaseEstimate, baseline_time, truffle_time
+from repro.core.model import (PhaseEstimate, baseline_time, drift,
+                              should_replan, truffle_time)
 from repro.core.transfer import publish_content
 from repro.runtime.function import ContentRef, FunctionSpec, LifecycleRecord, Request
 from repro.runtime.planner import ExecutionPlan, Planner, StagePlan
-from repro.runtime.policy import DataPolicy
+from repro.runtime.policy import DataPolicy, ReplanPolicy
 
 
 @dataclass
@@ -109,6 +130,11 @@ class WorkflowTrace:
     stages: Dict[str, StageResult] = field(default_factory=dict)
     t_start: float = 0.0
     t_end: float = 0.0
+    #: mid-flight replan trail: one dict per plan flip (mirrors the
+    #: ``plan.replanned`` bus events), empty when re-planning was off/quiet
+    replans: List[dict] = field(default_factory=list)
+    #: generation of the plan in force when the run finished
+    plan_generation: int = 0
 
     @property
     def total(self) -> float:
@@ -129,6 +155,78 @@ class WorkflowTrace:
         return self.phase_totals()["io"] + self.phase_totals()["put"]
 
 
+class ReplanController:
+    """Applies a :class:`~repro.runtime.policy.ReplanPolicy` between stage
+    waves: re-predict the not-yet-dispatched subgraph against current
+    telemetry, and recompile it when the drift crosses the threshold.
+
+    Kept separate from the runner (and free of any thread machinery) so
+    the rate-limiting contract — ``max_replans`` is a hard cap,
+    ``min_interval`` sim-seconds must pass between flips, frozen telemetry
+    never replans — is directly property-testable against scripted drift
+    sequences."""
+
+    def __init__(self, planner, policy: ReplanPolicy, wf,
+                 clock=None, bus=None):
+        self.planner = planner
+        self.policy = policy
+        self.wf = wf
+        self.clock = clock
+        self.bus = bus
+        self.count = 0                      # replans performed
+        self.events: List[dict] = []        # trail, mirrored on the bus
+        self._last: Optional[float] = None  # wall time of the last replan
+
+    def consider(self, plan: ExecutionPlan, dispatched,
+                 now: Optional[float] = None) -> Optional[ExecutionPlan]:
+        """Return a spliced replacement plan, or None to keep ``plan``.
+        ``dispatched`` is the set of stages already handed to a thread —
+        those keep their StagePlan verbatim. ``now`` defaults to the
+        clock's wall reading (tests may script it)."""
+        pol = self.policy
+        if self.count >= pol.max_replans:
+            return None
+        remaining = [n for n in plan.order if n not in dispatched]
+        if not remaining:
+            return None
+        if now is None:
+            now = (self.clock.now() if self.clock is not None
+                   else time.monotonic())
+        if self._last is not None and pol.min_interval > 0:
+            elapsed = now - self._last
+            if self.clock is not None:
+                elapsed = self.clock.elapsed_sim(elapsed)
+            if elapsed < pol.min_interval:
+                return None
+        pred = self.planner.predict_remaining(self.wf, plan, remaining)
+        if pred is None:
+            return None                     # no comparable edge: no signal
+        fresh, frozen = pred
+        if not should_replan(fresh, frozen, pol.drift_ratio):
+            return None
+        new = self.planner.recompile_remaining(self.wf, plan, dispatched)
+        self.count += 1
+        self._last = now
+        event = {
+            "workflow": plan.workflow,
+            "generation": new.generation,
+            "drift": drift(fresh, frozen),
+            "fresh_s": fresh,
+            "frozen_s": frozen,
+            "remaining": list(remaining),
+            # stages whose in-edge POLICIES actually changed (predictions
+            # refresh on every replan; a flip is a mechanism change)
+            "flips": [n for n in remaining
+                      if [e.policy for e in new.stages[n].in_edges]
+                      != [e.policy for e in plan.stages[n].in_edges]],
+            "t": now,
+        }
+        self.events.append(event)
+        if self.bus is not None:
+            self.bus.publish("plan.replanned", event)
+        return new
+
+
 class WorkflowRunner:
     def __init__(self, cluster, *, use_truffle: bool = True,
                  plan: Optional[ExecutionPlan] = None,
@@ -136,12 +234,20 @@ class WorkflowRunner:
                  storage: str = "direct",
                  straggler_factor: float = 0.0, prewarm_roots: bool = False,
                  estimates: Optional[Dict[str, PhaseEstimate]] = None,
-                 stream: bool = False, dedup: bool = False):
+                 stream: bool = False, dedup: bool = False,
+                 replan: Optional[ReplanPolicy] = None,
+                 planner: Optional[Planner] = None):
         """``policy`` (or a precompiled ``plan``) is the native surface.
         The legacy runner-global knobs — ``storage``/``stream``/``dedup``/
         ``straggler_factor`` — are a back-compat shim: they construct the
         equivalent uniform :class:`DataPolicy` and compile through the same
-        Planner, so old call sites keep their exact behavior."""
+        Planner, so old call sites keep their exact behavior.
+
+        ``replan`` enables mid-flight re-planning between stage waves (see
+        module docstring); ``planner`` overrides the planner used for
+        compiles AND replans (default: a telemetry-wired
+        :class:`~repro.runtime.planner.AdaptivePlanner` when either
+        ``replan`` is set or ``compile`` receives edge profiles)."""
         self.cluster = cluster
         self.use_truffle = use_truffle
         self.prewarm_roots = prewarm_roots
@@ -151,6 +257,8 @@ class WorkflowRunner:
                                 speculation=straggler_factor)
         self.default_policy = policy
         self.plan = plan
+        self.replan = replan
+        self.planner = planner
         # legacy mirrors (kept readable for old call sites; the data plane
         # itself consumes the compiled ExecutionPlan, never these)
         self.storage = policy.strategy
@@ -158,16 +266,32 @@ class WorkflowRunner:
         self.dedup = policy.dedup
         self.straggler_factor = policy.speculation
 
-    def compile(self, wf: Workflow) -> ExecutionPlan:
-        """Compile ``wf`` against this runner's default policy."""
+    def _adaptive_planner(self) -> Planner:
+        """The planner replans (and profile-aware compiles) go through —
+        lazily an AdaptivePlanner on the live cluster unless one was
+        injected."""
+        if self.planner is None:
+            from repro.runtime.planner import AdaptivePlanner
+            self.planner = AdaptivePlanner(self.cluster,
+                                           default=self.default_policy)
+        return self.planner
+
+    def compile(self, wf: Workflow, profiles=None) -> ExecutionPlan:
+        """Compile ``wf`` against this runner's default policy.
+        ``profiles`` (``{(src, dst): EdgeProfile}``) enables Eq. 4
+        predictions / auto resolution and is kept on the plan for the
+        re-planning hook."""
+        if self.planner is not None or self.replan is not None or profiles:
+            return self._adaptive_planner().compile(wf, profiles=profiles)
         return Planner(default=self.default_policy).compile(wf)
 
     # ------------------------------------------------------------------ run
     def run(self, wf: Workflow, input_data: bytes,
             source_node: str = None,
-            plan: Optional[ExecutionPlan] = None) -> WorkflowTrace:
+            plan: Optional[ExecutionPlan] = None,
+            profiles=None) -> WorkflowTrace:
         cluster = self.cluster
-        plan = plan or self.plan or self.compile(wf)
+        plan = plan or self.plan or self.compile(wf, profiles=profiles)
         if set(plan.stages) != set(wf.stages):
             raise PlanError(f"plan {plan.workflow!r} does not cover workflow "
                             f"{wf.name!r}: plan stages {sorted(plan.stages)} "
@@ -186,13 +310,24 @@ class WorkflowRunner:
                               plan.label())
         trace.t_start = cluster.clock.now()
 
+        controller = None
+        if self.replan is not None:
+            controller = ReplanController(self._adaptive_planner(),
+                                          self.replan, wf,
+                                          clock=cluster.clock,
+                                          bus=cluster.bus)
+
         results: Dict[str, StageResult] = {}
         lock = threading.Lock()
         done_cv = threading.Condition(lock)
         errbox: List[BaseException] = []
+        # the plan currently in force: replans swap it; a stage reads it
+        # exactly once, at ITS dispatch, so in-flight stages keep the plan
+        # they started under and later stages see the latest generation
+        planbox = {"plan": plan}
+        wave = [0]                          # completed-stage counter
 
-        def stage_input(name: str) -> Tuple[bytes, str, tuple]:
-            sp = plan.stages[name]
+        def stage_input(name: str, sp: StagePlan) -> Tuple[bytes, str, tuple]:
             if not sp.deps:
                 return input_data, source_node, ()
             outs = [results[d].output for d in sp.deps]
@@ -203,12 +338,29 @@ class WorkflowRunner:
             # single dep: hand the output through without a join copy
             return (outs[0] if len(outs) == 1 else b"".join(outs)), src, hints
 
-        def run_stage(name: str):
+        def run_stage(name: str, current: ExecutionPlan):
+            # ``current`` is the plan in force when the DISPATCHER started
+            # this thread — passed in rather than read here, so a replan
+            # landing between Thread.start() and the first statement can
+            # never stamp a generation the stage was not dispatched under
             try:
-                data, src, hints = stage_input(name)
+                sp = current.stages[name]
+                data, src, hints = stage_input(name, sp)
                 sr = self._dispatch(name, wf.stages[name].spec,
-                                    plan.stages[name], data, src, hints)
-                self._seed_output(plan.stages[name], sr)
+                                    sp, data, src, hints)
+                sr.record.replan_count = current.generation
+                self._seed_output(sp, sr)
+                with lock:
+                    wave[0] += 1
+                    k = wave[0]
+                # published BEFORE the completion is recorded: a fault
+                # timeline keyed on this wave acts (and returns) before the
+                # dispatcher can wake and start the next wave — so between
+                # "stage N done" and "stage N+1 dispatched" there is a
+                # well-defined point where faults land and replans decide
+                cluster.bus.publish("workflow.stage_done", {
+                    "workflow": wf.name, "stage": name, "wave": k,
+                    "node": sr.record.node, "t": cluster.clock.now()})
                 with done_cv:
                     results[name] = sr
                     done_cv.notify_all()
@@ -219,14 +371,24 @@ class WorkflowRunner:
 
         order = plan.order
         started = set()
+        checked_at = -1
         with done_cv:
             while len(results) < len(order) and not errbox:
+                # the re-planning hook runs BETWEEN waves: after each batch
+                # of completions, before the stages they unblock dispatch
+                if controller is not None and len(results) > checked_at:
+                    checked_at = len(results)
+                    fresh = controller.consider(planbox["plan"], started)
+                    if fresh is not None:
+                        planbox["plan"] = fresh
                 for name in order:
                     if name in started:
                         continue
-                    if all(d in results for d in plan.stages[name].deps):
+                    if all(d in results
+                           for d in planbox["plan"].stages[name].deps):
                         started.add(name)
-                        threading.Thread(target=run_stage, args=(name,),
+                        threading.Thread(target=run_stage,
+                                         args=(name, planbox["plan"]),
                                          daemon=True).start()
                 done_cv.wait(timeout=300)
         if errbox:
@@ -234,6 +396,9 @@ class WorkflowRunner:
 
         trace.t_end = cluster.clock.now()
         trace.stages = results
+        if controller is not None:
+            trace.replans = list(controller.events)
+        trace.plan_generation = planbox["plan"].generation
         return trace
 
     def _seed_output(self, sp: StagePlan, sr: StageResult) -> None:
@@ -257,16 +422,24 @@ class WorkflowRunner:
                                      input_hints, avoid=avoid)
 
         est = self.estimates.get(name)
+        budget_sim = None
         if sp.transport.speculation and est is not None:
-            budget = sp.transport.speculation * (
+            budget_sim = sp.transport.speculation * (
                 truffle_time(est) if self.use_truffle else baseline_time(est))
-            budget *= self.cluster.clock.scale      # sim -> wall seconds
+        elif sp.speculation_budget_s is not None:
+            # no caller estimate: the plan's own Eq. 4 prediction carries
+            # the budget (speculation="auto" needs no user numbers)
+            budget_sim = sp.speculation_budget_s
+        if budget_sim:
+            budget = budget_sim * self.cluster.clock.scale  # sim -> wall s
             pool = ThreadPoolExecutor(max_workers=2)
             try:
                 first = pool.submit(attempt)
                 done, _ = wait([first], timeout=budget)
                 if done:
-                    return first.result()
+                    sr = first.result()
+                    sr.record.speculation_budget_s = budget_sim
+                    return sr
                 # failure independence: steer the backup OFF the node the
                 # straggler was placed on (its placement event is on the bus
                 # even though the attempt itself is still stuck)
@@ -279,6 +452,7 @@ class WorkflowRunner:
                 winner = first if first.done() else backup
                 sr = winner.result()
                 sr.speculated = winner is backup
+                sr.record.speculation_budget_s = budget_sim
                 return sr
             finally:
                 # without this every straggler stage leaked a live executor

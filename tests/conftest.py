@@ -9,6 +9,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest  # noqa: E402
 
+try:                                     # nightly soak: --hypothesis-profile=ci
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", max_examples=200, deadline=None)
+except ImportError:                      # fallback shim has no profiles
+    pass
+
 from repro.runtime.clock import Clock  # noqa: E402
 
 

@@ -16,12 +16,24 @@ assert the system's *reaction* to link failure, not just its steady state:
 
 ``restore()`` (also via context manager exit) releases every stalled
 stream and puts bandwidth/latency back, so no daemon thread outlives the
-test wedged on a harness gate.
+test wedged on a harness gate. Link mutation goes through
+``Channel.reconfigure`` — atomic under the channel's grant lock, so a
+concurrent transfer never prices bytes at a torn bandwidth/latency mix.
+
+:class:`FaultTimeline` scripts faults against workflow PROGRESS instead of
+wall time: actions are keyed on the runner's ``workflow.stage_done``
+events (wave k = k-th stage completion) and run synchronously inside that
+event's publish — after stage k finished, before anything it unblocked can
+dispatch. That makes "degrade at wave N", flap, and recover scenarios
+deterministic, which is what the re-planning and soak tiers assert
+against. ``probes=`` pumps a few small transfers over the changed link
+right after each change, modeling the ambient traffic that lets telemetry
+converge onto the new link state before the next wave's replan check.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.runtime.netsim import Channel, DEFAULT_CHUNK_BYTES
 
@@ -48,8 +60,8 @@ class LinkFaults:
         grant from now on (in-flight chunk streams feel it mid-stream)."""
         ch = self.channel(src, dst)
         self._remember(ch)
-        ch.bandwidth *= bandwidth_factor
-        ch.latency += extra_rtt
+        ch.reconfigure(bandwidth=ch.bandwidth * bandwidth_factor,
+                       latency=ch.latency + extra_rtt)
         return ch
 
     def stall_streams(self, src: str, dst: str,
@@ -88,11 +100,131 @@ class LinkFaults:
             ch.__dict__.pop("stream", None)
         self._stalled.clear()
         for ch, bw, lat in self._orig.values():
-            ch.bandwidth, ch.latency = bw, lat
+            ch.reconfigure(bandwidth=bw, latency=lat)
         self._orig.clear()
 
     def __enter__(self) -> "LinkFaults":
         return self
+
+    def __exit__(self, *exc) -> None:
+        self.restore()
+
+
+class FaultTimeline:
+    """Scripted fault schedule keyed on workflow progress (see module
+    docstring). Waves are 1-based: wave k fires right after the k-th
+    ``workflow.stage_done`` event, before the next dispatch. Call
+    :meth:`attach` before ``runner.run`` (idempotent); use as a context
+    manager to guarantee :meth:`restore` on exit."""
+
+    def __init__(self, cluster, faults: Optional[LinkFaults] = None):
+        self.cluster = cluster
+        self.faults = faults or LinkFaults(cluster)
+        self._actions: Dict[int, List[Tuple[Callable, str]]] = {}
+        self._fired: set = set()
+        # RLock: actions execute under it (ordering guarantee) and may
+        # legitimately call back into at_wave() to schedule future faults
+        self._lock = threading.RLock()
+        self._attached = False
+        self.log: List[Tuple[int, str]] = []    # (wave, what) actually fired
+
+    # ----------------------------------------------------------- schedule
+    def at_wave(self, wave: int, action: Callable[[LinkFaults], None],
+                describe: str = "custom") -> "FaultTimeline":
+        """Run ``action(faults)`` when ``wave`` stages have completed.
+        Actions on waves the run never reaches simply don't fire; actions
+        on a wave that was skipped over (fan-out completing several stages
+        at once) fire on the first event at-or-past it."""
+        if wave < 1:
+            raise ValueError(f"waves are 1-based stage completions, "
+                             f"got {wave!r}")
+        with self._lock:
+            self._actions.setdefault(wave, []).append((action, describe))
+        return self
+
+    def degrade_at(self, wave: int, src: str, dst: str, *,
+                   bandwidth_factor: float = 1.0, extra_rtt: float = 0.0,
+                   probes: int = 0,
+                   probe_bytes: int = 1 << 20) -> "FaultTimeline":
+        def action(faults: LinkFaults) -> None:
+            faults.degrade(src, dst, bandwidth_factor=bandwidth_factor,
+                           extra_rtt=extra_rtt)
+            self._probe(src, dst, probes, probe_bytes)
+        return self.at_wave(wave, action,
+                            f"degrade {src}->{dst} x{bandwidth_factor}"
+                            f"+{extra_rtt}s")
+
+    def restore_at(self, wave: int, *,
+                   probe: Optional[Tuple[str, str]] = None, probes: int = 0,
+                   probe_bytes: int = 1 << 20) -> "FaultTimeline":
+        """Undo every fault so far; optionally probe one link afterwards so
+        telemetry converges back onto the healthy state."""
+        def action(faults: LinkFaults) -> None:
+            faults.restore()
+            if probe is not None:
+                self._probe(probe[0], probe[1], probes, probe_bytes)
+        return self.at_wave(wave, action, "restore")
+
+    def flap(self, src: str, dst: str, *, waves, bandwidth_factor: float,
+             extra_rtt: float = 0.0, probes: int = 0,
+             probe_bytes: int = 1 << 20) -> "FaultTimeline":
+        """Alternate degrade (even positions of ``waves``) and restore (odd
+        positions) on one link — the oscillating-WAN scenario the replan
+        rate limits (``min_interval``/``max_replans``) are tested under."""
+        for i, w in enumerate(waves):
+            if i % 2 == 0:
+                self.degrade_at(w, src, dst,
+                                bandwidth_factor=bandwidth_factor,
+                                extra_rtt=extra_rtt, probes=probes,
+                                probe_bytes=probe_bytes)
+            else:
+                self.restore_at(w, probe=(src, dst), probes=probes,
+                                probe_bytes=probe_bytes)
+        return self
+
+    # ------------------------------------------------------------ running
+    def attach(self) -> "FaultTimeline":
+        """Subscribe to the cluster bus (idempotent)."""
+        if not self._attached:
+            self.cluster.bus.subscribe("workflow.stage_done",
+                                       self._on_stage_done)
+            self._attached = True
+        return self
+
+    def _on_stage_done(self, event: dict) -> None:
+        wave = int(event.get("wave", 0))
+        # collection AND execution happen under the timeline lock: when a
+        # fan-out completes several stages near-simultaneously, the thread
+        # that gets here first drains every due wave in sorted order and
+        # later threads find them fired — a wave-2 restore can never run
+        # before (or interleave with) a wave-1 degrade. Actions run on the
+        # publishing (stage completion) thread, so the runner cannot
+        # record the completion — and therefore cannot dispatch the next
+        # wave — until they return. (Actions touch faults/cluster only,
+        # never the timeline, so no re-entrancy.)
+        with self._lock:
+            for w in sorted(self._actions):
+                if w <= wave and w not in self._fired:
+                    self._fired.add(w)
+                    for action, describe in self._actions[w]:
+                        self.log.append((w, describe))
+                        action(self.faults)
+
+    def _probe(self, src: str, dst: str, n: int, nbytes: int) -> None:
+        """Ambient traffic: n whole-blob transfers so telemetry's EWMA
+        (alpha 0.25) converges onto the link's current state."""
+        if n <= 0:
+            return
+        c = self.cluster
+        payload = bytes(nbytes)
+        for _ in range(n):
+            c.transfer(c.node(src), c.node(dst), payload)
+
+    def restore(self) -> None:
+        self.faults.restore()
+
+    def __enter__(self) -> "FaultTimeline":
+        return self.attach()
 
     def __exit__(self, *exc) -> None:
         self.restore()

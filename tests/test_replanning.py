@@ -1,0 +1,744 @@
+"""Mid-flight re-planning + telemetry-driven speculation budgets.
+
+Covers, bottom-up:
+  * the Eq. 4/5 drift terms (``remaining_time``/``drift``/``should_replan``)
+    and ``ReplanPolicy`` validation,
+  * LinkTelemetry's EWMA variance (the ``speculation="auto"`` signal) and
+    ``LinkEstimate.variability``,
+  * planner resolution of ``speculation="auto"`` (steady links never pay a
+    backup; flappy links re-dispatch earlier) and the compile-time
+    ``StagePlan.speculation_budget_s``,
+  * ``Planner.predict_remaining`` / ``recompile_remaining`` (subgraph-only:
+    dispatched stages keep their StagePlan verbatim),
+  * the ``ReplanController`` rate limits (``max_replans``/``min_interval``)
+    against scripted drift sequences,
+  * runner end-to-end under ``tests/harness.py`` fault timelines: a
+    degraded WAN hop flips the remaining edges mid-run, in-flight stages
+    keep their plan, ``plan.replanned`` events and per-record
+    ``replan_count`` record the trail, ``predicted_s`` is stamped from the
+    plan in force at dispatch, and auto-speculation fires on the
+    high-variance link only,
+  * properties (hypothesis, or the deterministic fallback shim): a replan
+    never makes the predicted remaining time worse; frozen telemetry never
+    drifts; flapping links cannot exceed the replan rate limits.
+"""
+import dataclasses
+import threading
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from harness import FaultTimeline, LinkFaults
+from repro.core import model as tm
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.events import EventBus
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import GBPS, LinkEstimate, LinkTelemetry
+from repro.runtime.planner import (AdaptivePlanner, EdgeProfile, Planner,
+                                   SPECULATION_CV_TRIGGER,
+                                   SPECULATION_MAX_FACTOR,
+                                   SPECULATION_MIN_FACTOR)
+from repro.runtime.policy import DataPolicy, ReplanPolicy, WorkflowBuilder
+from repro.runtime.workflow import ReplanController, WorkflowRunner
+
+MB = 1 << 20
+AUTO = DataPolicy(strategy="auto")
+
+
+def _spec(name, *, provision_s=0.3, startup_s=0.05, exec_s=0.05,
+          affinity=None, handler=None, streaming=False):
+    return FunctionSpec(name, handler or (lambda d, inv: d),
+                        provision_s=provision_s, startup_s=startup_s,
+                        exec_s=exec_s, affinity=affinity,
+                        streaming=streaming)
+
+
+def _chain(tag, names=("a", "b", "c"), *, default=AUTO, specs=None,
+           payload=None):
+    """Linear workflow over ``names``; root emits ``payload`` when given."""
+    b = WorkflowBuilder(f"rp-{tag}", default_policy=default)
+    prev = None
+    for i, n in enumerate(names):
+        spec = (specs or {}).get(n)
+        if spec is None:
+            handler = None
+            if i == 0 and payload is not None:
+                handler = lambda d, inv, _p=payload: _p
+            spec = _spec(f"rp-{tag}-{n}", handler=handler)
+        sb = b.stage(n, spec)
+        if prev is not None:
+            sb.after(prev)
+        prev = n
+    return b.build()
+
+
+def _seeded_planner(bw=0.2 * GBPS, rtt=0.02, link=("s", "d")):
+    tel = LinkTelemetry()
+    tel.seed(link_key=link, bandwidth=bw, rtt=rtt)
+    return Planner(telemetry=tel), tel
+
+
+# ===================================================== drift terms (model)
+def test_remaining_time_sums_and_skips_unprofiled():
+    assert tm.remaining_time([1.0, None, 2.5]) == pytest.approx(3.5)
+    assert tm.remaining_time([]) is None
+    assert tm.remaining_time([None, None]) is None
+
+
+def test_drift_is_symmetric():
+    """Degradation (fresh > frozen) and recovery (fresh < frozen) drift by
+    the same ratio — both strand the plan on a now-wrong policy."""
+    assert tm.drift(2.0, 1.0) == pytest.approx(2.0)
+    assert tm.drift(1.0, 2.0) == pytest.approx(2.0)
+    assert tm.drift(1.0, 1.0) == pytest.approx(1.0)
+
+
+def test_drift_without_evidence_is_one():
+    """Missing or degenerate predictions are 'no signal', never drift."""
+    for fresh, frozen in ((None, 1.0), (1.0, None), (0.0, 1.0), (1.0, 0.0),
+                          (None, None)):
+        assert tm.drift(fresh, frozen) == 1.0
+        assert not tm.should_replan(fresh, frozen, 1.01)
+
+
+def test_should_replan_thresholds_inclusive():
+    assert tm.should_replan(1.3, 1.0, 1.3)          # at the threshold
+    assert not tm.should_replan(1.29, 1.0, 1.3)
+    assert tm.should_replan(1.0, 1.3, 1.3)          # recovery direction
+
+
+# ==================================================== ReplanPolicy surface
+def test_replan_policy_validation():
+    with pytest.raises(ValueError, match="drift_ratio"):
+        ReplanPolicy(drift_ratio=1.0)
+    with pytest.raises(ValueError, match="drift_ratio"):
+        ReplanPolicy(drift_ratio=0.5)
+    with pytest.raises(ValueError, match="min_interval"):
+        ReplanPolicy(min_interval=-1.0)
+    with pytest.raises(ValueError, match="max_replans"):
+        ReplanPolicy(max_replans=-1)
+    with pytest.raises(ValueError, match="max_replans"):
+        ReplanPolicy(max_replans=1.5)
+
+
+def test_replan_policy_defaults_are_sane():
+    pol = ReplanPolicy()
+    assert pol.drift_ratio > 1.0
+    assert pol.min_interval == 0.0
+    assert pol.max_replans >= 1
+
+
+def test_speculation_auto_policy_validation():
+    assert DataPolicy(speculation="auto").speculation == "auto"
+    with pytest.raises(ValueError, match="speculation"):
+        DataPolicy(speculation="bogus")
+    with pytest.raises(ValueError, match="speculation"):
+        DataPolicy(speculation=-1.0)
+
+
+# ============================================== telemetry variance tracking
+def test_variance_tracks_spread_then_decays():
+    tel = LinkTelemetry(alpha=0.25)
+    key = ("a", "b")
+    # alternating RTTs build variance…
+    for i in range(40):
+        tel.observe_transfer(key, None, nbytes=1000, seconds=1e-5,
+                             rtt=0.01 if i % 2 else 0.05)
+    est = tel.link("a", "b")
+    assert est.rtt_var > 0
+    spread_cv = est.variability
+    assert spread_cv > SPECULATION_CV_TRIGGER
+    # …and a steady link decays it back toward zero
+    for _ in range(80):
+        tel.observe_transfer(key, None, nbytes=1000, seconds=1e-5, rtt=0.03)
+    est = tel.link("a", "b")
+    assert est.variability < spread_cv / 10
+
+
+def test_bandwidth_variance_tracked_independently():
+    tel = LinkTelemetry(alpha=0.25)
+    key = ("a", "b")
+    for i in range(40):                      # same rtt, flapping bandwidth
+        tel.observe_transfer(key, None, nbytes=1000,
+                             seconds=1e-3 if i % 2 else 1e-2, rtt=0.01)
+    est = tel.link("a", "b")
+    assert est.bandwidth_var > 0
+    assert est.rtt_var == pytest.approx(0.0, abs=1e-12)
+    assert est.variability > SPECULATION_CV_TRIGGER
+
+
+def test_seed_and_reseed_reset_variance():
+    tel = LinkTelemetry()
+    key = ("a", "b")
+    for i in range(20):
+        tel.observe_transfer(key, ("edge", "edge"), nbytes=1000,
+                             seconds=1e-3 if i % 2 else 1e-2, rtt=0.01)
+    assert tel.link("a", "b").bandwidth_var > 0
+    tel.seed(link_key=key, bandwidth=1e8, rtt=0.01)
+    est = tel.link("a", "b")
+    assert est.samples == 0 and est.bandwidth_var == 0 and est.rtt_var == 0
+    assert tel.link(None, None, tiers=("edge", "edge")).bandwidth_var > 0
+    tel.reseed({("edge", "edge"): (2e8, 0.02)})
+    tier = tel.link(None, None, tiers=("edge", "edge"))
+    assert tier.bandwidth == 2e8 and tier.samples == 0
+    assert tier.bandwidth_var == 0 and tier.rtt_var == 0
+
+
+def test_linkestimate_variability_is_max_cv():
+    est = LinkEstimate(bandwidth=100.0, rtt=0.01, samples=5,
+                       bandwidth_var=25.0, rtt_var=0.0)
+    assert est.variability == pytest.approx(0.05)       # 5/100
+    est = LinkEstimate(bandwidth=100.0, rtt=0.01, samples=5,
+                       bandwidth_var=25.0, rtt_var=1e-4)
+    assert est.variability == pytest.approx(1.0)        # 0.01/0.01 wins
+    assert LinkEstimate(bandwidth=0.0, rtt=0.0).variability == 0.0
+
+
+# ======================================= speculation="auto" resolution
+def _est(cv, samples=10):
+    """LinkEstimate with exactly ``cv`` bandwidth variability."""
+    return LinkEstimate(bandwidth=100.0, rtt=0.0, samples=samples,
+                        bandwidth_var=(cv * 100.0) ** 2)
+
+
+def test_auto_speculation_steady_and_blind_links_resolve_zero():
+    p = Planner()
+    assert p._auto_speculation(None) == 0.0
+    assert p._auto_speculation(_est(0.0)) == 0.0
+    assert p._auto_speculation(_est(SPECULATION_CV_TRIGGER * 0.9)) == 0.0
+    # a seed-only estimate (samples=0) is a prior, not evidence of flap
+    assert p._auto_speculation(_est(5.0, samples=0)) == 0.0
+
+
+def test_auto_speculation_factor_bounds_and_monotonicity():
+    p = Planner()
+    cvs = [SPECULATION_CV_TRIGGER, 0.5, 1.0, 2.0, 5.0]
+    factors = [p._auto_speculation(_est(cv)) for cv in cvs]
+    for f in factors:
+        assert SPECULATION_MIN_FACTOR <= f <= SPECULATION_MAX_FACTOR
+    # flappier links re-dispatch earlier (factor never increases with cv)
+    assert all(a >= b for a, b in zip(factors, factors[1:]))
+
+
+def test_auto_speculation_resolved_per_edge_at_compile():
+    planner, tel = _seeded_planner()
+    # build real variance on the link (alternating effective bandwidth)
+    for i in range(40):
+        tel.observe_transfer(("s", "d"), None, nbytes=MB,
+                             seconds=0.01 if i % 2 else 0.1, rtt=0.02)
+    wf = _chain("specauto", ("a", "b"),
+                default=DataPolicy(strategy="auto", speculation="auto"))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=4 * MB, src_node="s", dst_node="d")})
+    pol = plan.stages["b"].edge_policy("a")
+    assert isinstance(pol.speculation, float)
+    assert SPECULATION_MIN_FACTOR <= pol.speculation <= SPECULATION_MAX_FACTOR
+    # and the compile stamped a budget = factor × the stage's Eq. 4 time
+    sp = plan.stages["b"]
+    assert sp.speculation_budget_s == pytest.approx(
+        pol.speculation * sp.predicted_s)
+
+
+def test_auto_speculation_stable_link_no_budget():
+    planner, tel = _seeded_planner()
+    for _ in range(30):                              # steady traffic
+        tel.observe_transfer(("s", "d"), None, nbytes=MB, seconds=0.05,
+                             rtt=0.02)
+    wf = _chain("specstable", ("a", "b"),
+                default=DataPolicy(strategy="auto", speculation="auto"))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=4 * MB, src_node="s", dst_node="d")})
+    assert plan.stages["b"].edge_policy("a").speculation == 0.0
+    assert plan.stages["b"].speculation_budget_s is None
+
+
+def test_fixed_speculation_budget_from_prediction():
+    planner, _ = _seeded_planner()
+    wf = _chain("specfix", ("a", "b"),
+                default=DataPolicy(speculation=2.0))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=4 * MB, src_node="s", dst_node="d")})
+    sp = plan.stages["b"]
+    assert sp.predicted_s is not None
+    assert sp.speculation_budget_s == pytest.approx(2.0 * sp.predicted_s)
+    # unprofiled compile: speculation still declared, but no budget to arm
+    bare = Planner().compile(_chain("specbare", ("a", "b"),
+                                    default=DataPolicy(speculation=2.0)))
+    assert bare.stages["b"].speculation_budget_s is None
+
+
+# ========================================= planner re-planning primitives
+def test_plan_carries_profiles_and_generation():
+    planner, _ = _seeded_planner()
+    profiles = {("a", "b"): EdgeProfile(size=MB, src_node="s", dst_node="d")}
+    plan = planner.compile(_chain("gen", ("a", "b")), profiles=profiles)
+    assert dict(plan.profiles) == profiles
+    assert plan.generation == 0 and not plan.replanned
+    with pytest.raises(TypeError):          # immutable, like plan.stages
+        plan.profiles[("a", "b")] = None
+
+
+def test_predict_remaining_follows_telemetry():
+    planner, tel = _seeded_planner(bw=1e8, rtt=0.001)
+    wf = _chain("drift", ("a", "b"))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=32 * MB, src_node="s", dst_node="d")})
+    fresh, frozen = planner.predict_remaining(wf, plan, ["b"])
+    assert fresh == pytest.approx(frozen)            # nothing moved yet
+    for _ in range(30):                              # link collapses 100x
+        tel.observe_transfer(("s", "d"), None, nbytes=MB, seconds=MB / 1e6)
+    fresh, frozen = planner.predict_remaining(wf, plan, ["b"])
+    assert fresh > frozen * 2
+    assert tm.should_replan(fresh, frozen, 1.3)
+    # stages with no comparable edge produce no signal
+    assert planner.predict_remaining(wf, plan, ["a"]) is None
+
+
+def test_recompile_remaining_keeps_dispatched_stageplans():
+    planner, tel = _seeded_planner(bw=10 * GBPS, rtt=0.0002)
+    wf = _chain("keep", ("a", "b", "c"))
+    profiles = {
+        ("a", "b"): EdgeProfile(size=32 * MB, src_node="s", dst_node="d",
+                                compress_ratio=0.05),
+        ("b", "c"): EdgeProfile(size=32 * MB, src_node="s", dst_node="d",
+                                compress_ratio=0.05),
+    }
+    plan = planner.compile(wf, profiles=profiles)
+    # 10 Gbit/s: codec-bound, auto says uncompressed
+    assert plan.stages["c"].edge_policy("b").compression == "none"
+    for _ in range(30):                              # degrade to ~10 MB/s
+        tel.observe_transfer(("s", "d"), None, nbytes=MB, seconds=0.1)
+    new = planner.recompile_remaining(wf, plan, dispatched={"a", "b"})
+    # dispatched stages keep their StagePlan OBJECTS (not equal — same)
+    assert new.stages["a"] is plan.stages["a"]
+    assert new.stages["b"] is plan.stages["b"]
+    # the remaining edge flipped to compression on the now-slow link
+    assert new.stages["c"].edge_policy("b").compression == "lz4-like"
+    assert new.generation == 1 and new.replanned
+    assert new.order == plan.order and new.workflow == plan.workflow
+
+
+def test_recompile_remaining_refreshes_predictions():
+    planner, tel = _seeded_planner(bw=1e8, rtt=0.001)
+    wf = _chain("refresh", ("a", "b"))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=32 * MB, src_node="s", dst_node="d")})
+    before = plan.stages["b"].predicted_s
+    for _ in range(30):
+        tel.observe_transfer(("s", "d"), None, nbytes=MB, seconds=MB / 1e6)
+    new = planner.recompile_remaining(wf, plan, dispatched={"a"})
+    after = new.stages["b"].predicted_s
+    assert after is not None and after > before
+    # and the refreshed prediction matches a from-scratch compile now
+    scratch = planner.compile(wf, profiles=dict(plan.profiles))
+    assert after == pytest.approx(scratch.stages["b"].predicted_s)
+
+
+def test_recompile_remaining_generation_accumulates():
+    planner, _ = _seeded_planner()
+    wf = _chain("gen2", ("a", "b"))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=MB, src_node="s", dst_node="d")})
+    g1 = planner.recompile_remaining(wf, plan, dispatched=set())
+    g2 = planner.recompile_remaining(wf, g1, dispatched={"a"})
+    assert (plan.generation, g1.generation, g2.generation) == (0, 1, 2)
+
+
+# ============================================== ReplanController contract
+class _ScriptedPlanner:
+    """predict_remaining returns scripted (fresh, frozen) pairs; recompile
+    just bumps the generation — isolates the controller's rate limiting."""
+
+    def __init__(self, preds):
+        self.preds = list(preds)
+        self.recompiles = 0
+
+    def predict_remaining(self, wf, plan, remaining):
+        return self.preds.pop(0) if self.preds else (1.0, 1.0)
+
+    def recompile_remaining(self, wf, plan, dispatched):
+        self.recompiles += 1
+        return dataclasses.replace(plan, generation=plan.generation + 1)
+
+
+def _tiny_plan():
+    return Planner().compile(_chain("ctl", ("a", "b"), default=DataPolicy()))
+
+
+def test_controller_quiet_under_frozen_telemetry():
+    planner, _ = _seeded_planner()
+    wf = _chain("ctl-frozen", ("a", "b"))
+    plan = planner.compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=8 * MB, src_node="s", dst_node="d")})
+    ctl = ReplanController(planner, ReplanPolicy(drift_ratio=1.01), wf)
+    for dispatched in (set(), {"a"}):
+        assert ctl.consider(plan, dispatched, now=float(len(dispatched))) \
+            is None
+    assert ctl.count == 0 and ctl.events == []
+
+
+def test_controller_max_replans_is_a_hard_cap():
+    wf = _chain("ctl-cap", ("a", "b"))
+    scripted = _ScriptedPlanner([(10.0, 1.0)] * 8)
+    ctl = ReplanController(scripted, ReplanPolicy(drift_ratio=1.3,
+                                                  max_replans=2), wf)
+    plan = _tiny_plan()
+    flips = 0
+    for i in range(8):
+        new = ctl.consider(plan, set(), now=float(i))
+        if new is not None:
+            plan, flips = new, flips + 1
+    assert flips == 2 and ctl.count == 2 and scripted.recompiles == 2
+    assert plan.generation == 2
+
+
+def test_controller_min_interval_damps_flapping():
+    wf = _chain("ctl-damp", ("a", "b"))
+    scripted = _ScriptedPlanner([(10.0, 1.0)] * 10)
+    ctl = ReplanController(scripted,
+                           ReplanPolicy(drift_ratio=1.3, min_interval=5.0,
+                                        max_replans=10), wf)
+    plan = _tiny_plan()
+    replan_times = []
+    for t in range(10):                       # drift present every second
+        if ctl.consider(plan, set(), now=float(t)) is not None:
+            replan_times.append(t)
+    assert replan_times == [0, 5]             # once per interval, not 10x
+    # nothing remaining -> never considers, regardless of drift
+    assert ctl.consider(plan, {"a", "b"}, now=100.0) is None
+
+
+def test_controller_publishes_trail():
+    bus = EventBus()
+    wf = _chain("ctl-trail", ("a", "b"))
+    scripted = _ScriptedPlanner([(2.0, 1.0)])
+    ctl = ReplanController(scripted, ReplanPolicy(drift_ratio=1.5),
+                           wf, bus=bus)
+    new = ctl.consider(_tiny_plan(), {"a"}, now=1.0)
+    assert new is not None and new.generation == 1
+    assert len(ctl.events) == 1
+    ev = ctl.events[0]
+    assert ev["generation"] == 1 and ev["remaining"] == ["b"]
+    assert ev["drift"] == pytest.approx(2.0)
+    assert bus.history("plan.replanned") == [ev]
+
+
+# ==================================================== runner end-to-end
+def _e2e_cluster(scale=0.02):
+    return Cluster(node_specs=[("cloud-0", "cloud"), ("cloud-1", "cloud")],
+                   clock=Clock(scale))
+
+
+def _e2e_chain(tag, size):
+    payload = bytes(size)                        # compressible
+    specs = {
+        "s0": _spec(f"rp-{tag}-s0", affinity="cloud-0",
+                    handler=lambda d, inv: payload),
+        "s1": _spec(f"rp-{tag}-s1", affinity="cloud-0"),
+        "s2": _spec(f"rp-{tag}-s2", affinity="cloud-1"),
+    }
+    wf = _chain(tag, ("s0", "s1", "s2"), specs=specs)
+    profiles = {
+        ("s1", "s2"): EdgeProfile(size=size, src_node="cloud-0",
+                                  dst_node="cloud-1", compress_ratio=0.05),
+    }
+    return wf, profiles
+
+
+def test_runner_replans_on_midrun_degradation():
+    """The full loop: a fat link degrades after wave 1 (with ambient probe
+    traffic converging telemetry), the next wave's check replans the
+    remaining subgraph only, the trail is on the bus/trace/records, and
+    the dispatched-before stage keeps generation 0."""
+    cluster = _e2e_cluster()
+    wf, profiles = _e2e_chain("e2e", 24 * MB)
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True,
+                            replan=ReplanPolicy(drift_ratio=1.3,
+                                                max_replans=2))
+    plan = runner.compile(wf, profiles=profiles)
+    assert plan.stages["s2"].edge_policy("s1").compression == "none"
+    frozen_pred = plan.stages["s2"].predicted_s
+
+    with FaultTimeline(cluster) as tl:
+        # 0.001x: even the COMPRESSED transfer no longer hides under the
+        # cold start, so the replanned prediction visibly differs from the
+        # frozen one (at milder degradations both are β-bound and equal)
+        tl.degrade_at(1, "cloud-0", "cloud-1", bandwidth_factor=0.001,
+                      probes=25, probe_bytes=256 * 1024)
+        tr = runner.run(wf, b"go", source_node="cloud-0", plan=plan)
+
+    assert tr.plan_generation == 1
+    assert len(tr.replans) == 1
+    ev = tr.replans[0]
+    assert ev["drift"] >= 1.3 and "s2" in ev["flips"]
+    assert cluster.bus.history("plan.replanned") == [ev]
+    # in-flight / already-dispatched stages keep the original plan;
+    # stages dispatched after the flip carry the new generation
+    assert tr.stages["s0"].record.replan_count == 0
+    assert tr.stages["s2"].record.replan_count == 1
+    # the degraded edge flipped to compression mid-run
+    assert tr.stages["s2"].record.compress_ratio is not None
+    # predicted_s comes from the plan IN FORCE at dispatch, not the stale
+    # compile: the frozen prediction can't know about the degradation
+    assert tr.stages["s2"].record.predicted_s != frozen_pred
+
+
+def test_runner_predicted_stays_honest_across_replan(fast_clock):
+    """The ≤10%-error contract survives a replan only because predicted_s
+    is stamped from the post-replan plan (the frozen one is ~7x off)."""
+    cluster = _e2e_cluster(scale=0.05)
+    clock = cluster.clock
+    size = 24 * MB
+    wf, profiles = _e2e_chain("honest", size)
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True,
+                            replan=ReplanPolicy(drift_ratio=1.2))
+    plan = runner.compile(wf, profiles=profiles)
+    with FaultTimeline(cluster) as tl:
+        tl.degrade_at(1, "cloud-0", "cloud-1", bandwidth_factor=0.001,
+                      probes=25, probe_bytes=256 * 1024)
+        tr = runner.run(wf, b"go", source_node="cloud-0", plan=plan)
+    rec = tr.stages["s2"].record
+    assert rec.replan_count >= 1 and rec.cold
+    measured = clock.elapsed_sim(rec.total)
+    err = abs(rec.predicted_s - measured) / measured
+    assert err <= 0.15, (rec.predicted_s, measured)
+    frozen_err = abs(plan.stages["s2"].predicted_s - measured) / measured
+    assert frozen_err > err        # the stale stamp would have been a lie
+
+
+def test_runner_quiet_without_drift():
+    cluster = _e2e_cluster()
+    wf, profiles = _e2e_chain("quiet", 8 * MB)
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True,
+                            replan=ReplanPolicy(drift_ratio=1.2))
+    plan = runner.compile(wf, profiles=profiles)
+    tr = runner.run(wf, b"go", source_node="cloud-0", plan=plan)
+    assert tr.plan_generation == 0 and tr.replans == []
+    assert cluster.bus.history("plan.replanned") == []
+    assert all(sr.record.replan_count == 0 for sr in tr.stages.values())
+
+
+def test_runner_flap_respects_max_replans():
+    cluster = _e2e_cluster()
+    names = tuple(f"s{i}" for i in range(6))
+    size = 8 * MB
+    specs = {n: _spec(f"rp-flap-{n}",
+                      affinity="cloud-0" if i % 2 == 0 else "cloud-1",
+                      handler=(lambda d, inv, _p=bytes(size): _p))
+             for i, n in enumerate(names)}
+    wf = _chain("flap", names, specs=specs)
+    profiles = {
+        (a, b): EdgeProfile(size=size,
+                            src_node=specs[a].affinity,
+                            dst_node=specs[b].affinity, compress_ratio=0.05)
+        for a, b in zip(names, names[1:])}
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True,
+                            replan=ReplanPolicy(drift_ratio=1.2,
+                                                max_replans=1))
+    plan = runner.compile(wf, profiles=profiles)
+    with FaultTimeline(cluster) as tl:
+        tl.flap("cloud-0", "cloud-1", waves=(1, 2, 3, 4),
+                bandwidth_factor=0.005, probes=20, probe_bytes=MB)
+        tr = runner.run(wf, b"go", source_node="cloud-0", plan=plan)
+    assert tr.plan_generation <= 1
+    assert len(tr.replans) == 1               # flapped 2x, replanned once
+    assert len(tr.stages) == len(names)       # the run still completed
+
+
+def test_runner_stage_done_wave_events():
+    cluster = _e2e_cluster()
+    wf, profiles = _e2e_chain("waves", 1 * MB)
+    runner = WorkflowRunner(cluster, use_truffle=True, prewarm_roots=True)
+    tr = runner.run(wf, b"go", source_node="cloud-0",
+                    plan=runner.compile(wf, profiles=profiles))
+    evs = cluster.bus.history("workflow.stage_done")
+    assert [e["wave"] for e in evs] == [1, 2, 3]
+    assert [e["stage"] for e in evs] == ["s0", "s1", "s2"]
+    assert all(e["workflow"] == wf.name and e["node"] for e in evs)
+    assert len(tr.stages) == 3
+
+
+def test_speculation_auto_fires_on_variable_link_only(fast_clock):
+    """End-to-end: variance built on edge-0->edge-1 resolves a real backup
+    budget for the stage behind it; a steady link resolves 0 and never
+    speculates. When the flappy link then collapses mid-dispatch, the
+    backup fires, is counted by the scheduler, and wins off-node."""
+    cluster = Cluster(clock=fast_clock)
+    faults = LinkFaults(cluster)
+    # history: the edge-0->edge-1 link flaps (ambient traffic observes it)
+    src, dst = cluster.node("edge-0"), cluster.node("edge-1")
+    for i in range(24):
+        if i % 2:
+            faults.degrade("edge-0", "edge-1", bandwidth_factor=0.05)
+        else:
+            faults.restore()
+        cluster.transfer(src, dst, bytes(MB))
+    faults.restore()
+    assert cluster.telemetry.link("edge-0", "edge-1").variability \
+        > SPECULATION_CV_TRIGGER
+
+    size = 4 * MB
+    specs = {
+        "a": _spec("rp-sa-a", affinity="edge-0",
+                   handler=lambda d, inv: bytes(size),
+                   provision_s=0.1, exec_s=0.01),
+        "b": _spec("rp-sa-b", provision_s=0.1, exec_s=0.01),   # unpinned
+    }
+    wf = _chain("sa", ("a", "b"), specs=specs,
+                default=DataPolicy(strategy="auto", speculation="auto"))
+    profiles = {("a", "b"): EdgeProfile(size=size, src_node="edge-0",
+                                        dst_node="edge-1")}
+    planner = AdaptivePlanner(cluster)
+    plan = planner.compile(wf, profiles=profiles)
+    factor = plan.stages["b"].edge_policy("a").speculation
+    assert SPECULATION_MIN_FACTOR <= factor <= SPECULATION_MAX_FACTOR
+    assert plan.stages["b"].speculation_budget_s is not None
+
+    # steer the first attempt onto edge-1, then kill its ingress link
+    with cluster.scheduler._lock:
+        cluster.scheduler._load["edge-0"] = 5
+        cluster.scheduler._load["edge-2"] = 5
+    runner = WorkflowRunner(cluster, use_truffle=True, plan=plan)
+    with faults:
+        faults.degrade("edge-0", "edge-1", bandwidth_factor=1e-5)
+        tr = runner.run(wf, b"go", source_node="edge-0")
+    sr = tr.stages["b"]
+    assert sr.speculated and sr.record.node != "edge-1"
+    assert sr.record.speculation_budget_s == pytest.approx(
+        plan.stages["b"].speculation_budget_s)
+    assert cluster.scheduler.stats["speculative_placements"] >= 1
+    placed = cluster.bus.history("scheduling.placed")
+    assert any(e.get("speculative") for e in placed)
+
+
+def test_speculation_stable_link_never_pays_backup(fast_clock):
+    """Control arm: same topology, steady link -> factor 0, no budget, no
+    speculative placement even though speculation='auto' was requested."""
+    cluster = Cluster(clock=fast_clock)
+    src, dst = cluster.node("edge-0"), cluster.node("edge-1")
+    for _ in range(24):
+        cluster.transfer(src, dst, bytes(MB))    # steady traffic
+    size = 4 * MB
+    specs = {
+        "a": _spec("rp-ss-a", affinity="edge-0",
+                   handler=lambda d, inv: bytes(size),
+                   provision_s=0.1, exec_s=0.01),
+        "b": _spec("rp-ss-b", provision_s=0.1, exec_s=0.01),
+    }
+    wf = _chain("ss", ("a", "b"), specs=specs,
+                default=DataPolicy(strategy="auto", speculation="auto"))
+    plan = AdaptivePlanner(cluster).compile(wf, profiles={
+        ("a", "b"): EdgeProfile(size=size, src_node="edge-0",
+                                dst_node="edge-1")})
+    assert plan.stages["b"].edge_policy("a").speculation == 0.0
+    assert plan.stages["b"].speculation_budget_s is None
+    runner = WorkflowRunner(cluster, use_truffle=True, plan=plan)
+    tr = runner.run(wf, b"go", source_node="edge-0")
+    assert not tr.stages["b"].speculated
+    assert tr.stages["b"].record.speculation_budget_s is None
+    assert cluster.scheduler.stats["speculative_placements"] == 0
+
+
+# ============================================================= properties
+N_EDGES = 3      # chain a->b->c->d
+
+
+def _prop_setup(sizes_mb, bws, rtts, ratios):
+    tel = LinkTelemetry()
+    names = ("a", "b", "c", "d")
+    profiles = {}
+    for k, (s, d) in enumerate(zip(names, names[1:])):
+        tel.seed(link_key=(f"n{k}", f"n{k+1}"),
+                 bandwidth=bws[k], rtt=rtts[k])
+        profiles[(s, d)] = EdgeProfile(size=int(sizes_mb[k] * MB),
+                                       src_node=f"n{k}", dst_node=f"n{k+1}",
+                                       compress_ratio=ratios[k])
+    planner = Planner(telemetry=tel)
+    wf = _chain("prop", names)
+    return planner, tel, wf, profiles
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.tuples(*[st.floats(min_value=0.5, max_value=128.0)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=1e6, max_value=2e9)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=0.0, max_value=0.05)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=0.03, max_value=1.0)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=0.01, max_value=100.0)] * N_EDGES),
+)
+def test_property_replan_never_worse_than_frozen_plan(sizes_mb, bws, rtts,
+                                                      ratios, shifts):
+    """Property: after ANY telemetry shift, the recompiled remaining
+    subgraph's predicted time (under current telemetry) never exceeds the
+    frozen plan's — re-running the per-edge argmin can only help."""
+    planner, tel, wf, profiles = _prop_setup(sizes_mb, bws, rtts, ratios)
+    plan = planner.compile(wf, profiles=profiles)
+    for k, shift in enumerate(shifts):               # links drift anywhere
+        tel.seed(link_key=(f"n{k}", f"n{k+1}"),
+                 bandwidth=max(bws[k] * shift, 1e3), rtt=rtts[k])
+    remaining = ["b", "c", "d"]
+    frozen_now = planner.predict_remaining(wf, plan, remaining)
+    new = planner.recompile_remaining(wf, plan, dispatched={"a"})
+    fresh_now = planner.predict_remaining(wf, new, remaining)
+    assert frozen_now is not None and fresh_now is not None
+    # each pair is (under-current-telemetry, at-own-compile-time); compare
+    # both plans under CURRENT telemetry
+    assert fresh_now[0] <= frozen_now[0] + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.tuples(*[st.floats(min_value=0.5, max_value=128.0)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=1e6, max_value=2e9)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=0.0, max_value=0.05)] * N_EDGES),
+    st.tuples(*[st.floats(min_value=0.03, max_value=1.0)] * N_EDGES),
+)
+def test_property_no_drift_under_frozen_telemetry(sizes_mb, bws, rtts,
+                                                  ratios):
+    """Property: with telemetry untouched since compile, the re-predicted
+    remaining time is EXACTLY the frozen prediction — drift 1.0, so no
+    ReplanPolicy (whose drift_ratio > 1 by construction) can fire."""
+    planner, _, wf, profiles = _prop_setup(sizes_mb, bws, rtts, ratios)
+    plan = planner.compile(wf, profiles=profiles)
+    for remaining in (["b", "c", "d"], ["c", "d"], ["d"]):
+        fresh, frozen = planner.predict_remaining(wf, plan, remaining)
+        assert fresh == frozen
+        assert tm.drift(fresh, frozen) == 1.0
+        assert not tm.should_replan(fresh, frozen, 1.0 + 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.floats(min_value=1.0, max_value=5.0), min_size=1,
+             max_size=12),
+    st.integers(min_value=0, max_value=3),
+    st.floats(min_value=0.0, max_value=10.0),
+    st.floats(min_value=1.05, max_value=2.0),
+)
+def test_property_flap_respects_rate_limits(drifts, max_replans,
+                                            min_interval, drift_ratio):
+    """Property: under ANY drift sequence (flapping included), the
+    controller never exceeds max_replans, never replans more than once per
+    min_interval, and never replans on sub-threshold drift."""
+    wf = _chain("prop-limits", ("a", "b"))
+    scripted = _ScriptedPlanner([(d, 1.0) for d in drifts])
+    ctl = ReplanController(
+        scripted, ReplanPolicy(drift_ratio=drift_ratio,
+                               min_interval=min_interval,
+                               max_replans=max_replans), wf)
+    plan = _tiny_plan()
+    times = []
+    for i, d in enumerate(drifts):
+        new = ctl.consider(plan, set(), now=float(i))
+        if new is not None:
+            plan = new
+            times.append(float(i))
+            assert d >= drift_ratio          # sub-threshold never replans
+    assert len(times) <= max_replans
+    assert all(b - a >= min_interval for a, b in zip(times, times[1:]))
+    assert plan.generation == len(times) == ctl.count

@@ -183,3 +183,96 @@ def test_wait_for_still_blocks_and_times_out():
     b.set("later", b"xyz")
     th.join(timeout=5)
     assert got["v"] == b"xyz"
+
+
+# ------------------------------------- 4. residency-aware eviction (PR 5)
+MB = 1 << 20
+
+
+def _filled(data_byte: bytes, size: int = MB) -> bytes:
+    return bytes(data_byte) * size
+
+
+def test_sole_replica_survives_lru_pressure():
+    """A buffer wired to the cluster registry sheds replicated content
+    first: the LRU-oldest entry survives capacity pressure when it is the
+    cluster's LAST copy of its digest, while a newer 3-replica digest is
+    evicted instead."""
+    from repro.core.buffer import content_digest
+
+    cluster = Cluster(clock=fast_clock_obj())
+    buf = cluster.node("edge-0").buffer
+    buf.capacity = 3 * MB
+
+    sole = _filled(b"s")
+    d_sole = content_digest(sole)
+    buf.set("sole", sole, digest=d_sole)           # oldest; ONLY copy
+    hot = _filled(b"h")
+    d_hot = content_digest(hot)
+    buf.set("hot", hot, digest=d_hot)
+    # 3 replicas total: the other two nodes hold the same content
+    cluster.node("edge-1").buffer.set("hot-r1", hot, digest=d_hot)
+    cluster.node("cloud-0").buffer.set("hot-r2", hot, digest=d_hot)
+
+    buf.set("filler", _filled(b"f", 2 * MB))       # 4 MB > 3 MB: evict 1 MB
+    # plain LRU would evict "sole" (oldest); residency-aware evicts "hot"
+    assert buf.get("sole") == sole
+    assert "hot" not in buf
+    assert buf.size <= buf.capacity
+    # the registry saw the withdrawal, and the other replicas still resolve
+    assert set(cluster.digests.nodes_for(d_hot)) == {"edge-1", "cloud-0"}
+    assert set(cluster.digests.nodes_for(d_sole)) == {"edge-0"}
+
+
+def test_plain_lru_without_oracle_unchanged():
+    """A standalone Buffer (no replica oracle) keeps strict LRU order —
+    the default path is byte-for-byte the old behavior."""
+    from repro.core.buffer import content_digest
+
+    b = Buffer(capacity_bytes=3 * MB)
+    x = _filled(b"x")
+    b.set("x", x, digest=content_digest(x))
+    y = _filled(b"y")
+    b.set("y", y, digest=content_digest(y))
+    b.set("filler", _filled(b"f", 2 * MB))
+    assert "x" not in b                            # oldest goes first
+    assert b.get("y") == y
+
+
+def test_eviction_falls_back_to_sole_replica_when_nothing_else():
+    """Capacity is still a hard bound: when every victim is a sole
+    replica, the LRU-oldest one IS evicted (deferral, not immunity)."""
+    from repro.core.buffer import content_digest
+
+    cluster = Cluster(clock=fast_clock_obj())
+    buf = cluster.node("edge-0").buffer
+    buf.capacity = 3 * MB
+    x = _filled(b"x")
+    buf.set("x", x, digest=content_digest(x))      # sole
+    y = _filled(b"y")
+    buf.set("y", y, digest=content_digest(y))      # sole
+    buf.set("filler", _filled(b"f", 2 * MB))
+    assert "x" not in buf                          # oldest sole replica
+    assert buf.get("y") == y
+    assert buf.size <= buf.capacity
+
+
+def test_eviction_prefers_anonymous_entries_over_sole_replicas():
+    """Entries with no digest (nothing downstream can alias them) are fair
+    game before the last copy of addressable content — even when younger."""
+    from repro.core.buffer import content_digest
+
+    cluster = Cluster(clock=fast_clock_obj())
+    buf = cluster.node("edge-0").buffer
+    buf.capacity = 3 * MB
+    x = _filled(b"x")
+    buf.set("x", x, digest=content_digest(x))      # oldest; sole replica
+    buf.set("anon", _filled(b"a"))                 # younger, digest-less
+    buf.set("filler", _filled(b"f", 2 * MB))
+    assert buf.get("x") == x
+    assert "anon" not in buf
+
+
+def fast_clock_obj():
+    from repro.runtime.clock import Clock
+    return Clock(scale=0.01)

@@ -1,0 +1,266 @@
+"""Chaos/soak tier: long chained workflows under scripted fault timelines.
+
+The repo's unit tests assert single mechanisms; this tier asserts that
+NOTHING ACCUMULATES. A 50+-wave chained workflow (chunk-streamed, dedup'd,
+capacity-pressured buffers) runs under degrade/recover/flap timelines and
+the test then checks the system drained back to baseline: no leaked
+executor/data-path threads, no in-flight relay-table entries, no
+outstanding scheduler load credits, no incomplete (writer-abandoned)
+buffer entries, buffers within capacity. A second soak runs WITH mid-flight
+re-planning enabled under a flapping link and asserts the replan rate
+limits held while the run still completed.
+
+Also here: the telemetry tear regression — hammering channel grants while
+concurrently snapshotting and reseeding (``Cluster.reseed_telemetry``)
+must never produce a torn snapshot (half-old/half-new tier priors) or a
+bandwidth estimate outside the envelope of configurations that ever
+existed. (Seeds are replaced in one telemetry lock hold; channel
+reconfiguration happens under the channel's grant lock.)
+
+``SOAK_WAVES`` (env) scales the chain length — the nightly CI soak job
+runs it longer than the PR-path default.
+"""
+import os
+import threading
+import time
+
+import pytest
+
+from harness import FaultTimeline
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import GBPS
+from repro.runtime.planner import EdgeProfile
+from repro.runtime.policy import DataPolicy, ReplanPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
+
+MB = 1 << 20
+SOAK_WAVES = max(50, int(os.environ.get("SOAK_WAVES", "55")))
+
+
+# ------------------------------------------------------------------ helpers
+def _soak_chain(tag: str, waves: int, size: int, policy: DataPolicy,
+                nodes=("edge-0", "edge-1", "cloud-0")):
+    """Linear chain of ``waves`` stages round-robined over ``nodes``; every
+    stage emits DISTINCT content (dedup must not collapse the chain into
+    aliases — we want real transfers churning the buffers)."""
+    b = WorkflowBuilder(f"soak-{tag}", default_policy=policy)
+    prev = None
+    for i in range(waves):
+        def handler(d, inv, _i=i):
+            return _i.to_bytes(4, "big") * (size // 4)
+        sb = b.stage(f"w{i}", FunctionSpec(
+            f"soak-{tag}-{i}", handler, provision_s=0.08, startup_s=0.02,
+            exec_s=0.005, affinity=nodes[i % len(nodes)]))
+        if prev is not None:
+            sb.after(prev)
+        prev = f"w{i}"
+    return b.build()
+
+
+def _assert_drained(cluster, base_threads: int, slack: int = 3) -> None:
+    """Every per-run resource returned to baseline."""
+    deadline = time.monotonic() + 15
+    while threading.active_count() > base_threads + slack \
+            and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert threading.active_count() <= base_threads + slack, \
+        [t.name for t in threading.enumerate()]
+    assert cluster.relays._inflight == {}          # no wedged relays
+    for node in cluster.node_list:
+        assert cluster.scheduler.load_of(node.name) == 0
+        buf = node.buffer
+        with buf._lock:
+            incomplete = [e.key for e in buf._entries.values()
+                          if not e.complete]
+            size, cap = buf._size, buf.capacity
+        assert incomplete == [], incomplete        # no abandoned streams
+        assert size <= cap
+
+
+# ------------------------------------------------------------------- soaks
+def test_soak_long_chain_under_fault_timeline_no_leaks():
+    """50+ cold-start waves of chunk-streamed dedup'd passing, buffers
+    under capacity pressure (forced eviction churn all run long), while
+    the fabric degrades, recovers, and flaps mid-run. The run completes
+    and every resource drains back to baseline."""
+    base_threads = threading.active_count()
+    cluster = Cluster(clock=Clock(0.004))
+    size = 256 * 1024
+    for node in cluster.node_list:                 # ~8 entries per buffer
+        node.buffer.capacity = 2 * MB
+    wf = _soak_chain("leak", SOAK_WAVES, size,
+                     DataPolicy(stream=True, dedup=True))
+    runner = WorkflowRunner(cluster, use_truffle=True)
+    mid, late = SOAK_WAVES // 3, 2 * SOAK_WAVES // 3
+    with FaultTimeline(cluster) as tl:
+        tl.degrade_at(2, "edge-0", "edge-1", bandwidth_factor=0.2,
+                      extra_rtt=0.002)
+        tl.restore_at(mid)
+        tl.flap("edge-1", "cloud-0", waves=(late, late + 2, late + 4,
+                                            late + 6),
+                bandwidth_factor=0.25)
+        tr = runner.run(wf, b"go", source_node="edge-0")
+
+    assert len(tr.stages) == SOAK_WAVES
+    assert all(sr.record.t_exec_end > 0 for sr in tr.stages.values())
+    waves = [e["wave"] for e in cluster.bus.history("workflow.stage_done")]
+    assert waves == list(range(1, SOAK_WAVES + 1))
+    assert [w for w, _ in tl.log] == [2, mid, late, late + 2, late + 4,
+                                      late + 6]
+    # capacity pressure really exercised the (residency-aware) evictor
+    assert sum(n.buffer.stats["evictions"] for n in cluster.node_list) > 0
+    _assert_drained(cluster, base_threads)
+
+
+def test_soak_with_replanning_under_flap():
+    """A 30-wave auto-planned chain with re-planning enabled while a link
+    flaps (with ambient probe traffic converging telemetry each phase):
+    the run completes, at least one replan fires, the rate limits hold,
+    and nothing leaks."""
+    base_threads = threading.active_count()
+    waves = 30
+    cluster = Cluster(clock=Clock(0.004))
+    size = 4 * MB
+    nodes = ("edge-0", "edge-1", "cloud-0")
+    wf = _soak_chain("replan", waves, size, DataPolicy(strategy="auto"),
+                     nodes=nodes)
+    profiles = {
+        (f"w{i}", f"w{i+1}"): EdgeProfile(
+            size=size, src_node=nodes[i % 3], dst_node=nodes[(i + 1) % 3],
+            compress_ratio=0.05)
+        for i in range(waves - 1)}
+    pol = ReplanPolicy(drift_ratio=1.2, min_interval=0.5, max_replans=3)
+    runner = WorkflowRunner(cluster, use_truffle=True, replan=pol)
+    plan = runner.compile(wf, profiles=profiles)
+    with FaultTimeline(cluster) as tl:
+        tl.flap("edge-0", "edge-1", waves=(5, 11, 17, 23),
+                bandwidth_factor=0.01, probes=15, probe_bytes=256 * 1024)
+        tr = runner.run(wf, b"go", source_node="edge-0", plan=plan)
+
+    assert len(tr.stages) == waves
+    assert 1 <= tr.plan_generation <= pol.max_replans
+    assert len(tr.replans) == tr.plan_generation
+    assert len(cluster.bus.history("plan.replanned")) == tr.plan_generation
+    # every record names the generation that dispatched it, monotonically
+    gens = [tr.stages[f"w{i}"].record.replan_count for i in range(waves)]
+    assert gens == sorted(gens)
+    assert gens[-1] == tr.plan_generation
+    _assert_drained(cluster, base_threads)
+
+
+def test_repeated_runs_on_one_cluster_reach_steady_state():
+    """Back-to-back runs of the same workflow on one cluster must not
+    accumulate warm instances, relay entries, load credits, or threads —
+    the warm path reuses what the cold path built."""
+    base_threads = threading.active_count()
+    cluster = Cluster(clock=Clock(0.004))
+    wf = _soak_chain("steady", 8, 128 * 1024,
+                     DataPolicy(stream=True, dedup=True))
+    runner = WorkflowRunner(cluster, use_truffle=True)
+    for _ in range(4):
+        tr = runner.run(wf, b"go", source_node="edge-0")
+        assert len(tr.stages) == 8
+    for i in range(8):
+        pool = cluster.platform._warm[f"soak-steady-{i}"]
+        assert len(pool) <= 2, (i, len(pool))      # no per-run pile-up
+    _assert_drained(cluster, base_threads)
+
+
+# ----------------------------------------- telemetry tear regression (PR 5)
+def test_snapshot_and_reseed_never_tear_under_grants():
+    """Regression: hammer grants on one link while another thread flips the
+    fabric configuration through ``reseed_telemetry`` and a third snapshots
+    telemetry. Atomic reseed + under-lock channel reconfiguration mean
+    every snapshot shows ONE configuration for the quiet tiers (never a
+    half-reseeded mix) and the hammered link's estimate stays inside the
+    envelope of configurations that ever existed."""
+    cluster = Cluster(clock=Clock(0.0))
+    src, dst = cluster.node("edge-0"), cluster.node("edge-1")
+    cfg_a = dict(cluster.network.tier_links)
+    cfg_b = {k: (bw * 2, lat * 2) for k, (bw, lat) in cfg_a.items()}
+    cluster.transfer(src, dst, bytes(1024))        # materialize the channel
+
+    stop = threading.Event()
+    errors = []
+    snaps = []
+
+    def hammer():
+        payload = bytes(64 * 1024)
+        try:
+            while not stop.is_set():
+                cluster.transfer(src, dst, payload)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def reseeder():
+        try:
+            for i in range(150):
+                cluster.network.tier_links = cfg_b if i % 2 else cfg_a
+                cluster.reseed_telemetry()
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def snapshotter():
+        try:
+            for _ in range(300):
+                snaps.append(cluster.telemetry.snapshot())
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=f, daemon=True)
+               for f in (hammer, hammer, reseeder, snapshotter)]
+    for t in threads:
+        t.start()
+    threads[2].join(30)
+    threads[3].join(30)
+    stop.set()
+    threads[0].join(30)
+    threads[1].join(30)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads)
+
+    # tiers with NO traffic sit exactly on their seed: every snapshot must
+    # show the SAME configuration for all of them (torn reseed = a mix)
+    quiet = [("cloud", "cloud"), ("edge", "cloud"), ("cloud", "edge")]
+    checked = 0
+    for snap in snaps:
+        tiers = snap["tiers"]
+        if not all(k in tiers for k in quiet):
+            continue
+        labels = set()
+        for k in quiet:
+            est = tiers[k]
+            if (est.bandwidth, est.rtt) == cfg_a[k]:
+                labels.add("a")
+            elif (est.bandwidth, est.rtt) == cfg_b[k]:
+                labels.add("b")
+            else:
+                labels.add("torn")
+        assert labels in ({"a"}, {"b"}), (labels, snap["tiers"])
+        checked += 1
+    assert checked >= len(snaps) // 2
+
+    # the hammered link's estimate never left the [cfg_a, cfg_b] envelope:
+    # a torn grant (bytes priced at one bandwidth, observed at another)
+    # would have poisoned the EWMA with a rate that never existed
+    lo = cfg_a[("edge", "edge")][0] * 0.999
+    hi = cfg_b[("edge", "edge")][0] * 1.001
+    est = cluster.telemetry.link("edge-0", "edge-1")
+    assert est is not None and est.samples > 0
+    assert lo <= est.bandwidth <= hi, (est.bandwidth, lo, hi)
+
+
+def test_reseed_applies_to_live_channels_atomically():
+    """reseed_telemetry recalibrates already-materialized channels through
+    Channel.reconfigure (bandwidth AND latency move together)."""
+    cluster = Cluster(clock=Clock(0.0))
+    src, dst = cluster.node("edge-0"), cluster.node("cloud-0")
+    ch = cluster.network.channel(src, dst)
+    cluster.network.tier_links = dict(cluster.network.tier_links)
+    cluster.network.tier_links[("edge", "cloud")] = (1.0 * GBPS, 0.001)
+    cluster.reseed_telemetry()
+    assert (ch.bandwidth, ch.latency) == (1.0 * GBPS, 0.001)
+    est = cluster.telemetry.link(None, None, tiers=("edge", "cloud"))
+    assert est.bandwidth == 1.0 * GBPS and est.samples == 0
