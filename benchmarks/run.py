@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   replan.*    mid-flight re-planning under a wave-2 link degradation:
               frozen plan vs replanned vs post-degradation oracle, plus
               speculation="auto" budget resolution
+  fault.*     node crash recovery: data-plane-aware retries (re-ship from
+              surviving CAS replicas) vs naive restart + full rerun
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
@@ -49,9 +51,10 @@ def main() -> None:
     skip = set(os.environ.get("BENCH_SKIP", "").split(","))
 
     from benchmarks import (adaptive_sweep, chained_sweep, chained_total,
-                            coldstart_sweep, lifecycle, locality_sweep,
-                            model_validation, policy_sweep, replan_sweep,
-                            roofline, streaming_sweep, video_analytics)
+                            coldstart_sweep, fault_sweep, lifecycle,
+                            locality_sweep, model_validation, policy_sweep,
+                            replan_sweep, roofline, streaming_sweep,
+                            video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -79,6 +82,9 @@ def main() -> None:
 
     print("# --- mid-flight re-planning (frozen vs replanned vs oracle) ---")
     replan_sweep.run()
+
+    print("# --- node crash recovery (replica re-ship vs naive rerun) ---")
+    fault_sweep.run()
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")

@@ -42,6 +42,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.core.errors import BufferOfflineError
+
 
 def content_digest(data) -> str:
     """Content address of a payload (BLAKE2b-128: fast, ample for dedup)."""
@@ -94,6 +96,7 @@ class BufferReader:
                     else time.monotonic() + self._timeout)
         with buf._cond:
             while True:
+                buf._check_online_locked()
                 if self._entry is None:
                     self._entry = buf._entries.get(self._key)
                 e = self._entry
@@ -142,6 +145,59 @@ class Buffer:
         # "resident" AFTER another thread delivered the matching "evicted"
         # (RLock: a listener may mutate the buffer and re-enter the flush)
         self._flush_lock = threading.RLock()
+        # node crashed: all IO fails fast until revive() (see clear())
+        self._offline = False
+
+    # -------------------------------------------------- crash/offline state
+    def _check_online_locked(self) -> None:
+        if self._offline:
+            raise BufferOfflineError(
+                f"{self.name}: buffer offline (node crashed)")
+
+    def clear(self, offline: bool = False) -> int:
+        """Wipe every entry — the CAS loss of a node crash. Residency
+        withdrawals fire for each digest (the DigestRegistry forgets these
+        replicas), in-flight streams abort, and blocked waiters/readers
+        wake. ``offline=True`` additionally fails all subsequent IO with
+        :class:`BufferOfflineError` until :meth:`revive`. Returns the
+        number of entries dropped."""
+        with self._cond:
+            keys = list(self._entries)
+            for key in keys:
+                self._drop_locked(key)
+            if offline:
+                self._offline = True
+            self._cond.notify_all()
+        self._flush_residency()
+        return len(keys)
+
+    def revive(self) -> None:
+        """Restart: the buffer comes back empty but serving IO again."""
+        with self._cond:
+            self._offline = False
+            self._cond.notify_all()
+
+    def poison(self, key: str, reason: str = "transfer failed") -> bool:
+        """Mark ``key`` as failed-for-good: the data path that was going
+        to land it died (source crashed mid-ship, link went dark). A
+        waiter parked in :meth:`wait_for` — or a chunk reader — wakes
+        immediately and raises instead of burning its full timeout.
+        Content that landed completely before the poison wins the race
+        (returns False, nothing marked). The waiter that observes the
+        poison consumes it (entry popped), so a later retry may reuse
+        the key."""
+        with self._cond:
+            e = self._entries.get(key)
+            if e is not None and e.complete:
+                return False
+            if e is None:
+                # sentinel: incomplete + aborted, size 0, not in the LRU
+                e = BufferEntry(key, time.monotonic(), False,
+                                chunks=[], complete=False, size=0)
+                self._entries[key] = e
+            e.aborted = True
+            self._cond.notify_all()
+        return True
 
     # ------------------------------------------------- residency reporting
     def _queue_residency_locked(self, digest: str, size: int,
@@ -170,6 +226,7 @@ class Buffer:
     def set(self, key: str, data: bytes, pinned: bool = False,
             digest: Optional[str] = None) -> None:
         with self._cond:
+            self._check_online_locked()
             self._drop_locked(key)
             e = BufferEntry(key, time.monotonic(), pinned, digest,
                             chunks=[data], complete=True, size=len(data))
@@ -181,6 +238,7 @@ class Buffer:
 
     def get(self, key: str, pop: bool = False) -> Optional[bytes]:
         with self._lock:
+            self._check_online_locked()
             e = self._entries.get(key)
             if e is None or not e.complete:
                 return None
@@ -205,7 +263,12 @@ class Buffer:
         with self._cond:
             self.stats["waits"] += 1
             while True:
+                self._check_online_locked()
                 e = self._entries.get(key)
+                if e is not None and e.aborted:
+                    self._drop_locked(key)       # consume the poison
+                    raise IOError(f"{self.name}: input {key!r} aborted "
+                                  f"(its data path failed)")
                 if e is not None and e.complete:
                     self.stats["gets"] += 1
                     if pop:
@@ -226,6 +289,7 @@ class Buffer:
         """Create an in-flight entry; chunks land via ``append_chunk``.
         Incomplete streams are invisible to get/wait_for and never evicted."""
         with self._cond:
+            self._check_online_locked()
             self._drop_locked(key)
             e = BufferEntry(key, time.monotonic(), pinned,
                             chunks=[], complete=False, size=0)
@@ -243,6 +307,7 @@ class Buffer:
             self._cond.notify_all()
 
     def _append_entry_locked(self, e: BufferEntry, chunk: bytes) -> None:
+        self._check_online_locked()
         if e.aborted or e.complete:
             raise IOError(f"{self.name}: stream {e.key!r} no longer open")
         e.chunks.append(chunk)
@@ -287,6 +352,7 @@ class Buffer:
         successor. On any failure the entry is aborted (readers wake with
         IOError) and the error re-raised. Returns the bytes ingested."""
         with self._cond:
+            self._check_online_locked()
             self._drop_locked(key)
             e = BufferEntry(key, time.monotonic(), False,
                             chunks=[], complete=False, size=0)
@@ -356,6 +422,7 @@ class Buffer:
         if digest is None:
             return False
         with self._cond:
+            self._check_online_locked()
             src_key = self._digests.get(digest)
             src = self._entries.get(src_key) if src_key else None
             if src is None or not src.complete:

@@ -32,6 +32,7 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
+from repro.core.errors import NodeCrashError
 from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
                                  seed_content, ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
@@ -66,6 +67,11 @@ class CSP:
         t = self.truffle
         cluster = t.cluster
         clock = cluster.clock
+        if not getattr(t.node, "alive", True):
+            # fail fast: a dead source can neither seed nor ship — the
+            # caller's retry machinery must re-fetch from a replica instead
+            raise NodeCrashError(t.node.name,
+                                 f"CSP source node {t.node.name} crashed")
         inv_id = uuid.uuid4().hex
         buf_key = f"truffle/{target_fn}/{inv_id[:8]}"
         if dedup and digest is None:
@@ -101,10 +107,19 @@ class CSP:
                         if avoid is not None else RELAY_WAIT_S)
 
         # (2a) ... while listening for the target host; (6a) early transfer.
+        # ``cancel`` lets a failed trigger abandon the placement wait early
+        # (no placement will ever publish); a failed ship poisons the target
+        # buffer key so the handler's input wait fails NOW, not at timeout.
+        cancel = threading.Event()
+
         def transfer_path():
+            placed = None
             try:
                 rec.t_transfer_start = clock.now()
-                placed = t.watcher.resolve_placement(target_fn, inv_id)
+                placed = t.watcher.resolve_placement_cancellable(
+                    target_fn, inv_id, cancel)
+                if placed is None:
+                    return              # trigger already failed — nothing to ship
                 ship_payload(cluster, t.node, cluster.node(placed["node"]),
                              buf_key, data, stream=stream, digest=digest,
                              chunk_bytes=chunk_bytes, codec=codec, record=rec,
@@ -112,11 +127,23 @@ class CSP:
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)
+                if placed is not None:
+                    try:
+                        cluster.node(placed["node"]).buffer.poison(buf_key)
+                    except Exception:   # noqa: BLE001 — target may be dead too
+                        pass
 
         th = threading.Thread(target=transfer_path, daemon=True,
                               name=f"csp-{target_fn}-{inv_id[:6]}")
         th.start()
-        result = fut.result()
+        try:
+            result = fut.result()
+        except BaseException:
+            cancel.set()                # release the placement wait
+            th.join(timeout=2.0)
+            if errbox:                  # data path saw the root cause
+                raise errbox[0]
+            raise
         join_or_stall(th, rec, self.join_timeout_s,
                       f"CSP transfer for {target_fn} ({inv_id[:8]})")
         if errbox:

@@ -32,3 +32,50 @@ class TransferStallError(RuntimeError):
     def __init__(self, message: str, record: Optional[object] = None):
         super().__init__(message)
         self.record = record
+
+
+class NodeCrashError(RuntimeError):
+    """An operation touched a node that is not alive: provisioning or
+    executing on it, passing data from it, or an affinity pin naming it.
+    ``node`` is the dead node's name (None when no live node exists at
+    all). Classified as an infrastructure fault by the retry layer — the
+    next attempt is steered to a different, health-scored node."""
+
+    def __init__(self, node: Optional[str], message: Optional[str] = None):
+        self.node = node
+        super().__init__(message or f"node {node!r} is not alive")
+
+
+class LinkDownError(RuntimeError):
+    """A fabric transfer hit a channel whose endpoint node went dark
+    (``NetworkFabric.set_node_down``). Raised at transfer start and
+    per-chunk mid-stream, so in-flight streams fail fast instead of
+    pricing bytes against a dead endpoint."""
+
+
+class BufferOfflineError(IOError):
+    """The node-local Truffle buffer is offline (its node crashed and the
+    CAS contents were wiped). All reads/writes fail fast; waiters parked
+    in ``wait_for``/``BufferReader`` are woken and raised out."""
+
+
+class StageExecutionError(RuntimeError):
+    """A workflow stage exhausted its retry budget (or had none). Carries
+    the failure context the raw errbox propagation used to drop: which
+    stage, on which node, after how many attempts, caused by what — plus
+    the last attempt's ``LifecycleRecord`` when one was produced. The
+    original exception is both ``cause`` and ``__cause__``."""
+
+    def __init__(self, stage: str, node: Optional[str] = None,
+                 attempt: int = 1, cause: Optional[BaseException] = None,
+                 record: Optional[object] = None):
+        self.stage = stage
+        self.node = node
+        self.attempt = attempt
+        self.cause = cause
+        self.record = record
+        super().__init__(
+            f"stage {stage!r} failed on node {node!r} "
+            f"after {attempt} attempt(s): {cause!r}")
+        if cause is not None:
+            self.__cause__ = cause

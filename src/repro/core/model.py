@@ -186,6 +186,46 @@ def should_replan(fresh_s: Optional[float], frozen_s: Optional[float],
     return drift(fresh_s, frozen_s) >= drift_ratio
 
 
+# ------------------------------------------------- stage-time calibration
+# Node-health / speculation extension of Eq. 4: compile-time predictions
+# assume nominal node speed. A sick node inflates measured stage time by a
+# roughly multiplicative factor (slow CPU, thrashing disk), so the ratio
+# measured/predicted — EWMA-folded per node and per run — is both the
+# health signal (suspect/degraded thresholds) and the correction applied
+# to speculation budgets mid-run: a budget derived from an optimistic
+# prediction would otherwise never fire on the straggler it exists for.
+
+def stage_inflation(measured_s: Optional[float],
+                    predicted_s: Optional[float]) -> Optional[float]:
+    """Measured/predicted stage-time ratio; None when either side is
+    missing or non-positive (no evidence — same convention as ``drift``)."""
+    if not measured_s or not predicted_s \
+            or measured_s <= 0 or predicted_s <= 0:
+        return None
+    return measured_s / predicted_s
+
+
+def fold_inflation(ewma: Optional[float], ratio: float,
+                   alpha: float = 0.3) -> float:
+    """EWMA fold of one inflation observation (first sample seeds)."""
+    if ewma is None:
+        return ratio
+    return ewma + alpha * (ratio - ewma)
+
+
+def calibrated_budget(budget_s: Optional[float],
+                      inflation: Optional[float],
+                      lo: float = 0.5, hi: float = 4.0) -> Optional[float]:
+    """Speculation budget rescaled by the run's measured inflation,
+    clamped to [lo, hi]× the compile-time value: stages really are running
+    ``inflation``× their predictions, so the straggler threshold moves
+    with them — but never collapses to zero (hair-trigger backups) or
+    runs away (never fires)."""
+    if budget_s is None or inflation is None:
+        return budget_s
+    return budget_s * min(max(inflation, lo), hi)
+
+
 def workflow_time(phases: Iterable[PhaseEstimate], use_truffle: bool = True) -> float:
     """Eq. 3/5: end-to-end over a function chain."""
     f = truffle_time if use_truffle else baseline_time

@@ -35,6 +35,7 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
+from repro.core.errors import NodeCrashError
 from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
                                  seed_content, ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
@@ -63,6 +64,11 @@ class SDP:
         t = self.truffle
         cluster = t.cluster
         clock = cluster.clock
+        if not getattr(t.node, "alive", True):
+            # fail fast: a dead ingress node can neither seed nor relay —
+            # callers must re-route through a live node
+            raise NodeCrashError(t.node.name,
+                                 f"SDP ingress node {t.node.name} crashed")
         ref = request.content_ref
         inv_id = uuid.uuid4().hex
         buf_key = f"truffle/{request.fn}/{inv_id[:8]}"
@@ -112,10 +118,19 @@ class SDP:
         # Truffle DaemonSet instance — fetch lands next to the function, one
         # storage read, no ingress-node relay). Inline payloads hop
         # source -> target once (CSP-style).
+        # ``cancel`` lets a failed trigger abandon the placement wait early
+        # (no placement will ever publish); a failed data path poisons the
+        # target buffer key so the handler's input wait fails NOW
+        cancel = threading.Event()
+
         def data_path():
+            placed = None
             try:
                 rec.t_transfer_start = clock.now()
-                placed = t.watcher.resolve_placement(request.fn, inv_id)  # (4)
+                placed = t.watcher.resolve_placement_cancellable(
+                    request.fn, inv_id, cancel)                       # (4)
+                if placed is None:
+                    return          # trigger already failed — nothing to move
                 target = cluster.node(placed["node"])
                 if fetchable:
                     target.truffle.engine.fetch(ref, buffer_key=buf_key,
@@ -139,11 +154,23 @@ class SDP:
                 rec.t_transfer_end = clock.now()
             except BaseException as e:  # noqa: BLE001
                 errbox.append(e)
+                if placed is not None:
+                    try:
+                        cluster.node(placed["node"]).buffer.poison(buf_key)
+                    except Exception:   # noqa: BLE001 — target may be dead too
+                        pass
 
         th = threading.Thread(target=data_path, daemon=True,
                               name=f"sdp-{request.fn}-{inv_id[:6]}")
         th.start()
-        result = fut.result()       # (5)-(7): function reads from the buffer
+        try:
+            result = fut.result()   # (5)-(7): function reads from the buffer
+        except BaseException:
+            cancel.set()            # release the placement wait
+            th.join(timeout=2.0)
+            if errbox:              # data path saw the root cause
+                raise errbox[0]
+            raise
         join_or_stall(th, rec, self.join_timeout_s,
                       f"SDP data path for {request.fn} ({inv_id[:8]})")
         if errbox:

@@ -253,7 +253,12 @@ class Prefetcher:
         if target.buffer.find_digest(digest):
             self._bump("skipped")             # already resident
             return False
-        holders = [n for n in registry.nodes_for(digest) if n != target_name]
+        # drop_node clears the registry on death, but a racing crash can
+        # still leave a phantom holder in this snapshot — never relay from
+        # a dead node
+        holders = [n for n in registry.nodes_for(digest)
+                   if n != target_name
+                   and getattr(cluster.nodes.get(n), "alive", True)]
         if not holders:
             self._bump("skipped")             # nothing to relay from
             return False

@@ -43,6 +43,30 @@ class Watcher:
                                f"within {timeout}s")
         return ev
 
+    def resolve_placement_cancellable(self, function: str,
+                                      invocation: Optional[str] = None,
+                                      cancel=None, timeout: float = 120.0,
+                                      poll_s: float = 0.25) -> Optional[dict]:
+        """:meth:`resolve_placement`, but abandoned early (returns None)
+        once ``cancel`` (a ``threading.Event``) is set — the data-path
+        thread must not sit out the full placement timeout after the
+        trigger it was shipping for has already failed (e.g. the scheduler
+        raised on a crashed affinity node, so no placement will EVER be
+        published)."""
+        if cancel is None:
+            return self.resolve_placement(function, invocation, timeout)
+        waited = 0.0
+        while True:
+            try:
+                return self.resolve_placement(function, invocation,
+                                              timeout=poll_s)
+            except TimeoutError:
+                if cancel.is_set():
+                    return None
+                waited += poll_s
+                if waited >= timeout:
+                    raise
+
     def resolve_host(self, function: str, invocation: Optional[str] = None,
                      timeout: float = 120.0) -> str:
         """Node name only (the original Algorithm 2 surface)."""

@@ -11,12 +11,14 @@ single relay stream). ``locality_weight`` tunes how many load units a fully
 resident input is worth to the scheduler (0 = pure least-loaded)."""
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.buffer import Buffer
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 from repro.runtime.events import EventBus
+from repro.runtime.health import DEGRADED, DEAD, NodeHealthMonitor
 from repro.runtime.netsim import LinkTelemetry, NetworkFabric
 from repro.runtime.registry import DigestRegistry
 from repro.storage.base import StorageService, make_kvs, make_object_store
@@ -28,6 +30,8 @@ class Node:
     tier: str = "edge"            # edge | cloud
     buffer: Buffer = None
     truffle: object = None        # TruffleInstance, attached by Cluster
+    alive: bool = True            # False: crashed (kill_node/restart_node)
+    cpu_factor: float = 1.0       # >1: sick CPU, stretches ν/η/γ sleeps
 
     def __post_init__(self):
         if self.buffer is None:
@@ -67,6 +71,12 @@ class Cluster:
         # registry-driven prefetch: the scheduler kicks it when an edge's
         # DataPolicy.prefetch is set and placement lands off the data
         self.prefetcher = Prefetcher(self)
+        # node health scoring (the node-level twin of LinkTelemetry): fed
+        # from the same bus + the runner's per-stage inflation reports; the
+        # scheduler penalizes suspect/degraded nodes, the ReplanController
+        # watches its generation, and degradation triggers CAS evacuation
+        self.health = NodeHealthMonitor(self)
+        self.health.on_degraded = self._on_node_degraded
         for node in self.nodes.values():
             node.buffer.on_residency = self.digests.listener(node.name)
             # residency-aware eviction: under capacity pressure a buffer
@@ -109,6 +119,105 @@ class Cluster:
             return any(n != node_name
                        for n in self.digests.nodes_for(digest))
         return elsewhere
+
+    # ------------------------------------------------- node fault lifecycle
+    def kill_node(self, name: str) -> None:
+        """Crash ``name``: CAS wiped, links down, warm pool purged, health
+        forced DEAD. Everything a real node loss loses is lost — recovery
+        must come from surviving replicas (or upstream re-execution)."""
+        node = self.nodes[name]
+        if not node.alive:
+            return
+        node.alive = False
+        self.network.set_node_down(name, True)
+        self.platform.purge_node(name)
+        # wipe the buffer: residency withdrawals flow to the registry; the
+        # explicit drop_node is the safety net for entries whose residency
+        # callback never fired (e.g. incomplete streams)
+        node.buffer.clear(offline=True)
+        self.digests.drop_node(name)
+        self.health.mark_dead(name)
+        self.bus.publish("node.crashed", {"node": name,
+                                          "t": self.clock.now()})
+
+    def restart_node(self, name: str) -> None:
+        """Bring a crashed node back EMPTY (cold warm-pool, empty CAS) —
+        the crash-restart model: state died with the node."""
+        node = self.nodes[name]
+        node.alive = True
+        node.cpu_factor = 1.0
+        node.buffer.revive()
+        self.network.set_node_down(name, False)
+        self.health.mark_alive(name)
+        self.bus.publish("node.restarted", {"node": name,
+                                            "t": self.clock.now()})
+
+    def drain_node(self, name: str) -> list:
+        """Administrative drain: evacuate sole-replica CAS content
+        synchronously, then mark degraded (scheduler steers away,
+        ReplanController revises undispatched placements). Evacuating
+        first keeps the degraded-hook's async evacuation a no-op sweep —
+        everything sole is already replicated. Returns evacuated digests."""
+        moved = self.evacuate_node(name)
+        self.health.mark_degraded(name)
+        return moved
+
+    def evacuate_node(self, name: str, *, sole_only: bool = True) -> list:
+        """Copy this node's CAS content to a healthy peer before the node
+        is lost. ``sole_only`` (default) moves only LAST replicas — content
+        that still resolves elsewhere needs no rescue."""
+        from repro.core.transfer import ship_payload
+        from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
+        node = self.nodes[name]
+        moved = []
+        for digest, size in self.digests.holdings(name).items():
+            if sole_only and any(n != name
+                                 for n in self.digests.nodes_for(digest)):
+                continue
+            key = node.buffer.find_digest(digest)
+            if key is None:
+                continue
+            data = node.buffer.get(key)
+            if data is None:
+                continue
+            target = self._evacuation_target(name, len(data))
+            if target is None:
+                continue
+            try:
+                # through the relay machinery, not a raw ship: alias-first
+                # if the target already holds the content, and the relay
+                # lead makes the in-flight evacuation visible so a racing
+                # CSP/SDP pass of the same digest follows instead of
+                # double-shipping
+                ship_payload(self, node, target, f"cas/{digest}", data,
+                             stream=True, digest=digest,
+                             chunk_bytes=DEFAULT_CHUNK_BYTES)
+                moved.append(digest)
+            except Exception:
+                continue                    # node may die mid-evacuation
+        self.bus.publish("node.evacuated", {"node": name,
+                                            "digests": len(moved),
+                                            "t": self.clock.now()})
+        return moved
+
+    def _evacuation_target(self, avoid: str, size: int) -> Optional[Node]:
+        """Least-loaded live node that isn't degraded/dead (falls back to
+        any live node when the whole cluster is sick)."""
+        live = [n for n in self.nodes.values()
+                if n.alive and n.name != avoid]
+        good = [n for n in live
+                if self.health.state(n.name) not in (DEGRADED, DEAD)]
+        pool = good or live
+        if not pool:
+            return None
+        return min(pool, key=lambda n: self.scheduler.load_of(n.name))
+
+    def _on_node_degraded(self, name: str) -> None:
+        """Health-triggered evacuation runs off-thread: the monitor fires
+        this from inside a bus publish / stage report — evacuating inline
+        would ship bytes (and take buffer locks) under the caller."""
+        threading.Thread(target=self.evacuate_node, args=(name,),
+                         daemon=True, name=f"evac-{name}").start()
 
     def tier_of(self, node_name: str) -> str:
         return self.nodes[node_name].tier

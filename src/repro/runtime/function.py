@@ -17,6 +17,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
+from repro.core.errors import NodeCrashError
+
 
 @dataclass
 class ContentRef:
@@ -51,6 +53,8 @@ class FunctionSpec:
     affinity: Optional[str] = None
     extra_cold_start_s: float = 0.0  # Fig. 11 sweep: added cold-start delay
     streaming: bool = False       # handler consumes input via get_input_stream
+    retry: Optional[object] = None  # RetryPolicy: crash-restart recovery
+    #                                 (edge DataPolicy.retry overrides)
 
 
 @dataclass
@@ -87,6 +91,10 @@ class LifecycleRecord:
     #                               compile; N = dispatched after N replans)
     speculation_budget_s: Optional[float] = None  # straggler budget (sim s)
     #                               this dispatch armed, None = no speculation
+    calibrated_budget_s: Optional[float] = None  # budget actually armed after
+    #                               mid-run inflation calibration (sim s);
+    #                               None = no calibration applied
+    attempt: int = 1              # which retry attempt produced this record
 
     # --- derived phases (seconds) ---
     @property
@@ -191,21 +199,36 @@ class FunctionInstance:
         self.state = self.COLD
         self._lock = threading.Lock()
 
+    def _require_alive(self) -> None:
+        if not getattr(self.node, "alive", True):
+            raise NodeCrashError(self.node.name,
+                                 f"{self.spec.name}: node "
+                                 f"{self.node.name} crashed")
+
+    def _cpu(self) -> float:
+        """Sick-CPU inflation: >1 stretches every modeled sleep (ν, η, γ) —
+        the stage-time inflation the health monitor EWMAs."""
+        return max(getattr(self.node, "cpu_factor", 1.0), 0.0)
+
     def provision(self, record: LifecycleRecord) -> None:
         """ν + η (+ any Fig.11 extra delay). Real startup_fn runs unscaled."""
         clock = self.cluster.clock
+        self._require_alive()
         self.state = self.PROVISIONING
-        clock.sleep(self.spec.provision_s + self.spec.extra_cold_start_s)
+        clock.sleep((self.spec.provision_s + self.spec.extra_cold_start_s)
+                    * self._cpu())
         record.t_prov_end = clock.now()
         if self.spec.startup_fn is not None:
             self.spec.startup_fn()          # real work: e.g. jit compile
-        clock.sleep(self.spec.startup_s)
+        clock.sleep(self.spec.startup_s * self._cpu())
         record.t_startup_end = clock.now()
+        self._require_alive()               # node died during cold start
         self.state = self.WARM
 
     def invoke(self, request: Request, record: LifecycleRecord) -> bytes:
         clock = self.cluster.clock
         with self._lock:
+            self._require_alive()
             self.state = self.EXECUTING
             inv = Invocation(request, self.node, self.cluster, record)
             if self.spec.streaming:
@@ -216,8 +239,9 @@ class FunctionInstance:
             else:
                 data = inv.get_input()
                 record.t_exec_start = clock.now()
-                clock.sleep(self.spec.exec_s)
+                clock.sleep(self.spec.exec_s * self._cpu())
                 out = self.spec.handler(data, inv)
             record.t_exec_end = clock.now()
+            self._require_alive()           # node died mid-execution
             self.state = self.WARM
             return out

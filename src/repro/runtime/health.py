@@ -1,0 +1,224 @@
+"""Node health scoring: the node-level twin of ``LinkTelemetry``.
+
+The edge-cloud continuum loses *nodes* more often than links — they slow
+down (thermal throttling, noisy neighbors), their disks stall, they crash
+and come back empty. :class:`NodeHealthMonitor` folds the signals the
+system already produces into a per-node health state machine:
+
+  * stage-time inflation — EWMA of measured/predicted stage time
+    (``core.model.stage_inflation`` / ``fold_inflation``), reported by the
+    runner after every completed stage: a node consistently running 2.5×
+    its Eq. 4 predictions is sick even though nothing ever *failed*;
+  * transfer stalls and infrastructure failures (crashes, dead links,
+    offline buffers, per-attempt timeouts), reported by the retry layer;
+  * heartbeats — last-seen timestamps from the same event bus feeding
+    ``LinkTelemetry`` (``scheduling.placed``, ``workflow.stage_done``).
+
+States escalate healthy → suspect → degraded → dead and publish
+``node.health`` bus events on every transition. Consumers:
+
+  * the :class:`~repro.runtime.scheduler.Scheduler` adds
+    :meth:`penalty` to its placement score — a suspect node needs a real
+    locality/load advantage to win a placement, a degraded one is avoided
+    outright (same magnitude as the speculative-backup AVOID penalty);
+  * the :class:`~repro.runtime.workflow.ReplanController` watches
+    :attr:`generation` (bumped on every state change) and forces a
+    recompile of the remaining subgraph when health moved — placement
+    revision, not just transport revision;
+  * the cluster's ``on_degraded`` hook triggers CAS evacuation of
+    sole-replica content before the node goes fully dark.
+
+A streak of clean stages heals suspect back to healthy (counters reset),
+mirroring how the EWMA itself decays; ``dead`` and forced ``degraded``
+(drain) are sticky until :meth:`mark_alive`.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional
+
+from repro.core.model import fold_inflation, stage_inflation
+
+HEALTHY = "healthy"
+SUSPECT = "suspect"
+DEGRADED = "degraded"
+DEAD = "dead"
+
+# a suspect node must be beaten by this much locality/load advantage;
+# degraded matches the scheduler's AVOID_PENALTY scale (placed only when
+# literally nothing else is alive)
+SUSPECT_PENALTY = 2.0
+DEGRADED_PENALTY = 1e6
+
+
+class _NodeStats:
+    __slots__ = ("inflation", "samples", "stalls", "failures",
+                 "clean_streak", "forced", "state", "last_seen")
+
+    def __init__(self):
+        self.inflation: Optional[float] = None   # EWMA measured/predicted
+        self.samples = 0
+        self.stalls = 0
+        self.failures = 0
+        self.clean_streak = 0
+        self.forced: Optional[str] = None        # sticky dead/degraded
+        self.state = HEALTHY
+        self.last_seen: Optional[float] = None
+
+
+class NodeHealthMonitor:
+    def __init__(self, cluster, *, alpha: float = 0.3,
+                 suspect_inflation: float = 1.5,
+                 degraded_inflation: float = 2.5,
+                 min_samples: int = 2,
+                 suspect_failures: int = 1,
+                 degraded_failures: int = 3,
+                 clean_streak: int = 3):
+        self.cluster = cluster
+        self.alpha = alpha
+        self.suspect_inflation = suspect_inflation
+        self.degraded_inflation = degraded_inflation
+        self.min_samples = min_samples
+        self.suspect_failures = suspect_failures
+        self.degraded_failures = degraded_failures
+        self.clean_streak = clean_streak
+        self.generation = 0                       # bumped on state change
+        self.on_degraded: Optional[Callable[[str], None]] = None
+        self._lock = threading.Lock()
+        self._nodes: Dict[str, _NodeStats] = {}
+        bus = getattr(cluster, "bus", None)
+        if bus is not None:
+            bus.subscribe("scheduling.placed", self._heartbeat)
+            bus.subscribe("workflow.stage_done", self._heartbeat)
+
+    # ------------------------------------------------------------- signals
+    def _heartbeat(self, event: dict) -> None:
+        node = event.get("node")
+        if node is None:
+            return
+        with self._lock:
+            self._stats(node).last_seen = event.get("t")
+
+    def report_stage(self, node: Optional[str], measured_s: float,
+                     predicted_s: Optional[float]) -> None:
+        """Fold one completed stage's measured/predicted inflation."""
+        if node is None:
+            return
+        ratio = stage_inflation(measured_s, predicted_s)
+        with self._lock:
+            st = self._stats(node)
+            if ratio is not None:
+                st.inflation = fold_inflation(st.inflation, ratio,
+                                              self.alpha)
+                st.samples += 1
+            if ratio is None or ratio < self.suspect_inflation:
+                st.clean_streak += 1
+                if st.clean_streak >= self.clean_streak:
+                    st.stalls = st.failures = 0
+            else:
+                st.clean_streak = 0
+        self._reclassify(node)
+
+    def report_stall(self, node: Optional[str]) -> None:
+        if node is None:
+            return
+        with self._lock:
+            st = self._stats(node)
+            st.stalls += 1
+            st.clean_streak = 0
+        self._reclassify(node)
+
+    def report_failure(self, node: Optional[str]) -> None:
+        """An infrastructure failure (crash, dead link, offline buffer,
+        attempt timeout) was attributed to this node."""
+        if node is None:
+            return
+        with self._lock:
+            st = self._stats(node)
+            st.failures += 1
+            st.clean_streak = 0
+        self._reclassify(node)
+
+    # ------------------------------------------------------- forced states
+    def mark_dead(self, node: str) -> None:
+        with self._lock:
+            self._stats(node).forced = DEAD
+        self._reclassify(node)
+
+    def mark_degraded(self, node: str) -> None:
+        """Operator/drain override: stop placing here, evacuate."""
+        with self._lock:
+            self._stats(node).forced = DEGRADED
+        self._reclassify(node)
+
+    def mark_alive(self, node: str) -> None:
+        """Restart: the node returns with fresh stats (its sandboxes and
+        CAS are gone, so is its history)."""
+        with self._lock:
+            self._nodes[node] = _NodeStats()
+        self._reclassify(node)
+
+    # ------------------------------------------------------------ consumers
+    def state(self, node: str) -> str:
+        with self._lock:
+            st = self._nodes.get(node)
+            return st.state if st is not None else HEALTHY
+
+    def penalty(self, node: str) -> float:
+        s = self.state(node)
+        if s in (DEGRADED, DEAD):
+            return DEGRADED_PENALTY
+        if s == SUSPECT:
+            return SUSPECT_PENALTY
+        return 0.0
+
+    def snapshot(self) -> Dict[str, dict]:
+        with self._lock:
+            return {name: {"state": st.state, "inflation": st.inflation,
+                           "samples": st.samples, "stalls": st.stalls,
+                           "failures": st.failures,
+                           "last_seen": st.last_seen}
+                    for name, st in self._nodes.items()}
+
+    # ------------------------------------------------------------ internals
+    def _stats(self, node: str) -> _NodeStats:
+        st = self._nodes.get(node)
+        if st is None:
+            st = self._nodes[node] = _NodeStats()
+        return st
+
+    def _classify(self, st: _NodeStats) -> str:
+        if st.forced is not None:
+            return st.forced
+        inflated = st.samples >= self.min_samples and st.inflation is not None
+        if st.failures >= self.degraded_failures \
+                or (inflated and st.inflation >= self.degraded_inflation):
+            return DEGRADED
+        if st.failures >= self.suspect_failures or st.stalls >= 1 \
+                or (inflated and st.inflation >= self.suspect_inflation):
+            return SUSPECT
+        return HEALTHY
+
+    def _reclassify(self, node: str) -> None:
+        with self._lock:
+            st = self._stats(node)
+            new = self._classify(st)
+            prev, st.state = st.state, new
+            if new == prev:
+                return
+            self.generation += 1
+            snap = {"node": node, "state": new, "prev": prev,
+                    "inflation": st.inflation, "failures": st.failures,
+                    "stalls": st.stalls}
+        bus = getattr(self.cluster, "bus", None)
+        clock = getattr(self.cluster, "clock", None)
+        if clock is not None:
+            snap["t"] = clock.now()
+        if bus is not None:
+            bus.publish("node.health", snap)
+        if new == DEGRADED and prev != DEAD and self.on_degraded is not None:
+            self.on_degraded(node)
+
+
+__all__ = ["NodeHealthMonitor", "HEALTHY", "SUSPECT", "DEGRADED", "DEAD",
+           "SUSPECT_PENALTY", "DEGRADED_PENALTY"]

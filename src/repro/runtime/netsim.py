@@ -43,6 +43,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, Optional, Tuple
 
+from repro.core.errors import LinkDownError
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 
 GBPS = 1e9 / 8  # bytes/sec per Gbit/s
@@ -218,6 +219,7 @@ class Channel:
     link_key: Optional[Tuple[str, str]] = None     # telemetry: node pair
     tier_key: Optional[Tuple[str, str]] = None     # telemetry: tier pair
     telemetry: Optional[LinkTelemetry] = None
+    down: bool = False                # endpoint node dark: transfers fail fast
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _busy_until: float = field(default=0.0, repr=False)  # wall, last grant end
 
@@ -251,6 +253,16 @@ class Channel:
                 self.bandwidth = bandwidth
             if latency is not None:
                 self.latency = latency
+
+    def set_down(self, down: bool = True) -> None:
+        """Mark/unmark an endpoint node as dark (crash semantics)."""
+        with self._lock:
+            self.down = down
+
+    def _check_up(self) -> None:
+        if self.down:
+            raise LinkDownError(f"link {self.name} is down "
+                                f"(endpoint node crashed)")
 
     def _observe(self, nbytes: int, seconds: float,
                  rtt: Optional[float] = None) -> None:
@@ -296,6 +308,7 @@ class Channel:
         this transfer applies to the next one, and telemetry never sees
         the latency of one configuration paired with the bandwidth of
         another."""
+        self._check_up()
         bw, lat = self._link_params()
         wire = self.wire_bytes(len(payload), wire_ratio)
         self.clock.sleep(lat)
@@ -325,6 +338,7 @@ class Channel:
         """Grant bandwidth for one chunk only (fair-share building block).
         Returns the wall deadline — pass it back as ``after`` on the next
         chunk to chain a stream's grants."""
+        self._check_up()
         if pay_latency:
             _, lat = self._link_params()
             self.clock.sleep(lat)
@@ -348,6 +362,7 @@ class Channel:
         wire idles between grants. Pacing uses absolute wall deadlines
         (like the grants themselves) so OS sleep overshoot does not
         accumulate across chunks."""
+        self._check_up()
         _, lat = self._link_params()
         self.clock.sleep(lat)
         view = memoryview(payload)
@@ -355,6 +370,9 @@ class Channel:
         pace_wall = time.monotonic() if pace_bps else None
         first = True
         for off in range(0, len(payload), chunk_bytes):
+            # a node crash mid-stream fails the remaining chunks fast
+            # instead of pricing bytes against a dead endpoint
+            self._check_up()
             chunk = view[off:off + chunk_bytes]
             wire = self.wire_bytes(len(chunk), wire_ratio)
             # per-chunk grant: unlike transfer(), a mid-stream reconfigure
@@ -392,6 +410,7 @@ class NetworkFabric:
     telemetry: Optional[LinkTelemetry] = None
     chunk_overhead_s: float = FABRIC_CHUNK_OVERHEAD_S
     _channels: dict = field(default_factory=dict)
+    _down_nodes: set = field(default_factory=set)
 
     def channel(self, src_node, dst_node) -> Channel:
         key = (src_node.name, dst_node.name)
@@ -404,5 +423,18 @@ class NetworkFabric:
             self._channels[key] = Channel(
                 f"{key}", bw, lat, self.clock,
                 chunk_overhead_s=self.chunk_overhead_s,
-                link_key=key, tier_key=tier_key, telemetry=self.telemetry)
+                link_key=key, tier_key=tier_key, telemetry=self.telemetry,
+                down=bool(self._down_nodes & set(key)))
         return self._channels[key]
+
+    def set_node_down(self, node_name: str, down: bool = True) -> None:
+        """Flip every channel touching ``node_name`` (existing AND future —
+        channels are memoized lazily) to/from the dark state. In-flight
+        streams through those channels fail at their next chunk grant."""
+        if down:
+            self._down_nodes.add(node_name)
+        else:
+            self._down_nodes.discard(node_name)
+        for key, ch in list(self._channels.items()):
+            if node_name in key:
+                ch.set_down(down)

@@ -68,7 +68,7 @@ from repro.core.errors import PlanError, WorkflowCycleError  # noqa: F401
 from repro.core.model import PhaseEstimate, edge_time
 from repro.runtime.netsim import (DEFAULT_CHUNK_BYTES,
                                   FABRIC_CHUNK_OVERHEAD_S)
-from repro.runtime.policy import DataPolicy
+from repro.runtime.policy import DataPolicy, RetryPolicy
 
 #: chunk-size grid an auto edge is evaluated over (the uniform-extreme
 #: candidates of the property tests — whole-blob and stream at the
@@ -137,6 +137,10 @@ class StagePlan:
     #: speculation is off or the stage has no prediction — speculation then
     #: needs a caller-provided PhaseEstimate, as before.
     speculation_budget_s: Optional[float] = None
+    #: crash-restart recovery policy for this stage (merged from in-edge
+    #: DataPolicy.retry overrides, falling back to the spec's); None = fail
+    #: fast on the first error, exactly the pre-retry behavior
+    retry: Optional[object] = None
 
     def edge_policy(self, src: Optional[str]) -> DataPolicy:
         for e in self.in_edges:
@@ -287,7 +291,11 @@ class Planner:
                 # runner converts to wall seconds at dispatch)
                 speculation_budget_s=(transport.speculation * predicted
                                       if transport.speculation and
-                                      predicted is not None else None))
+                                      predicted is not None else None),
+                # edge-level retry overrides the spec's (most specific wins,
+                # like every other policy knob)
+                retry=(transport.retry if transport.retry is not None
+                       else getattr(st.spec, "retry", None)))
         # second pass: a stage seeds its output iff some consumer edge dedups
         for name in order:
             consumers = [e for sp in stages.values() for e in sp.in_edges
@@ -506,6 +514,18 @@ class Planner:
         # declared grant wins (fair-share safety; a coarse edge never
         # degrades a fine one's pipelining)
         chunks = [p.chunk_bytes for p in pols if p.chunk_bytes is not None]
+        # retry: merge toward the most resilient — most attempts, longest
+        # backoff, tightest per-attempt timeout (the edge that needs a
+        # deadline keeps it)
+        retries = [p.retry for p in pols if p.retry is not None]
+        retry = None
+        if retries:
+            timeouts = [r.timeout_s for r in retries
+                        if r.timeout_s is not None]
+            retry = RetryPolicy(
+                max_attempts=max(r.max_attempts for r in retries),
+                backoff_s=max(r.backoff_s for r in retries),
+                timeout_s=min(timeouts) if timeouts else None)
         merged = DataPolicy(
             strategy=strategies[0],
             stream=any(p.stream for p in pols),
@@ -513,7 +533,8 @@ class Planner:
             compression=codecs[0] if codecs else "none",
             locality_weight=weight,
             speculation=max(p.speculation for p in pols),
-            chunk_bytes=min(chunks) if chunks else None)
+            chunk_bytes=min(chunks) if chunks else None,
+            retry=retry)
         if any(p.prefetch for p in pols):
             # after the merge: prefetch requires dedup (DataPolicy enforces
             # it per edge, so the OR-ed transport has dedup=True here)

@@ -131,9 +131,30 @@ class Platform:
                 self.cluster.scheduler.release(scheduled_node)
 
     def _checkout_warm(self, fn: str) -> Optional[FunctionInstance]:
+        health = getattr(self.cluster, "health", None)
         with self._lock:
             pool = self._warm.get(fn, [])
             for i, inst in enumerate(pool):
-                if inst.state == FunctionInstance.WARM:
-                    return pool.pop(i)
+                if inst.state != FunctionInstance.WARM:
+                    continue
+                # a warm container on a crashed node is gone; one on a
+                # degraded node must not short-circuit the scheduler's
+                # steering — leave it to the drain
+                if not getattr(inst.node, "alive", True):
+                    continue
+                if health is not None and health.state(inst.node.name) in (
+                        "degraded", "dead"):
+                    continue
+                return pool.pop(i)
         return None
+
+    def purge_node(self, name: str) -> int:
+        """Drop every warm instance on ``name`` (node crash: the sandboxes
+        died with it). Returns how many were purged."""
+        purged = 0
+        with self._lock:
+            for fn, pool in self._warm.items():
+                keep = [i for i in pool if i.node.name != name]
+                purged += len(pool) - len(keep)
+                self._warm[fn] = keep
+        return purged

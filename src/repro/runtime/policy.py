@@ -38,6 +38,44 @@ COMPRESSIONS = ("none", "lz4-like")
 
 
 @dataclass(frozen=True)
+class RetryPolicy:
+    """Crash-restart recovery knobs for a stage (or an edge feeding it).
+
+    Attributes
+    ----------
+    max_attempts:
+        Total tries including the first (1 = today's fail-fast behavior).
+        Every retry is steered to a different, health-scored node than the
+        failed attempt, and its inputs are re-shipped from surviving CAS
+        replicas (upstream stages only re-execute when the last replica
+        died with the node).
+    backoff_s:
+        Simulated seconds slept before attempt k+1, scaled linearly by the
+        attempt number (k * backoff_s) — cheap damping so a flapping node
+        doesn't absorb the whole retry budget instantly.
+    timeout_s:
+        Per-attempt bound in simulated seconds (None = unbounded). An
+        attempt exceeding it is abandoned and counted as a failure — how
+        a stage wedged on a sick-but-not-dead node gets unstuck.
+    """
+
+    max_attempts: int = 2
+    backoff_s: float = 0.0
+    timeout_s: Optional[float] = None
+
+    def __post_init__(self):
+        if not isinstance(self.max_attempts, int) or self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be an int >= 1, "
+                             f"got {self.max_attempts!r}")
+        if self.backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0 sim-seconds, "
+                             f"got {self.backoff_s!r}")
+        if self.timeout_s is not None and self.timeout_s <= 0:
+            raise ValueError(f"timeout_s must be positive sim-seconds or "
+                             f"None, got {self.timeout_s!r}")
+
+
+@dataclass(frozen=True)
 class DataPolicy:
     """How one hop of the workflow passes its data.
 
@@ -86,6 +124,11 @@ class DataPolicy:
         and overlap more per-chunk compute; big chunks pay less per-chunk
         grant overhead. The adaptive planner picks this per edge from its
         chunk grid; hand-written policies may pin it too.
+    retry:
+        Crash-restart recovery for the stage this edge feeds (see
+        :class:`RetryPolicy`). None = single attempt. When several
+        in-edges of one stage disagree, the planner merges toward the
+        most resilient (max attempts, max backoff, tightest timeout).
     """
 
     strategy: str = "direct"
@@ -96,6 +139,7 @@ class DataPolicy:
     prefetch: bool = False
     speculation: float = 0.0
     chunk_bytes: Optional[int] = None
+    retry: Optional[RetryPolicy] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -123,6 +167,10 @@ class DataPolicy:
         if self.chunk_bytes is not None and self.chunk_bytes <= 0:
             raise ValueError(f"chunk_bytes must be positive or None, "
                              f"got {self.chunk_bytes!r}")
+        if self.retry is not None and not isinstance(self.retry,
+                                                     RetryPolicy):
+            raise ValueError(f"retry must be a RetryPolicy or None, "
+                             f"got {self.retry!r}")
 
     def but(self, **changes) -> "DataPolicy":
         """A copy with ``changes`` applied — derive an edge policy from a
@@ -264,5 +312,5 @@ class WorkflowBuilder:
             self.build())
 
 
-__all__ = ["DataPolicy", "ReplanPolicy", "WorkflowBuilder",
+__all__ = ["DataPolicy", "ReplanPolicy", "RetryPolicy", "WorkflowBuilder",
            "WorkflowCycleError", "STRATEGIES", "COMPRESSIONS"]

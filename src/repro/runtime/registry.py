@@ -74,7 +74,38 @@ class DigestRegistry:
             self._bus.publish(EVENT_DIGEST_REMOVED,
                               {"digest": digest, "node": node, "bytes": size})
 
+    def drop_node(self, node: str) -> Dict[str, int]:
+        """Forget EVERY residency entry for ``node`` (death or removal):
+        locality scoring, the Prefetcher, and retry re-ship must stop
+        steering at phantom replicas the moment the node is gone. Fires
+        ``registry.digest_removed`` per dropped digest — the same event a
+        normal eviction produces — so bus observers stay consistent.
+        Returns what was dropped (``{digest: bytes}``)."""
+        dropped: Dict[str, int] = {}
+        with self._lock:
+            for digest in list(self._where):
+                nodes = self._where[digest]
+                if node in nodes:
+                    dropped[digest] = nodes.pop(node)
+                    if not nodes:
+                        del self._where[digest]
+                    self.stats["withdrawals"] += 1
+        if self._bus is not None:
+            for digest, size in dropped.items():
+                self._bus.publish(EVENT_DIGEST_REMOVED,
+                                  {"digest": digest, "node": node,
+                                   "bytes": size})
+        return dropped
+
     # ------------------------------------------------------------ queries
+    def holdings(self, node: str) -> Dict[str, int]:
+        """``{digest: resident_bytes}`` currently attributed to ``node``
+        (copy) — what evacuation walks to find sole replicas."""
+        with self._lock:
+            return {digest: nodes[node]
+                    for digest, nodes in self._where.items()
+                    if node in nodes}
+
     def nodes_for(self, digest: Optional[str]) -> Dict[str, int]:
         """``{node_name: resident_bytes}`` for a digest (copy; may be empty)."""
         if digest is None:

@@ -207,14 +207,23 @@ class Scheduler:
     def _pick(self, spec: FunctionSpec,
               hint: Optional[PlacementHint] = None,
               holders: Optional[Dict[str, Dict[str, int]]] = None):
+        from repro.core.errors import NodeCrashError
         nodes = self.cluster.node_list
+        live = [n for n in nodes if getattr(n, "alive", True)]
+        if not live:
+            raise NodeCrashError(None, "no live node in the cluster")
         if spec.affinity:
             for n in nodes:
                 if n.name == spec.affinity:
+                    if not getattr(n, "alive", True):
+                        raise NodeCrashError(
+                            n.name, f"{spec.name}: affinity node "
+                                    f"{n.name} crashed")
                     return n
             raise KeyError(f"affinity node {spec.affinity!r} not in cluster")
         if holders is None:
             holders = self._holders(hint)
+        health = getattr(self.cluster, "health", None)
         with self._lock:
             def score(n) -> float:
                 load = float(self._load.get(n.name, 0))
@@ -225,10 +234,15 @@ class Scheduler:
                                                             holders)
                     if hint.avoid == n.name:
                         load += self.AVOID_PENALTY
+                if health is not None:
+                    # suspect nodes compete at a handicap; degraded ones
+                    # effectively never win (finite, so a fully sick
+                    # cluster still places rather than wedging)
+                    load += health.penalty(n.name)
                 return load
             # min() is stable: ties keep the node_list order, so behavior
             # without hints is exactly the old least-loaded placement
-            return min(nodes, key=score)
+            return min(live, key=score)
 
     def _kick_prefetch(self, hint: PlacementHint, node_name: str,
                        holders: Dict[str, Dict[str, int]]) -> bool:

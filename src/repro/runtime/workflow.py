@@ -50,14 +50,18 @@ from __future__ import annotations
 import threading
 import time
 import uuid
-from concurrent.futures import Future, ThreadPoolExecutor, FIRST_COMPLETED, wait
+from concurrent.futures import (Future, ThreadPoolExecutor, FIRST_COMPLETED,
+                                TimeoutError as FuturesTimeout, wait)
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.errors import PlanError, WorkflowCycleError
-from repro.core.model import (PhaseEstimate, baseline_time, drift,
-                              should_replan, truffle_time)
+from repro.core.errors import (BufferOfflineError, LinkDownError,
+                               NodeCrashError, PlanError, StageExecutionError,
+                               TransferStallError, WorkflowCycleError)
+from repro.core.model import (PhaseEstimate, baseline_time, calibrated_budget,
+                              drift, fold_inflation, should_replan,
+                              stage_inflation, truffle_time)
 from repro.core.transfer import publish_content
 from repro.runtime.function import ContentRef, FunctionSpec, LifecycleRecord, Request
 from repro.runtime.planner import ExecutionPlan, Planner, StagePlan
@@ -120,6 +124,7 @@ class StageResult:
     put_s: float = 0.0            # storage write time (kvs/s3 passing)
     speculated: bool = False
     digest: Optional[str] = None  # output content address (seed_output plans)
+    attempts: int = 1             # dispatch attempts this result took
 
 
 @dataclass
@@ -135,6 +140,12 @@ class WorkflowTrace:
     replans: List[dict] = field(default_factory=list)
     #: generation of the plan in force when the run finished
     plan_generation: int = 0
+    #: crash-restart recovery tally: stage retry attempts beyond the first,
+    #: and upstream stages re-executed because their output's LAST replica
+    #: died with a node (retries that re-shipped from a surviving replica
+    #: count only in ``retries``)
+    retries: int = 0
+    upstream_reruns: int = 0
 
     @property
     def total(self) -> float:
@@ -167,23 +178,39 @@ class ReplanController:
     sequences."""
 
     def __init__(self, planner, policy: ReplanPolicy, wf,
-                 clock=None, bus=None):
+                 clock=None, bus=None, health=None):
         self.planner = planner
         self.policy = policy
         self.wf = wf
         self.clock = clock
         self.bus = bus
+        self.health = health                # NodeHealthMonitor (optional)
         self.count = 0                      # replans performed
         self.events: List[dict] = []        # trail, mirrored on the bus
         self._last: Optional[float] = None  # wall time of the last replan
+        self._health_gen = (health.generation if health is not None else 0)
 
     def consider(self, plan: ExecutionPlan, dispatched,
                  now: Optional[float] = None) -> Optional[ExecutionPlan]:
         """Return a spliced replacement plan, or None to keep ``plan``.
         ``dispatched`` is the set of stages already handed to a thread —
         those keep their StagePlan verbatim. ``now`` defaults to the
-        clock's wall reading (tests may script it)."""
+        clock's wall reading (tests may script it).
+
+        A node-health state flip since the last wave (monitor generation
+        changed: a node died, degraded, or recovered) FORCES the recompile
+        for the undispatched subgraph — drift gating, the min-interval
+        rate limit, and even a missing prediction signal are bypassed; the
+        cluster's topology changed and the remaining stages' predictions
+        and speculation budgets must reflect it. ``max_replans`` stays a
+        hard cap either way."""
         pol = self.policy
+        forced = False
+        if self.health is not None:
+            gen = self.health.generation
+            if gen != self._health_gen:
+                self._health_gen = gen      # consume the flip either way
+                forced = True
         if self.count >= pol.max_replans:
             return None
         remaining = [n for n in plan.order if n not in dispatched]
@@ -192,17 +219,17 @@ class ReplanController:
         if now is None:
             now = (self.clock.now() if self.clock is not None
                    else time.monotonic())
-        if self._last is not None and pol.min_interval > 0:
+        if not forced and self._last is not None and pol.min_interval > 0:
             elapsed = now - self._last
             if self.clock is not None:
                 elapsed = self.clock.elapsed_sim(elapsed)
             if elapsed < pol.min_interval:
                 return None
         pred = self.planner.predict_remaining(self.wf, plan, remaining)
-        if pred is None:
+        if pred is None and not forced:
             return None                     # no comparable edge: no signal
-        fresh, frozen = pred
-        if not should_replan(fresh, frozen, pol.drift_ratio):
+        fresh, frozen = pred if pred is not None else (None, None)
+        if not forced and not should_replan(fresh, frozen, pol.drift_ratio):
             return None
         new = self.planner.recompile_remaining(self.wf, plan, dispatched)
         self.count += 1
@@ -210,7 +237,7 @@ class ReplanController:
         event = {
             "workflow": plan.workflow,
             "generation": new.generation,
-            "drift": drift(fresh, frozen),
+            "drift": (drift(fresh, frozen) if pred is not None else None),
             "fresh_s": fresh,
             "frozen_s": frozen,
             "remaining": list(remaining),
@@ -219,12 +246,31 @@ class ReplanController:
             "flips": [n for n in remaining
                       if [e.policy for e in new.stages[n].in_edges]
                       != [e.policy for e in plan.stages[n].in_edges]],
+            "reason": "node-health" if forced else "drift",
             "t": now,
         }
         self.events.append(event)
         if self.bus is not None:
             self.bus.publish("plan.replanned", event)
         return new
+
+
+class _RunState:
+    """Mutable per-run context the recovery machinery threads through:
+    completed results (the lineage a retry re-derives its input from),
+    the plan box, the recovery tallies, and the run-wide stage-time
+    inflation EWMA that calibrates speculation budgets mid-flight."""
+
+    def __init__(self, wf, input_data: bytes, source_node: str,
+                 planbox: dict, lock: threading.Lock):
+        self.wf = wf
+        self.input_data = input_data
+        self.source_node = source_node
+        self.planbox = planbox
+        self.lock = lock
+        self.results: Dict[str, StageResult] = {}
+        self.counters = {"retries": 0, "upstream_reruns": 0}
+        self.inflation: List[Optional[float]] = [None]   # EWMA box
 
 
 class WorkflowRunner:
@@ -315,9 +361,10 @@ class WorkflowRunner:
             controller = ReplanController(self._adaptive_planner(),
                                           self.replan, wf,
                                           clock=cluster.clock,
-                                          bus=cluster.bus)
+                                          bus=cluster.bus,
+                                          health=getattr(cluster, "health",
+                                                         None))
 
-        results: Dict[str, StageResult] = {}
         lock = threading.Lock()
         done_cv = threading.Condition(lock)
         errbox: List[BaseException] = []
@@ -325,18 +372,9 @@ class WorkflowRunner:
         # exactly once, at ITS dispatch, so in-flight stages keep the plan
         # they started under and later stages see the latest generation
         planbox = {"plan": plan}
+        rs = _RunState(wf, input_data, source_node, planbox, lock)
+        results = rs.results
         wave = [0]                          # completed-stage counter
-
-        def stage_input(name: str, sp: StagePlan) -> Tuple[bytes, str, tuple]:
-            if not sp.deps:
-                return input_data, source_node, ()
-            outs = [results[d].output for d in sp.deps]
-            src = results[sp.deps[-1]].record.node or source_node
-            hints = tuple((results[d].digest, len(results[d].output))
-                          for d in sp.hint_deps
-                          if results[d].digest is not None)
-            # single dep: hand the output through without a join copy
-            return (outs[0] if len(outs) == 1 else b"".join(outs)), src, hints
 
         def run_stage(name: str, current: ExecutionPlan):
             # ``current`` is the plan in force when the DISPATCHER started
@@ -345,11 +383,12 @@ class WorkflowRunner:
             # never stamp a generation the stage was not dispatched under
             try:
                 sp = current.stages[name]
-                data, src, hints = stage_input(name, sp)
+                data, src, hints = self._stage_input(sp, rs)
                 sr = self._dispatch(name, wf.stages[name].spec,
-                                    sp, data, src, hints)
+                                    sp, data, src, hints, rs)
                 sr.record.replan_count = current.generation
                 self._seed_output(sp, sr)
+                self._report_stage(sr, rs)
                 with lock:
                     wave[0] += 1
                     k = wave[0]
@@ -365,6 +404,8 @@ class WorkflowRunner:
                     results[name] = sr
                     done_cv.notify_all()
             except BaseException as e:  # noqa: BLE001
+                e = self._wrap_failure(name, wf.stages[name].spec, e,
+                                       wf_name=wf.name)
                 with done_cv:
                     errbox.append(e)
                     done_cv.notify_all()
@@ -399,6 +440,8 @@ class WorkflowRunner:
         if controller is not None:
             trace.replans = list(controller.events)
         trace.plan_generation = planbox["plan"].generation
+        trace.retries = rs.counters["retries"]
+        trace.upstream_reruns = rs.counters["upstream_reruns"]
         return trace
 
     def _seed_output(self, sp: StagePlan, sr: StageResult) -> None:
@@ -413,13 +456,209 @@ class WorkflowRunner:
         if node is not None:
             publish_content(node, sr.output, sr.digest)
 
+    # ------------------------------------------------- input (re)derivation
+    def _stage_input(self, sp: StagePlan,
+                     rs: _RunState) -> Tuple[bytes, str, tuple]:
+        results = rs.results
+        if not sp.deps:
+            return rs.input_data, rs.source_node, ()
+        outs = [results[d].output for d in sp.deps]
+        src = results[sp.deps[-1]].record.node or rs.source_node
+        hints = tuple((results[d].digest, len(results[d].output))
+                      for d in sp.hint_deps
+                      if results[d].digest is not None)
+        # single dep: hand the output through without a join copy
+        return (outs[0] if len(outs) == 1 else b"".join(outs)), src, hints
+
+    def _recover_input(self, name: str, sp: StagePlan,
+                       rs: _RunState) -> Tuple[bytes, str, tuple]:
+        """Re-derive a stage's input for a retry after a node fault. Per
+        dep: a dead producer whose output still resolves on a LIVE replica
+        (DigestRegistry) costs nothing — the re-ship aliases or relays from
+        the replica; only a dep whose last replica died with its node is
+        re-executed (recursively, the lineage contract). The re-ship source
+        is then steered to a live node holding the most input bytes."""
+        cluster = self.cluster
+        for d in sp.deps:
+            sr = rs.results.get(d)
+            if sr is None:
+                continue
+            prod = cluster.nodes.get(sr.record.node)
+            if prod is not None and getattr(prod, "alive", True):
+                continue
+            holders = []
+            if sr.digest is not None:
+                holders = [
+                    n for n in cluster.digests.nodes_for(sr.digest)
+                    if getattr(cluster.nodes.get(n), "alive", True)]
+            if not holders:
+                self._rerun_upstream(d, rs)
+        data, src, hints = self._stage_input(sp, rs)
+        src_node = cluster.nodes.get(src)
+        if src_node is None or not getattr(src_node, "alive", True):
+            src = self._alive_source(hints)
+        return data, src, hints
+
+    def _alive_source(self, hints: tuple) -> str:
+        """A live node to re-ship from, preferring the one already holding
+        the most hinted input bytes (the surviving replica)."""
+        cluster = self.cluster
+        best, best_bytes = None, -1
+        for n in cluster.node_list:
+            if not getattr(n, "alive", True):
+                continue
+            res = sum(cluster.digests.resident_bytes(n.name, d)
+                      for d, _ in hints)
+            if res > best_bytes:
+                best, best_bytes = n.name, res
+        if best is None:
+            raise NodeCrashError(None, "no live node to re-ship from")
+        return best
+
+    def _rerun_upstream(self, name: str, rs: _RunState) -> None:
+        """Lineage re-execution: the ONLY path that re-runs a completed
+        stage — its output's last replica died with a node. Publishes
+        ``stage.rerun`` (NOT ``workflow.stage_done``: re-runs must not
+        advance the fault-timeline wave counter)."""
+        plan = rs.planbox["plan"]
+        sp = plan.stages[name]
+        spec = rs.wf.stages[name].spec
+        data, src, hints = self._recover_input(name, sp, rs)
+        sr = self._dispatch(name, spec, sp, data, src, hints, rs)
+        sr.record.replan_count = plan.generation
+        self._seed_output(sp, sr)
+        with rs.lock:
+            rs.results[name] = sr
+            rs.counters["upstream_reruns"] += 1
+        self.cluster.bus.publish("stage.rerun", {
+            "workflow": rs.wf.name, "stage": name, "node": sr.record.node,
+            "t": self.cluster.clock.now()})
+
+    # --------------------------------------------------- health reporting
+    def _report_stage(self, sr: StageResult, rs: Optional[_RunState]) -> None:
+        """Feed the health monitor (per-node inflation EWMA) and the run's
+        own calibration box from one completed stage."""
+        clock = self.cluster.clock
+        measured = clock.elapsed_sim(sr.record.total)
+        health = getattr(self.cluster, "health", None)
+        if health is not None and sr.record.node:
+            health.report_stage(sr.record.node, measured,
+                                sr.record.predicted_s)
+        ratio = stage_inflation(measured, sr.record.predicted_s)
+        if ratio is not None and rs is not None:
+            with rs.lock:
+                rs.inflation[0] = fold_inflation(rs.inflation[0], ratio)
+
+    def _report_failure(self, exc: BaseException,
+                        node: Optional[str]) -> None:
+        health = getattr(self.cluster, "health", None)
+        if health is None or node is None:
+            return
+        if isinstance(exc, TransferStallError):
+            health.report_stall(node)
+        elif isinstance(exc, (NodeCrashError, LinkDownError,
+                              BufferOfflineError, TimeoutError, IOError)):
+            health.report_failure(node)
+
+    def _wrap_failure(self, name: str, spec: FunctionSpec,
+                      e: BaseException,
+                      wf_name: str = "") -> BaseException:
+        """Every stage error surfaces as a StageExecutionError carrying
+        stage/node/attempt/cause (+ the LifecycleRecord when the data plane
+        attached one). The retry loop wraps exhausted retries itself; this
+        covers the no-retry-policy path."""
+        if not isinstance(e, Exception) or isinstance(
+                e, (StageExecutionError, PlanError, WorkflowCycleError)):
+            return e
+        node = getattr(e, "node", None) or self._placed_node(spec.name)
+        self._report_failure(e, node)
+        self.cluster.bus.publish("stage.failed", {
+            "workflow": wf_name, "stage": name, "node": node, "attempt": 1,
+            "error": repr(e), "will_retry": False,
+            "t": self.cluster.clock.now()})
+        return StageExecutionError(name, node=node, attempt=1, cause=e,
+                                   record=getattr(e, "record", None))
+
     # ------------------------------------------------------- stage dispatch
     def _dispatch(self, name: str, spec: FunctionSpec, sp: StagePlan,
-                  data: bytes, source_node: str,
-                  input_hints: tuple) -> StageResult:
-        def attempt(avoid: Optional[str] = None) -> StageResult:
+                  data: bytes, source_node: str, input_hints: tuple,
+                  rs: Optional[_RunState] = None) -> StageResult:
+        """Crash-restart recovery wrapper: without a RetryPolicy this is
+        exactly one attempt (pre-retry behavior); with one, a failed or
+        timed-out attempt is retried on a DIFFERENT node (``avoid`` steers
+        placement off the failed node; the health monitor's penalty keeps
+        suspect nodes out anyway), with the input re-derived from surviving
+        replicas (``_recover_input``) and linear backoff between attempts."""
+        rp = sp.retry if sp.retry is not None else getattr(spec, "retry",
+                                                           None)
+        if rp is None:
+            return self._attempt_stage(name, spec, sp, data, source_node,
+                                       input_hints, rs)
+        clock = self.cluster.clock
+        avoid = None
+        attempt = 1
+        while True:
+            try:
+                sr = self._attempt_with_timeout(name, spec, sp, data,
+                                                source_node, input_hints,
+                                                rs, avoid, rp)
+                sr.attempts = attempt
+                sr.record.attempt = attempt
+                return sr
+            except Exception as e:  # noqa: BLE001
+                failed_node = (getattr(e, "node", None)
+                               or self._placed_node(spec.name))
+                self._report_failure(e, failed_node)
+                will_retry = attempt < rp.max_attempts
+                self.cluster.bus.publish("stage.failed", {
+                    "workflow": (rs.wf.name if rs is not None else ""),
+                    "stage": name, "node": failed_node, "attempt": attempt,
+                    "error": repr(e), "will_retry": will_retry,
+                    "t": clock.now()})
+                if not will_retry:
+                    raise StageExecutionError(
+                        name, node=failed_node, attempt=attempt, cause=e,
+                        record=getattr(e, "record", None)) from e
+                if rs is not None:
+                    with rs.lock:
+                        rs.counters["retries"] += 1
+                clock.sleep(rp.backoff_s * attempt)   # linear backoff
+                avoid = failed_node
+                attempt += 1
+                if rs is not None:
+                    data, source_node, input_hints = self._recover_input(
+                        name, sp, rs)
+
+    def _attempt_with_timeout(self, name, spec, sp, data, source_node,
+                              input_hints, rs, avoid, rp) -> StageResult:
+        """One attempt under the policy's per-attempt sim-second deadline
+        (a wedged data path must not eat the whole run before the retry)."""
+        if rp.timeout_s is None:
+            return self._attempt_stage(name, spec, sp, data, source_node,
+                                       input_hints, rs, avoid)
+        pool = ThreadPoolExecutor(max_workers=1)
+        try:
+            fut = pool.submit(self._attempt_stage, name, spec, sp, data,
+                              source_node, input_hints, rs, avoid)
+            try:
+                return fut.result(
+                    timeout=rp.timeout_s * self.cluster.clock.scale)
+            except FuturesTimeout:
+                raise TimeoutError(
+                    f"stage {name!r} attempt exceeded its "
+                    f"{rp.timeout_s}s budget") from None
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _attempt_stage(self, name: str, spec: FunctionSpec, sp: StagePlan,
+                       data: bytes, source_node: str, input_hints: tuple,
+                       rs: Optional[_RunState] = None,
+                       avoid: Optional[str] = None) -> StageResult:
+        def attempt(backup_avoid: Optional[str] = None) -> StageResult:
             return self._invoke_once(name, spec, sp, data, source_node,
-                                     input_hints, avoid=avoid)
+                                     input_hints,
+                                     avoid=(backup_avoid if backup_avoid
+                                            is not None else avoid))
 
         est = self.estimates.get(name)
         budget_sim = None
@@ -431,7 +670,16 @@ class WorkflowRunner:
             # the budget (speculation="auto" needs no user numbers)
             budget_sim = sp.speculation_budget_s
         if budget_sim:
-            budget = budget_sim * self.cluster.clock.scale  # sim -> wall s
+            # mid-run calibration: scale the plan's budget by the measured
+            # stage-time inflation so far (clamped — see calibrated_budget).
+            # The record keeps the PLAN's budget in speculation_budget_s and
+            # the armed value in calibrated_budget_s.
+            armed_sim = budget_sim
+            if rs is not None and rs.inflation[0] is not None:
+                cal = calibrated_budget(budget_sim, rs.inflation[0])
+                if cal is not None:
+                    armed_sim = cal
+            budget = armed_sim * self.cluster.clock.scale  # sim -> wall s
             pool = ThreadPoolExecutor(max_workers=2)
             try:
                 first = pool.submit(attempt)
@@ -439,6 +687,8 @@ class WorkflowRunner:
                 if done:
                     sr = first.result()
                     sr.record.speculation_budget_s = budget_sim
+                    if armed_sim != budget_sim:
+                        sr.record.calibrated_budget_s = armed_sim
                     return sr
                 # failure independence: steer the backup OFF the node the
                 # straggler was placed on (its placement event is on the bus
@@ -453,6 +703,8 @@ class WorkflowRunner:
                 sr = winner.result()
                 sr.speculated = winner is backup
                 sr.record.speculation_budget_s = budget_sim
+                if armed_sim != budget_sim:
+                    sr.record.calibrated_budget_s = armed_sim
                 return sr
             finally:
                 # without this every straggler stage leaked a live executor

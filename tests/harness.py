@@ -122,6 +122,8 @@ class FaultTimeline:
         self.faults = faults or LinkFaults(cluster)
         self._actions: Dict[int, List[Tuple[Callable, str]]] = {}
         self._fired: set = set()
+        self._cpu_orig: Dict[str, float] = {}   # slow_cpu_at originals
+        self._disk_stalled: list = []           # (buffer, set, append_chunk)
         # RLock: actions execute under it (ordering guarantee) and may
         # legitimately call back into at_wave() to schedule future faults
         self._lock = threading.RLock()
@@ -164,6 +166,59 @@ class FaultTimeline:
             if probe is not None:
                 self._probe(probe[0], probe[1], probes, probe_bytes)
         return self.at_wave(wave, action, "restore")
+
+    # ------------------------------------------------------- node faults
+    def crash_at(self, wave: int, node: str) -> "FaultTimeline":
+        """Crash ``node`` after ``wave`` stages completed: CAS wiped, links
+        down, warm pool purged (``Cluster.kill_node``). NOT undone by
+        :meth:`restore` — a crash loses state; bring the node back
+        explicitly with :meth:`restart_node_at` (it returns EMPTY)."""
+        def action(_faults: LinkFaults) -> None:
+            self.cluster.kill_node(node)
+        return self.at_wave(wave, action, f"crash {node}")
+
+    def restart_node_at(self, wave: int, node: str) -> "FaultTimeline":
+        """Restart a crashed node (empty CAS, cold warm pool)."""
+        def action(_faults: LinkFaults) -> None:
+            self.cluster.restart_node(node)
+        return self.at_wave(wave, action, f"restart {node}")
+
+    def slow_cpu_at(self, wave: int, node: str,
+                    factor: float) -> "FaultTimeline":
+        """Sick CPU: stretch every modeled sleep (ν/η/γ) on ``node`` by
+        ``factor`` — the stage-time inflation the health monitor EWMAs.
+        Undone by :meth:`restore`."""
+        def action(_faults: LinkFaults) -> None:
+            n = self.cluster.node(node)
+            self._cpu_orig.setdefault(node, n.cpu_factor)
+            n.cpu_factor = factor
+        return self.at_wave(wave, action, f"slow-cpu {node} x{factor}")
+
+    def disk_stall_at(self, wave: int, node: str,
+                      delay_s: float) -> "FaultTimeline":
+        """Disk stall: every buffer write on ``node`` (whole-blob ``set``
+        and per-chunk ``append_chunk``) pays ``delay_s`` sim-seconds first.
+        Undone by :meth:`restore`."""
+        def action(_faults: LinkFaults) -> None:
+            buf = self.cluster.node(node).buffer
+            if buf in [b for b, _, _ in self._disk_stalled]:
+                return
+            real_set, real_append = buf.set, buf.append_chunk
+            clock = self.cluster.clock
+
+            def slow_set(*a, **kw):
+                clock.sleep(delay_s)
+                return real_set(*a, **kw)
+
+            def slow_append(*a, **kw):
+                clock.sleep(delay_s)
+                return real_append(*a, **kw)
+
+            # instance attributes shadow the methods for THIS buffer
+            buf.set = slow_set
+            buf.append_chunk = slow_append
+            self._disk_stalled.append((buf, real_set, real_append))
+        return self.at_wave(wave, action, f"disk-stall {node} +{delay_s}s")
 
     def flap(self, src: str, dst: str, *, waves, bandwidth_factor: float,
              extra_rtt: float = 0.0, probes: int = 0,
@@ -221,7 +276,18 @@ class FaultTimeline:
             c.transfer(c.node(src), c.node(dst), payload)
 
     def restore(self) -> None:
+        """Undo link faults, CPU inflation, and disk stalls. Crashed nodes
+        are NOT auto-restarted: their CAS died with them, and silently
+        resurrecting state the test said was lost would defeat the point —
+        use :meth:`restart_node_at` (or ``cluster.restart_node``)."""
         self.faults.restore()
+        for node, factor in self._cpu_orig.items():
+            self.cluster.node(node).cpu_factor = factor
+        self._cpu_orig.clear()
+        for buf, _set, _append in self._disk_stalled:
+            buf.__dict__.pop("set", None)
+            buf.__dict__.pop("append_chunk", None)
+        self._disk_stalled.clear()
 
     def __enter__(self) -> "FaultTimeline":
         return self.attach()

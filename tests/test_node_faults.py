@@ -1,0 +1,331 @@
+"""Node fault tolerance: health-scored placement, crash-restart recovery
+with data-plane-aware retries, and CAS drain/evacuation.
+
+Regression surface:
+  * health transitions (healthy -> suspect -> degraded -> dead) driven by
+    stage-time inflation / failures, with generation bumps and ``node.health``
+    bus events;
+  * ``kill_node`` forgets every registry residency entry (no phantom
+    replicas), wipes the buffer, downs the links, and purges warm pools;
+  * a stage retried under a :class:`RetryPolicy` lands on a DIFFERENT node
+    with its input re-shipped from a surviving CAS replica — completed
+    upstream stages are NOT re-executed while a replica survives;
+  * drain/evacuation moves sole-replica CAS content off a degraded node
+    before it is lost (and skips content that still resolves elsewhere);
+  * the scheduler never places on a dead node, penalizes degraded ones,
+    and fails fast (NodeCrashError) on an affinity pin to a dead node;
+  * property: with ``max_attempts >= 2`` and a surviving replica per input,
+    a single-node crash between waves never fails the workflow and never
+    re-executes completed upstream stages.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from harness import FaultTimeline
+from repro.core.buffer import content_digest
+from repro.core.errors import (BufferOfflineError, NodeCrashError,
+                               StageExecutionError)
+from repro.core.transfer import publish_content
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.health import (DEAD, DEGRADED, DEGRADED_PENALTY, HEALTHY,
+                                  SUSPECT, SUSPECT_PENALTY)
+from repro.runtime.policy import DataPolicy, RetryPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
+
+MB = 1 << 20
+
+
+def _spec(name, *, provision_s=0.2, startup_s=0.02, exec_s=0.01,
+          affinity=None, handler=None):
+    return FunctionSpec(name, handler or (lambda d, inv: d),
+                        provision_s=provision_s, startup_s=startup_s,
+                        exec_s=exec_s, affinity=affinity)
+
+
+# --------------------------------------------------------------- health
+
+
+def test_health_transitions_and_generation(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    mon = cluster.health
+    gen0 = mon.generation
+    assert mon.state("edge-0") == HEALTHY
+    assert mon.penalty("edge-0") == 0.0
+
+    # inflated stage times: one sample is no evidence (min_samples=2);
+    # a sustained 2x EWMA is suspect, pushing it past 2.5x is degraded
+    mon.report_stage("edge-0", measured_s=2.0, predicted_s=1.0)
+    assert mon.state("edge-0") == HEALTHY
+    mon.report_stage("edge-0", measured_s=2.0, predicted_s=1.0)
+    assert mon.state("edge-0") == SUSPECT
+    assert mon.penalty("edge-0") == SUSPECT_PENALTY
+    mon.report_stage("edge-0", measured_s=5.0, predicted_s=1.0)
+    assert mon.state("edge-0") == DEGRADED   # EWMA 2.0 -> 2.9 >= 2.5
+    assert mon.penalty("edge-0") == DEGRADED_PENALTY
+    assert mon.generation >= gen0 + 2          # each transition bumps it
+
+    events = cluster.bus.history("node.health")
+    assert [e["state"] for e in events if e["node"] == "edge-0"] == [
+        SUSPECT, DEGRADED]
+
+    # a single failure makes a healthy node suspect; a clean streak heals it
+    mon.report_failure("edge-1")
+    assert mon.state("edge-1") == SUSPECT
+    for _ in range(3):                         # clean_streak threshold
+        mon.report_stage("edge-1", measured_s=1.0, predicted_s=1.0)
+    assert mon.state("edge-1") == HEALTHY
+
+    # forced states win over statistics; restart resets everything
+    mon.mark_dead("edge-0")
+    assert mon.state("edge-0") == DEAD
+    mon.mark_alive("edge-0")
+    assert mon.state("edge-0") == HEALTHY
+
+
+def test_kill_node_forgets_registry_and_buffer(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    shared, sole = b"s" * MB, b"x" * MB
+    d_shared, d_sole = content_digest(shared), content_digest(sole)
+    publish_content(cluster.node("edge-0"), shared, d_shared)
+    publish_content(cluster.node("edge-1"), shared, d_shared)
+    publish_content(cluster.node("edge-0"), sole, d_sole)
+
+    cluster.kill_node("edge-0")
+
+    assert not cluster.nodes["edge-0"].alive
+    assert cluster.health.state("edge-0") == DEAD
+    # no phantom replicas: edge-0 dropped from every digest, the shared
+    # content still resolves on its survivor
+    assert set(cluster.digests.nodes_for(d_shared)) == {"edge-1"}
+    assert cluster.digests.nodes_for(d_sole) == {}
+    removed = cluster.bus.history("registry.digest_removed")
+    assert {e["digest"] for e in removed if e["node"] == "edge-0"} == {
+        d_shared, d_sole}
+    # the prefetcher has nothing to relay the sole content from
+    assert not cluster.prefetcher.kick(d_sole, "cloud-0")
+    # the wiped buffer refuses IO until restart
+    with pytest.raises(BufferOfflineError):
+        cluster.node("edge-0").buffer.set("k", b"data")
+    assert cluster.bus.history("node.crashed")[0]["node"] == "edge-0"
+
+    cluster.restart_node("edge-0")
+    assert cluster.nodes["edge-0"].alive
+    assert cluster.health.state("edge-0") == HEALTHY
+    cluster.node("edge-0").buffer.set("k", b"data")     # IO works again
+    # the CAS died with the node: restart comes back EMPTY
+    assert cluster.digests.holdings("edge-0") == {}
+
+
+# ------------------------------------------------------------- scheduler
+
+
+def test_scheduler_steers_off_dead_and_degraded(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    spec = _spec("fn")
+    cluster.kill_node("edge-1")
+    picks = {cluster.scheduler._pick(spec).name for _ in range(6)}
+    assert "edge-1" not in picks
+
+    # degraded: effectively never wins while any healthy node exists
+    cluster.restart_node("edge-1")
+    cluster.health.mark_degraded("edge-1")
+    picks = [cluster.scheduler._pick(spec).name for _ in range(6)]
+    assert "edge-1" not in picks
+
+    # an affinity pin to a dead node fails fast with the typed error
+    cluster.kill_node("cloud-0")
+    with pytest.raises(NodeCrashError) as exc:
+        cluster.scheduler._pick(_spec("pinned", affinity="cloud-0"))
+    assert exc.value.node == "cloud-0"
+
+
+# ------------------------------------------------------ retry + re-ship
+
+
+def test_retry_reships_from_surviving_replica(fast_clock):
+    """p (edge-0) -> c1 (edge-1) -> c2; edge-0 crashes after c1 completes.
+    c2's dispatch sources from edge-0 (deps[-1] is p) and fails; the retry
+    re-ships from the surviving replica on edge-1 — p is NOT re-executed."""
+    cluster = Cluster(clock=fast_clock)
+    runs = {"p": 0, "c1": 0, "c2": 0}
+
+    def counting(name):
+        def handler(d, inv):
+            runs[name] += 1
+            return d
+        return handler
+
+    pol = DataPolicy(dedup=True,
+                     retry=RetryPolicy(max_attempts=3, backoff_s=0.01))
+    b = WorkflowBuilder("reship", default_policy=pol)
+    b.stage("p", _spec("p", affinity="edge-0", handler=counting("p")))
+    b.stage("c1", _spec("c1", affinity="edge-1",
+                        handler=counting("c1"))).after("p")
+    b.stage("c2", _spec("c2", handler=counting("c2"))).after("c1", "p")
+    wf = b.build()
+
+    runner = WorkflowRunner(cluster, use_truffle=True)
+    with FaultTimeline(cluster) as tl:
+        tl.crash_at(2, "edge-0")              # after c1 (wave 2), before c2
+        tr = runner.run(wf, b"seed" * 1024, source_node="edge-0")
+
+    assert len(tr.stages) == 3
+    assert tr.retries >= 1                    # c2's first attempt failed
+    assert tr.upstream_reruns == 0            # replica on edge-1 survived
+    assert runs["p"] == 1                     # upstream NOT re-executed
+    assert tr.stages["c2"].attempts >= 2
+    assert tr.stages["c2"].record.node != "edge-0"
+    failed = cluster.bus.history("stage.failed")
+    assert any(e["stage"] == "c2" and e["will_retry"] for e in failed)
+
+
+def test_retry_exhausted_raises_stage_execution_error(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    pol = DataPolicy(retry=RetryPolicy(max_attempts=2, backoff_s=0.0))
+    b = WorkflowBuilder("doomed", default_policy=pol)
+    # pinned to a node that is dead before the run starts: every attempt
+    # fails in the scheduler, the typed wrapper surfaces the lineage
+    b.stage("s", _spec("s", affinity="edge-1"))
+    wf = b.build()
+    cluster.kill_node("edge-1")
+    runner = WorkflowRunner(cluster, use_truffle=True)
+    with pytest.raises(StageExecutionError) as exc:
+        runner.run(wf, b"x", source_node="edge-0")
+    assert exc.value.stage == "s"
+    assert exc.value.attempt == 2
+    assert isinstance(exc.value.cause, NodeCrashError)
+
+
+# ------------------------------------------------------------ evacuation
+
+
+def test_drain_evacuates_sole_replicas_only(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    sole, shared = b"a" * MB, b"b" * MB
+    d_sole, d_shared = content_digest(sole), content_digest(shared)
+    publish_content(cluster.node("edge-0"), sole, d_sole)
+    publish_content(cluster.node("edge-0"), shared, d_shared)
+    publish_content(cluster.node("cloud-0"), shared, d_shared)
+
+    moved = cluster.drain_node("edge-0")
+
+    assert moved == [d_sole]                  # shared content needs no rescue
+    assert cluster.health.state("edge-0") == DEGRADED
+    # the sole replica now resolves off the drained node
+    others = set(cluster.digests.nodes_for(d_sole)) - {"edge-0"}
+    assert others
+    evs = cluster.bus.history("node.evacuated")
+    assert any(e["node"] == "edge-0" and e["digests"] >= 1 for e in evs)
+
+    # placements steer away from the drained node ...
+    picks = [cluster.scheduler._pick(_spec("fn")).name for _ in range(4)]
+    assert "edge-0" not in picks
+    # ... and the content survives the node's eventual death
+    cluster.kill_node("edge-0")
+    assert set(cluster.digests.nodes_for(d_sole)) == others
+
+
+# --------------------------------------------- sick-node harness faults
+
+
+def test_slow_cpu_and_disk_stall_inflate_but_complete(fast_clock):
+    def run_once(with_faults: bool) -> float:
+        cluster = Cluster(clock=Clock(scale=0.01))
+        b = WorkflowBuilder("sick", default_policy=DataPolicy())
+        prev = None
+        for i in range(4):
+            sb = b.stage(f"s{i}", _spec(f"s{i}", affinity="edge-1"))
+            if prev is not None:
+                sb.after(prev)
+            prev = f"s{i}"
+        wf = b.build()
+        runner = WorkflowRunner(cluster, use_truffle=True)
+        with FaultTimeline(cluster) as tl:
+            if with_faults:
+                tl.slow_cpu_at(1, "edge-1", 3.0)
+                tl.disk_stall_at(1, "edge-1", 0.2)
+            tr = runner.run(wf, b"x" * 4096, source_node="edge-0")
+        assert len(tr.stages) == 4
+        return tr.total
+
+    clean, sick = run_once(False), run_once(True)
+    assert sick > clean * 1.5                 # ν/η/γ stretched + write delays
+
+
+# --------------------------------------------------------------- property
+
+
+@settings(max_examples=12, deadline=None)
+@given(crash_wave=st.integers(min_value=2, max_value=4),
+       victim_idx=st.integers(min_value=0, max_value=2))
+def test_single_node_crash_never_fails_workflow(crash_wave, victim_idx):
+    """With max_attempts >= 2, ONE node crash between waves never fails a
+    6-stage chain. When the victim held no sole replica of a completed
+    stage's output, no completed upstream stage re-executes either."""
+    cluster = Cluster(clock=Clock(scale=0.003))
+    nodes = list(cluster.nodes)
+    victim = nodes[victim_idx]
+    runs = {}
+
+    def counting(name):
+        runs[name] = 0
+
+        def handler(d, inv):
+            runs[name] += 1
+            return d
+        return handler
+
+    pol = DataPolicy(dedup=True,
+                     retry=RetryPolicy(max_attempts=3, backoff_s=0.005))
+    b = WorkflowBuilder("chain", default_policy=pol)
+    prev = None
+    for i in range(6):
+        sb = b.stage(f"s{i}", _spec(f"s{i}", provision_s=0.1,
+                                    handler=counting(f"s{i}")))
+        if prev is not None:
+            sb.after(prev)
+        prev = f"s{i}"
+    wf = b.build()
+
+    sole_on_victim = []                       # digests only the victim held
+
+    tl = FaultTimeline(cluster).attach()
+
+    def crash(_faults):
+        held = cluster.digests.holdings(victim)
+        sole_on_victim.extend(
+            d for d in held
+            if set(cluster.digests.nodes_for(d)) == {victim})
+        cluster.kill_node(victim)
+
+    tl.at_wave(crash_wave, crash, f"crash {victim}")
+
+    runner = WorkflowRunner(cluster, use_truffle=True)
+    try:
+        tr = runner.run(wf, b"w" * 65536, source_node="edge-0")
+    finally:
+        tl.restore()
+
+    # the workflow always completes, whatever died
+    assert len(tr.stages) == 6
+    assert tr.stages["s5"].output == b"w" * 65536
+
+    # the dead node never receives a placement after the crash
+    crash_t = cluster.bus.history("node.crashed")[0]["t"]
+    late = [e for e in cluster.bus.history("scheduling.placed")
+            if e["t"] > crash_t]
+    assert all(e["node"] != victim for e in late)
+
+    # completed stages only re-execute when their output's LAST replica
+    # died with the victim
+    if not sole_on_victim:
+        assert tr.upstream_reruns == 0
+        done_before = min(crash_wave, 6)
+        for i in range(done_before):
+            assert runs[f"s{i}"] == 1, f"s{i} re-executed without need"
