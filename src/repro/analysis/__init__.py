@@ -1,0 +1,23 @@
+"""Concurrency auditor for the Truffle data plane.
+
+Two layers:
+
+* **Static** (:mod:`repro.analysis.lockgraph` + :mod:`repro.analysis.rules`):
+  stdlib-``ast`` walk over ``src/repro/{core,runtime}`` that infers lock
+  identities (``self._lock`` / ``self._cond`` aliases / module-level /
+  function-local locks), propagates held-lock sets interprocedurally —
+  including through ``EventBus.publish`` → subscriber callbacks and
+  buffer/health callback attributes — and evaluates rules R1–R5
+  (lock-order cycles, blocking calls under a lock, unlocked shared
+  writes, ``_locked``-suffix misuse, silent broad excepts).
+  Run it: ``python -m repro.analysis`` (exits nonzero on any violation
+  not suppressed by ``analysis/baseline.json``).
+
+* **Dynamic** (:mod:`repro.analysis.lockcheck`): opt-in
+  (``TRUFFLE_LOCKCHECK=1``) instrumented-lock wrapper that records
+  per-thread acquisition order at runtime under the real test suites,
+  reports lock-order inversions and long holds, and dumps a witness
+  trace (``TRUFFLE_LOCKCHECK_DUMP=<path>``).
+"""
+from repro.analysis.lockgraph import Program, analyze_paths  # noqa: F401
+from repro.analysis.rules import Violation, evaluate, load_baseline  # noqa: F401

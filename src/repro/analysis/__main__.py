@@ -1,0 +1,102 @@
+"""``python -m repro.analysis`` — run the static concurrency auditor.
+
+Exits nonzero when any violation is NOT covered by the committed
+suppression baseline (``src/repro/analysis/baseline.json``), so CI can
+gate on it. Typical runs::
+
+    python -m repro.analysis                      # audit core/ + runtime/
+    python -m repro.analysis path/to/tree         # audit another tree
+    python -m repro.analysis --json               # machine-readable report
+    python -m repro.analysis --write-baseline     # accept current findings
+
+Amending the baseline: run ``--write-baseline``, then edit the generated
+entries' ``rationale`` fields — a suppression without a real rationale
+should not survive review.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.lockgraph import analyze_paths
+from repro.analysis.rules import (RULE_TITLES, evaluate, load_baseline,
+                                  save_baseline, split_baselined)
+
+_PKG = os.path.dirname(os.path.abspath(__file__))        # src/repro/analysis
+_REPRO = os.path.dirname(_PKG)                           # src/repro
+DEFAULT_PATHS = [os.path.join(_REPRO, "core"),
+                 os.path.join(_REPRO, "runtime")]
+DEFAULT_BASELINE = os.path.join(_PKG, "baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static lock-discipline auditor for the Truffle "
+                    "data plane (rules R1-R5).")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to audit "
+                         "(default: src/repro/{core,runtime})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="suppression baseline JSON (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignore the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings into the baseline "
+                         "(existing rationales are kept)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the report as JSON")
+    ap.add_argument("--graph", action="store_true",
+                    help="also print the lock acquisition graph")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or DEFAULT_PATHS
+    prog = analyze_paths(paths)
+    violations = evaluate(prog)
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+
+    if args.write_baseline:
+        save_baseline(args.baseline, violations, baseline)
+        print(f"baseline: wrote {len(violations)} suppression(s) to "
+              f"{args.baseline}")
+        return 0
+
+    new, suppressed = split_baselined(violations, baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "paths": paths,
+            "locks": sorted(prog.decls),
+            "new": [vars(v) for v in new],
+            "suppressed": [vars(v) for v in suppressed],
+        }, indent=2, default=list))
+        return 1 if new else 0
+
+    print(f"concurrency audit: {len(prog.decls)} lock identities, "
+          f"{len(prog.acqs)} acquisition facts, "
+          f"{len(prog.funcs)} functions walked")
+    if args.graph:
+        edges = sorted({(a.src, a.dst) for a in prog.acqs
+                        if a.src is not None})
+        for src, dst in edges:
+            print(f"  {src} -> {dst}")
+    for v in suppressed:
+        print(f"  baselined {v.format()}")
+        print(f"            rationale: {baseline.get(v.ident, '')}")
+    if not new:
+        print("OK: no non-baselined violations "
+              f"({len(suppressed)} baselined)")
+        return 0
+    print(f"FAIL: {len(new)} non-baselined violation(s):")
+    for v in new:
+        print(f"  {v.format()}")
+        print(f"    rule: {RULE_TITLES[v.rule]}   ident: {v.ident}")
+    print("fix the finding, or (with a written rationale) accept it via "
+          "--write-baseline and edit baseline.json")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,273 @@
+"""Dynamic lock-discipline checker (the runtime half of the auditor).
+
+Opt-in via ``TRUFFLE_LOCKCHECK=1``: :func:`install` replaces
+``threading.Lock`` / ``threading.RLock`` with thin instrumented wrappers
+that record, per thread, the order in which lock *sites* are acquired.
+A lock site is the source location that created the lock
+(``buffer.py:41``), so every ``Buffer`` instance maps to one node in the
+order graph — exactly the identity the static layer reasons about.
+
+What it detects:
+
+* **Order inversions** — site A acquired while holding B somewhere, and
+  B acquired while holding A somewhere else.  Each direction keeps the
+  stack of the acquisition that created the edge, so a report is a
+  ready-made deadlock witness even if the schedules never actually
+  interleaved into a deadlock during the run.
+* **Long holds** — a lock held longer than ``TRUFFLE_LOCKCHECK_HOLD_S``
+  wall seconds (default 5.0).  Reported as warnings, not failures: the
+  suites run simulated sleeps that legitimately stretch wall time.
+
+The checker never blocks the locks it watches: its own bookkeeping is
+guarded by a raw ``_thread`` lock that no wrapper ever wraps, and the
+per-thread held stack lives in a ``threading.local``.
+
+Wiring: ``tests/conftest.py`` calls :func:`install` when
+``TRUFFLE_LOCKCHECK=1`` and fails the session from ``pytest_sessionfinish``
+if :func:`inversions` is non-empty.  ``TRUFFLE_LOCKCHECK_DUMP=<path>``
+writes the full edge set + witnesses as JSON at interpreter exit.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import sys
+import threading
+import time
+import traceback
+import _thread
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Tuple
+
+_RealLock = threading.Lock          # originals, captured at import time
+_RealRLock = threading.RLock        # (nothing has patched threading yet)
+_installed = False
+
+_registry_guard = _thread.allocate_lock()   # raw: never instrumented
+_edges: Dict[Tuple[str, str], dict] = {}    # (held_site, acq_site) -> witness
+_long_holds: List[dict] = []
+_tls = threading.local()
+
+HOLD_S = float(os.environ.get("TRUFFLE_LOCKCHECK_HOLD_S", "5.0"))
+_MAX_LONG_HOLDS = 50
+
+
+def _site() -> str:
+    """file:line of the frame that created the lock, skipping infra frames."""
+    f = sys._getframe(2)
+    while f is not None:
+        fn = f.f_code.co_filename
+        if not (fn.endswith("threading.py") or fn.endswith("dataclasses.py")
+                or "lockcheck" in fn):
+            return "%s:%d" % (os.path.basename(fn), f.f_lineno)
+        f = f.f_back
+    return "<unknown>"
+
+
+def _held_stack() -> list:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def _note_acquire(site: str, t_acq: float) -> None:
+    stack = _held_stack()
+    # Re-entrant depth on the SAME site (RLock) adds no ordering info.
+    fresh = all(s != site for s, _ in stack)
+    if fresh:
+        for held_site, _ in stack:
+            if held_site == site:
+                continue
+            key = (held_site, site)
+            if key not in _edges:
+                wit = {
+                    "held": held_site, "acquired": site,
+                    "thread": threading.current_thread().name,
+                    "stack": "".join(traceback.format_stack(limit=12)[:-2]),
+                }
+                with _registry_guard:
+                    _edges.setdefault(key, wit)
+    stack.append((site, t_acq))
+
+
+def _note_release(site: str) -> None:
+    stack = _held_stack()
+    # release() may come from a different nesting than acquire (Condition
+    # juggling), so pop the LAST matching entry rather than assuming LIFO.
+    for i in range(len(stack) - 1, -1, -1):
+        if stack[i][0] == site:
+            t_acq = stack[i][1]
+            del stack[i]
+            held = time.monotonic() - t_acq
+            if held > HOLD_S:
+                with _registry_guard:
+                    if len(_long_holds) < _MAX_LONG_HOLDS:
+                        _long_holds.append({
+                            "site": site, "held_s": round(held, 3),
+                            "thread": threading.current_thread().name,
+                        })
+            return
+
+
+class _CheckedLock:
+    """Instrumented stand-in for threading.Lock."""
+
+    _reentrant = False
+
+    def __init__(self):
+        self._inner = _RealLock()
+        self._lc_site = _site()
+
+    def acquire(self, blocking=True, timeout=-1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            _note_acquire(self._lc_site, time.monotonic())
+        return got
+
+    def release(self):
+        _note_release(self._lc_site)
+        self._inner.release()
+
+    def locked(self):
+        return self._inner.locked()
+
+    def _at_fork_reinit(self):
+        # stdlib registers this via os.register_at_fork (futures, logging)
+        self._inner._at_fork_reinit()
+        _tls.__dict__.pop("stack", None)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+    def __repr__(self):
+        return "<CheckedLock %s %r>" % (self._lc_site, self._inner)
+
+
+class _CheckedRLock(_CheckedLock):
+    """Instrumented stand-in for threading.RLock.
+
+    Implements the private Condition protocol (`_release_save` /
+    `_acquire_restore` / `_is_owned`) by delegating to the real RLock so
+    ``threading.Condition(rlock)`` keeps working; the save/restore pair
+    updates our held stack like a full release/reacquire.
+    """
+
+    _reentrant = True
+
+    def __init__(self):
+        self._inner = _RealRLock()
+        self._lc_site = _site()
+
+    def _release_save(self):
+        _note_release(self._lc_site)
+        return self._inner._release_save()
+
+    def _acquire_restore(self, state):
+        self._inner._acquire_restore(state)
+        _note_acquire(self._lc_site, time.monotonic())
+
+    def _is_owned(self):
+        return self._inner._is_owned()
+
+
+def install() -> None:
+    """Swap threading.Lock/RLock for the checked wrappers (idempotent).
+
+    Locks created BEFORE install() stay raw — call it as early as
+    possible (conftest does, before any repro import).
+    """
+    global _installed
+    if _installed:
+        return
+    threading.Lock = _CheckedLock          # type: ignore[misc]
+    threading.RLock = _CheckedRLock        # type: ignore[misc]
+    _installed = True
+    dump = os.environ.get("TRUFFLE_LOCKCHECK_DUMP")
+    if dump:
+        atexit.register(lambda: dump_report(dump))
+
+
+def uninstall() -> None:
+    global _installed
+    if _installed:
+        threading.Lock = _RealLock         # type: ignore[misc]
+        threading.RLock = _RealRLock       # type: ignore[misc]
+        _installed = False
+
+
+def reset() -> None:
+    """Drop all recorded edges/holds (tests use this between scenarios)."""
+    with _registry_guard:
+        _edges.clear()
+        del _long_holds[:]
+
+
+@contextmanager
+def isolated():
+    """Snapshot + restore the recorded state so a unit test can create a
+    deliberate inversion without poisoning a TRUFFLE_LOCKCHECK=1 session."""
+    with _registry_guard:
+        edges, holds = dict(_edges), list(_long_holds)
+        _edges.clear()
+        del _long_holds[:]
+    try:
+        yield
+    finally:
+        with _registry_guard:
+            _edges.clear()
+            _edges.update(edges)
+            _long_holds[:] = holds
+
+
+def inversions() -> List[dict]:
+    """Unordered site pairs observed in BOTH orders, with both witnesses."""
+    with _registry_guard:
+        edges = dict(_edges)
+    out, seen = [], set()
+    for (a, b) in edges:
+        if (b, a) in edges and frozenset((a, b)) not in seen:
+            seen.add(frozenset((a, b)))
+            out.append({"pair": sorted((a, b)),
+                        "witness_ab": edges[(a, b)],
+                        "witness_ba": edges[(b, a)]})
+    return out
+
+
+def long_holds() -> List[dict]:
+    with _registry_guard:
+        return list(_long_holds)
+
+
+def report() -> dict:
+    with _registry_guard:
+        n_edges = len(_edges)
+    return {"installed": _installed, "order_edges": n_edges,
+            "inversions": inversions(), "long_holds": long_holds()}
+
+
+def dump_report(path: str) -> None:
+    rep = report()
+    with _registry_guard:
+        rep["edges"] = [{"held": a, "acquired": b} for (a, b) in _edges]
+    with open(path, "w") as fh:
+        json.dump(rep, fh, indent=1)
+
+
+def format_inversions(invs: Optional[List[dict]] = None) -> str:
+    invs = inversions() if invs is None else invs
+    lines = []
+    for inv in invs:
+        a, b = inv["pair"]
+        lines.append("LOCK ORDER INVERSION: %s <-> %s" % (a, b))
+        for tag in ("witness_ab", "witness_ba"):
+            w = inv[tag]
+            lines.append("  %s -> %s  [thread %s]"
+                         % (w["held"], w["acquired"], w["thread"]))
+            lines.append("    " + w["stack"].strip().replace("\n", "\n    "))
+    return "\n".join(lines)

@@ -1,0 +1,930 @@
+"""Static lock-graph extraction for the Truffle runtime (stdlib ``ast`` only).
+
+The model
+---------
+A **lock identity** is a string key naming the declaration site, not the
+instance: ``"Buffer._lock"`` (every Buffer's ``self._lock``),
+``"netsim:module:_GRANTS"`` (a module-level lock), or
+``"workflow.WorkflowRunner.run:lock"`` (a function-local lock). Conditions
+alias their underlying lock (``threading.Condition(self._lock)`` →
+``Buffer._lock``); a bare ``Condition()`` owns its key. Collapsing
+instances onto declaration sites is the classic lockdep trade: it can
+merge two instances of one class into a false cycle, but it makes the
+"global order over declaration sites" discipline checkable at all.
+
+The walk
+--------
+Every method / module function / nested-and-returned closure is a root,
+analyzed with an empty held set; each ``with <lock>:`` extends the held
+set for its body, and calls are followed **interprocedurally** carrying
+the caller's held set (memoized on ``(callee, held)``). Calls are
+resolved through a light type environment: ``self``, annotated params,
+dataclass field annotations, ``self.x = ClassName(...)`` assignments in
+``__init__``, plus a documented table of repo wiring hints
+(:data:`NAME_HINTS` / :data:`RETURN_HINTS`) for attributes the AST alone
+can't type. Three special edges make the data plane's real re-entrancy
+visible:
+
+* ``bus.publish(topic, …)`` expands to every subscriber registered for
+  that topic (constant-topic matching), analyzed with the *caller's*
+  held set — the bus delivers callbacks after releasing its own lock,
+  so the caller's locks are exactly what subscribers run under.
+* callback attributes (``buffer.on_residency = digests.listener(n)``,
+  ``health.on_degraded = cluster._on_node_degraded``) are bound by a
+  global assignment scan; invoking the attribute expands to the bound
+  targets (closure factories are followed into their returned ``def``).
+* ``threading.Thread(target=f)`` / ``executor.submit(f, …)`` sever the
+  held set: ``f`` runs on another thread, so it is enqueued as a fresh
+  root instead of inheriting the spawner's locks.
+
+Facts collected (consumed by :mod:`repro.analysis.rules`): lock
+acquisition edges, blocking calls with the held set at the call site,
+``self``-attribute writes with the held set, ``_locked``-suffix call
+sites, and broad exception handlers.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+# ---------------------------------------------------------------- constants
+
+#: attribute/parameter-name → class hints for receivers the AST can't type.
+#: Applied only when the named class was actually parsed, so fixtures and
+#: foreign trees are unaffected. This is repo wiring knowledge (Cluster's
+#: attribute names), kept here so the analyzer stays annotation-free.
+NAME_HINTS: Dict[str, str] = {
+    "cluster": "Cluster", "bus": "EventBus", "_bus": "EventBus",
+    "buffer": "Buffer", "_buffer": "Buffer", "buf": "Buffer",
+    "digests": "DigestRegistry", "registry": "DigestRegistry",
+    "relays": "RelayTable", "health": "NodeHealthMonitor",
+    "scheduler": "Scheduler", "telemetry": "LinkTelemetry",
+    "platform": "Platform", "truffle": "TruffleInstance",
+    "watcher": "Watcher", "engine": "DataEngine",
+    "prefetcher": "Prefetcher", "network": "NetworkFabric",
+    "channel": "Channel", "ch": "Channel",
+    "node": "Node", "target": "Node", "src": "Node", "dst": "Node",
+}
+
+#: (class, method) → class of the return value, for call-chain receivers.
+RETURN_HINTS: Dict[Tuple[str, str], str] = {
+    ("Cluster", "node"): "Node",
+    ("NetworkFabric", "channel"): "Channel",
+}
+
+#: ``.attr(...)`` calls that block the calling thread (R2 candidates).
+#: ``.wait`` is handled separately (own-condition exemption); ``.join``
+#: is guarded against string/path joins; ``.publish`` only fires for
+#: EventBus-typed/bus-named receivers (``DigestRegistry.publish`` is a
+#: residency update, not a bus publish).
+BLOCKING_ATTRS = {"sleep", "sleep_until", "result", "wait_for",
+                  "stream", "transfer", "pace"}
+#: bare-name calls that block (module-level helpers).
+BLOCKING_NAMES = {"join_or_stall"}
+
+#: methods where unlocked self-writes are construction, not sharing.
+CONSTRUCTORS = {"__init__", "__post_init__"}
+
+_LOCK_KINDS = {"Lock": "lock", "RLock": "rlock"}
+_MAX_DEPTH = 14
+
+
+# ------------------------------------------------------------------- facts
+
+@dataclass(frozen=True)
+class LockDecl:
+    key: str
+    kind: str           # lock | rlock | cond
+    file: str
+    line: int
+
+
+@dataclass(frozen=True)
+class AcqEdge:
+    """Held ``src`` while acquiring ``dst`` (src None = root acquisition)."""
+    src: Optional[str]
+    dst: str
+    context: str        # qualname of the method containing the acquire
+    file: str
+    line: int
+
+
+@dataclass(frozen=True)
+class BlockFact:
+    """A blocking call made while ``held`` is non-empty."""
+    context: str        # method whose body contains the call site
+    call: str           # human-readable callee, e.g. "bus.publish"
+    held: Tuple[str, ...]
+    file: str
+    line: int
+
+
+@dataclass(frozen=True)
+class WriteFact:
+    cls: str
+    method: str
+    attr: str
+    held: Tuple[str, ...]
+    file: str
+    line: int
+
+
+@dataclass(frozen=True)
+class LockedCallFact:
+    """Call site of a ``*_locked`` method."""
+    context: str
+    callee: str
+    recv_cls: Optional[str]
+    held: Tuple[str, ...]
+    file: str
+    line: int
+
+
+@dataclass(frozen=True)
+class ExceptFact:
+    """Broad handler (Exception/BaseException/bare) that swallows silently:
+    no raise, no call, no reference to the bound exception name."""
+    context: str
+    exc: str
+    file: str
+    line: int
+
+
+# ------------------------------------------------------------------- model
+
+@dataclass
+class ClassModel:
+    name: str
+    module: str
+    file: str
+    locks: Dict[str, LockDecl] = field(default_factory=dict)     # attr → decl
+    cond_alias: Dict[str, str] = field(default_factory=dict)     # cond → lock attr
+    methods: Dict[str, ast.FunctionDef] = field(default_factory=dict)
+    attr_types: Dict[str, str] = field(default_factory=dict)     # attr → class
+    callback_attrs: Set[str] = field(default_factory=set)
+
+    def lock_keys(self) -> Set[str]:
+        return {d.key for d in self.locks.values()}
+
+
+@dataclass
+class FuncEntry:
+    qual: str                       # "Class.meth", "mod.fn", "Class.m::cb"
+    node: ast.FunctionDef
+    module: str
+    file: str
+    cls: Optional[str]              # class providing ``self`` (closures too)
+
+
+class Program:
+    """Parsed model of the analyzed tree + all facts from the walk."""
+
+    def __init__(self) -> None:
+        self.classes: Dict[str, ClassModel] = {}
+        self.funcs: Dict[str, FuncEntry] = {}
+        self.funcs_by_name: Dict[str, str] = {}       # bare module-fn → qual
+        self.module_locks: Dict[Tuple[str, str], LockDecl] = {}
+        self.constants: Dict[str, str] = {}           # NAME → str value
+        self.subscriptions: List[Tuple[Optional[str], str]] = []
+        # (owner class or "*", attr) → bound target quals
+        self.bindings: Dict[Tuple[str, str], Set[str]] = {}
+        self.decls: Dict[str, LockDecl] = {}          # key → decl
+        # facts
+        self.acqs: List[AcqEdge] = []
+        self.blocks: List[BlockFact] = []
+        self.writes: List[WriteFact] = []
+        self.locked_calls: List[LockedCallFact] = []
+        self.excepts: List[ExceptFact] = []
+
+    # -- helpers ----------------------------------------------------------
+    def class_hint(self, name: str) -> Optional[str]:
+        c = NAME_HINTS.get(name)
+        return c if c in self.classes else None
+
+    def add_decl(self, decl: LockDecl) -> None:
+        self.decls.setdefault(decl.key, decl)
+
+    def kind_of(self, key: str) -> str:
+        d = self.decls.get(key)
+        return d.kind if d else "lock"
+
+
+# ------------------------------------------------------------ AST helpers
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` → ["a","b","c"]; None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def _annotation_class(ann: Optional[ast.AST]) -> Optional[str]:
+    """Extract a candidate class name from an annotation node."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        name = ann.value.strip().strip('"')
+        return name.split("[")[-1].rstrip("]").split(".")[-1] or None
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Subscript):        # Optional[X] / "Optional[X]"
+        return _annotation_class(ann.slice)
+    return None
+
+
+def _is_threading_call(call: ast.Call, names: Set[str]) -> Optional[str]:
+    """``threading.Lock()`` / bare ``Lock()`` → matched name, else None."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id == "threading" and f.attr in names:
+        return f.attr
+    if isinstance(f, ast.Name) and f.id in names:
+        return f.id
+    return None
+
+
+def _returned_funcs(fn: ast.FunctionDef) -> List[ast.FunctionDef]:
+    """Nested defs that the function returns (callback factories)."""
+    nested = {n.name: n for n in fn.body if isinstance(n, ast.FunctionDef)}
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            if node.value.id in nested:
+                out.append(nested.pop(node.value.id))
+    return out
+
+
+def _lockish_param(name: str) -> bool:
+    low = name.lower()
+    return "lock" in low or low.endswith(("cond", "_cv", "cv"))
+
+
+# --------------------------------------------------------------- collection
+
+def _collect_module(prog: Program, module: str, path: str,
+                    tree: ast.Module) -> None:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            _collect_class(prog, module, path, node)
+        elif isinstance(node, ast.FunctionDef):
+            qual = f"{module}.{node.name}"
+            prog.funcs[qual] = FuncEntry(qual, node, module, path, None)
+            prog.funcs_by_name.setdefault(node.name, qual)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if isinstance(node.value, ast.Constant) \
+                    and isinstance(node.value.value, str):
+                prog.constants[name] = node.value.value
+            elif isinstance(node.value, ast.Call):
+                kind = _is_threading_call(node.value, set(_LOCK_KINDS))
+                if kind:
+                    decl = LockDecl(f"{module}:module:{name}",
+                                    _LOCK_KINDS[kind], path, node.lineno)
+                    prog.module_locks[(module, name)] = decl
+                    prog.add_decl(decl)
+
+
+def _collect_class(prog: Program, module: str, path: str,
+                   cls: ast.ClassDef) -> None:
+    cm = ClassModel(cls.name, module, path)
+    prog.classes[cls.name] = cm
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef):
+            cm.methods[node.name] = node
+            qual = f"{cls.name}.{node.name}"
+            prog.funcs[qual] = FuncEntry(qual, node, module, path, cls.name)
+            for nested in _returned_funcs(node):
+                nq = f"{qual}::{nested.name}"
+                prog.funcs[nq] = FuncEntry(nq, nested, module, path, cls.name)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                           ast.Name):
+            attr = node.target.id
+            # dataclass field: lock via default_factory, type via annotation
+            if isinstance(node.value, ast.Call):
+                for kw in node.value.keywords:
+                    if kw.arg == "default_factory":
+                        chain = _attr_chain(kw.value) or []
+                        leaf = chain[-1] if chain else ""
+                        if leaf in _LOCK_KINDS:
+                            decl = LockDecl(f"{cls.name}.{attr}",
+                                            _LOCK_KINDS[leaf], path,
+                                            node.lineno)
+                            cm.locks[attr] = decl
+                            prog.add_decl(decl)
+            ann = _annotation_class(node.annotation)
+            if ann and attr not in cm.locks:
+                cm.attr_types[attr] = ann
+
+
+def _infer_attrs(prog: Program) -> None:
+    """Second pass: ``self.x = ...`` in every method → lock decls, condition
+    aliases, attribute types, callback attributes."""
+    for cm in prog.classes.values():
+        for mname, fn in cm.methods.items():
+            params = {a.arg: _annotation_class(a.annotation)
+                      for a in fn.args.args}
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                    continue
+                tgt = node.targets[0]
+                if not (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    continue
+                attr, val = tgt.attr, node.value
+                if isinstance(val, ast.Call):
+                    kind = _is_threading_call(val, set(_LOCK_KINDS))
+                    if kind:
+                        decl = LockDecl(f"{cm.name}.{attr}",
+                                        _LOCK_KINDS[kind], cm.file,
+                                        node.lineno)
+                        cm.locks.setdefault(attr, decl)
+                        prog.add_decl(decl)
+                        continue
+                    if _is_threading_call(val, {"Condition"}):
+                        if val.args and isinstance(val.args[0], ast.Attribute) \
+                                and isinstance(val.args[0].value, ast.Name) \
+                                and val.args[0].value.id == "self":
+                            cm.cond_alias[attr] = val.args[0].attr
+                        else:
+                            decl = LockDecl(f"{cm.name}.{attr}", "cond",
+                                            cm.file, node.lineno)
+                            cm.locks.setdefault(attr, decl)
+                            prog.add_decl(decl)
+                        continue
+                    fname = _attr_chain(val.func)
+                    if fname and fname[-1] in prog.classes:
+                        cm.attr_types.setdefault(attr, fname[-1])
+                    continue
+                if isinstance(val, ast.Name):
+                    pann = params.get(val.id)
+                    if (pann in ("Lock", "RLock")
+                            or (pann is None and mname in CONSTRUCTORS
+                                and _lockish_param(val.id))):
+                        kind = "rlock" if pann == "RLock" else "lock"
+                        decl = LockDecl(f"{cm.name}.{attr}", kind,
+                                        cm.file, node.lineno)
+                        cm.locks.setdefault(attr, decl)
+                        prog.add_decl(decl)
+                    elif pann and pann in prog.classes:
+                        cm.attr_types.setdefault(attr, pann)
+                    elif prog.class_hint(val.id):
+                        cm.attr_types.setdefault(attr, prog.class_hint(val.id))
+                elif isinstance(val, ast.Constant) and val.value is None \
+                        and mname in CONSTRUCTORS:
+                    # ``self.on_residency = None`` style hook slots
+                    cm.callback_attrs.add(attr)
+
+
+def _collect_wiring(prog: Program) -> None:
+    """Global scan for bus subscriptions and callback-attribute bindings."""
+    for entry in list(prog.funcs.values()):
+        cls = entry.cls
+        for node in ast.walk(entry.node):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "subscribe" \
+                        and len(node.args) >= 2:
+                    topic = _const_topic(prog, node.args[0])
+                    for q in _callable_targets(prog, node.args[1], cls):
+                        prog.subscriptions.append((topic, q))
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Attribute):
+                tgt = node.targets[0]
+                if isinstance(tgt.value, ast.Name) and tgt.value.id == "self":
+                    continue                    # own attr, not a wiring site
+                targets = _callable_targets(prog, node.value, cls)
+                if targets:
+                    owner = _owner_class(prog, tgt.value, cls) or "*"
+                    key = (owner, tgt.attr)
+                    prog.bindings.setdefault(key, set()).update(targets)
+
+
+def _const_topic(prog: Program, node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Name):
+        return prog.constants.get(node.id)
+    return None
+
+
+def _owner_class(prog: Program, recv: ast.AST, cls: Optional[str]
+                 ) -> Optional[str]:
+    chain = _attr_chain(recv)
+    if not chain:
+        return None
+    if chain == ["self"] and cls:
+        return cls
+    cur: Optional[str] = None
+    if chain[0] == "self" and cls:
+        cur = cls
+        chain = chain[1:]
+    for part in chain:
+        nxt = None
+        if cur and cur in prog.classes:
+            nxt = prog.classes[cur].attr_types.get(part)
+        if nxt is None:
+            nxt = prog.class_hint(part)
+        cur = nxt
+        if cur is None:
+            return None
+    return cur
+
+
+def _callable_targets(prog: Program, val: ast.AST, cls: Optional[str]
+                      ) -> List[str]:
+    """Resolve an expression used as a callable to method quals."""
+    if isinstance(val, ast.Attribute):
+        owner = _owner_class(prog, val.value, cls)
+        if owner and val.attr in prog.classes.get(owner, ClassModel(
+                "", "", "")).methods:
+            return [f"{owner}.{val.attr}"]
+        return []
+    if isinstance(val, ast.Name):
+        q = prog.funcs_by_name.get(val.id)
+        return [q] if q else []
+    if isinstance(val, ast.Call):
+        # closure factory: cluster wires buffer.on_residency =
+        # digests.listener(name) — follow into the returned nested def
+        for q in _callable_targets(prog, val.func, cls):
+            nested = [k for k in prog.funcs if k.startswith(q + "::")]
+            if nested:
+                return nested
+    return []
+
+
+# ------------------------------------------------------------------ walker
+
+class _Env:
+    __slots__ = ("cls", "qual", "locals")
+
+    def __init__(self, cls: Optional[str], qual: str,
+                 locals_: Optional[dict] = None):
+        self.cls = cls
+        self.qual = qual
+        self.locals: Dict[str, tuple] = locals_ or {}
+
+
+class Walker:
+    def __init__(self, prog: Program):
+        self.p = prog
+        self._memo: Set[Tuple[str, FrozenSet[str]]] = set()
+        self._queue: List[Tuple[str, FrozenSet[str]]] = []
+
+    # -- entry ------------------------------------------------------------
+    def run(self) -> None:
+        for qual, entry in self.p.funcs.items():
+            # a ``*_locked`` method's contract is "caller holds the owning
+            # lock" (R4 checks the call sites) — analyze its body under
+            # that contract instead of flagging it against itself
+            held = frozenset()
+            name = qual.rsplit("::", 1)[-1].rsplit(".", 1)[-1]
+            if name.endswith("_locked") and entry.cls in self.p.classes:
+                key = self._primary_lock(entry.cls)
+                if key:
+                    held = frozenset({key})
+            self._enqueue(qual, held)
+        while self._queue:
+            qual, held = self._queue.pop()
+            entry = self.p.funcs.get(qual)
+            if entry is None:
+                continue
+            env = self._env_for(entry)
+            self._stmts(entry.node.body, env, held, entry, 0)
+
+    def _primary_lock(self, cls: str) -> Optional[str]:
+        cm = self.p.classes[cls]
+        for attr in ("_lock", "lock"):
+            if attr in cm.locks:
+                return cm.locks[attr].key
+        for decl in cm.locks.values():
+            if decl.kind != "cond":
+                return decl.key
+        return next(iter(cm.lock_keys()), None)
+
+    def _enqueue(self, qual: str, held: FrozenSet[str]) -> None:
+        key = (qual, held)
+        if key not in self._memo:
+            self._memo.add(key)
+            self._queue.append(key)
+
+    def _env_for(self, entry: FuncEntry) -> _Env:
+        env = _Env(entry.cls, entry.qual)
+        if entry.cls:
+            # covers closures too, where ``self`` is a free variable of
+            # the enclosing method rather than a parameter
+            env.locals["self"] = ("type", entry.cls)
+        args = entry.node.args
+        params = list(args.args) + list(args.kwonlyargs)
+        for i, a in enumerate(params):
+            if i == 0 and a.arg == "self" and entry.cls:
+                env.locals["self"] = ("type", entry.cls)
+                continue
+            ann = _annotation_class(a.annotation)
+            if ann and ann in self.p.classes:
+                env.locals[a.arg] = ("type", ann)
+            elif self.p.class_hint(a.arg):
+                env.locals[a.arg] = ("type", self.p.class_hint(a.arg))
+            elif _lockish_param(a.arg):
+                key = f"{entry.qual}:param:{a.arg}"
+                self.p.add_decl(LockDecl(key, "lock", entry.file,
+                                         entry.node.lineno))
+                env.locals[a.arg] = ("lock", key)
+        return env
+
+    # -- statements -------------------------------------------------------
+    def _stmts(self, body, env, held, entry, depth) -> None:
+        for st in body:
+            self._stmt(st, env, held, entry, depth)
+
+    def _stmt(self, st, env, held, entry, depth) -> None:
+        p = self.p
+        if isinstance(st, (ast.With, ast.AsyncWith)):
+            new_held = held
+            for item in st.items:
+                self._expr(item.context_expr, env, new_held, entry, depth)
+                key = self._lock_of(item.context_expr, env)
+                if key is not None:
+                    for h in sorted(new_held) or [None]:
+                        p.acqs.append(AcqEdge(h, key, env.qual, entry.file,
+                                              st.lineno))
+                    new_held = new_held | {key}
+            self._stmts(st.body, env, new_held, entry, depth)
+        elif isinstance(st, ast.Assign):
+            self._expr(st.value, env, held, entry, depth)
+            for tgt in st.targets:
+                self._write_target(tgt, env, held, entry)
+            if len(st.targets) == 1 and isinstance(st.targets[0], ast.Name):
+                b = self._binding(st.value, env, entry, st.targets[0].id)
+                if b is not None:
+                    env.locals[st.targets[0].id] = b
+                else:
+                    env.locals.pop(st.targets[0].id, None)
+        elif isinstance(st, ast.AugAssign):
+            self._expr(st.value, env, held, entry, depth)
+            self._write_target(st.target, env, held, entry)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                self._expr(st.value, env, held, entry, depth)
+                self._write_target(st.target, env, held, entry)
+        elif isinstance(st, ast.Try):
+            self._stmts(st.body, env, held, entry, depth)
+            for h in st.handlers:
+                self._except(h, env, entry)
+                self._stmts(h.body, env, held, entry, depth)
+            self._stmts(st.orelse, env, held, entry, depth)
+            self._stmts(st.finalbody, env, held, entry, depth)
+        elif isinstance(st, ast.If):
+            self._expr(st.test, env, held, entry, depth)
+            self._stmts(st.body, env, held, entry, depth)
+            self._stmts(st.orelse, env, held, entry, depth)
+        elif isinstance(st, ast.While):
+            self._expr(st.test, env, held, entry, depth)
+            self._stmts(st.body, env, held, entry, depth)
+            self._stmts(st.orelse, env, held, entry, depth)
+        elif isinstance(st, ast.For):
+            self._expr(st.iter, env, held, entry, depth)
+            self._stmts(st.body, env, held, entry, depth)
+            self._stmts(st.orelse, env, held, entry, depth)
+        elif isinstance(st, ast.FunctionDef):
+            nq = f"{env.qual}::{st.name}"
+            if nq not in self.p.funcs:
+                self.p.funcs[nq] = FuncEntry(nq, st, entry.module,
+                                             entry.file, env.cls)
+            env.locals[st.name] = ("method", nq)
+            self._enqueue(nq, frozenset())
+        elif isinstance(st, (ast.Return, ast.Expr, ast.Raise, ast.Assert,
+                             ast.Delete)):
+            for child in ast.iter_child_nodes(st):
+                self._expr(child, env, held, entry, depth)
+        else:
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self._expr(child, env, held, entry, depth)
+
+    def _write_target(self, tgt, env, held, entry) -> None:
+        """Record self-attribute writes (plain and through a subscript)."""
+        if isinstance(tgt, ast.Tuple):
+            for el in tgt.elts:
+                self._write_target(el, env, held, entry)
+            return
+        node = tgt
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                          ast.Name) \
+                and node.value.id == "self" and env.cls:
+            cm = self.p.classes.get(env.cls)
+            if cm is None or node.attr in cm.locks \
+                    or node.attr in cm.cond_alias:
+                return
+            method = env.qual.split(".", 1)[-1]
+            self.p.writes.append(WriteFact(env.cls, method, node.attr,
+                                           tuple(sorted(held)), entry.file,
+                                           tgt.lineno))
+
+    def _except(self, h: ast.ExceptHandler, env, entry) -> None:
+        broad = h.type is None or (
+            isinstance(h.type, ast.Name)
+            and h.type.id in ("Exception", "BaseException"))
+        if not broad:
+            return
+        names = set()
+        has_stmt = False
+        for node in h.body:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Raise, ast.Call)):
+                    has_stmt = True
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+        if has_stmt or (h.name and h.name in names):
+            return
+        exc = h.type.id if isinstance(h.type, ast.Name) else "bare"
+        self.p.excepts.append(ExceptFact(env.qual, exc, entry.file, h.lineno))
+
+    # -- expressions ------------------------------------------------------
+    def _expr(self, node, env, held, entry, depth) -> None:
+        if node is None:
+            return
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            self._call(call, env, held, entry, depth)
+
+    def _call(self, call: ast.Call, env, held, entry, depth) -> None:
+        p = self.p
+        func = call.func
+        name = None
+        if isinstance(func, ast.Attribute):
+            name = func.attr
+        elif isinstance(func, ast.Name):
+            name = func.id
+
+        # thread spawn severs the held set: target runs elsewhere
+        if self._thread_spawn(call, env, entry):
+            return
+
+        # blocking classification (R2 facts)
+        if held and name:
+            self._blocking(call, name, env, held, entry)
+
+        # _locked-suffix discipline (R4 facts)
+        if name and name.endswith("_locked") and isinstance(func,
+                                                            ast.Attribute):
+            recv = self._type_of(func.value, env)
+            p.locked_calls.append(LockedCallFact(
+                env.qual, name, recv, tuple(sorted(held)), entry.file,
+                call.lineno))
+
+        # interprocedural recursion
+        for callee in self._callees(call, env):
+            if depth < _MAX_DEPTH:
+                self._inline(callee, held, depth + 1)
+
+        # bus publish: expand subscribers with the CALLER's held set
+        if name == "publish" and isinstance(func, ast.Attribute) \
+                and self._is_bus(func.value, env):
+            topic = _const_topic(p, call.args[0]) if call.args else None
+            for sub_topic, sub_qual in p.subscriptions:
+                if topic is None or sub_topic is None or topic == sub_topic:
+                    if depth < _MAX_DEPTH:
+                        self._inline(sub_qual, held, depth + 1)
+
+        # callback attribute invocation: self.on_residency(...) / cb(...)
+        for target in self._callback_targets(func, env):
+            if depth < _MAX_DEPTH:
+                self._inline(target, held, depth + 1)
+
+    def _inline(self, qual: str, held: FrozenSet[str], depth: int) -> None:
+        entry = self.p.funcs.get(qual)
+        if entry is None:
+            return
+        key = (qual, held)
+        if key in self._memo:
+            return
+        self._memo.add(key)
+        env = self._env_for(entry)
+        self._stmts(entry.node.body, env, held, entry, depth)
+
+    def _thread_spawn(self, call: ast.Call, env, entry) -> bool:
+        func = call.func
+        chain = _attr_chain(func) or []
+        target = None
+        if chain and chain[-1] == "Thread" and (
+                len(chain) == 1 or chain[0] == "threading"):
+            for kw in call.keywords:
+                if kw.arg == "target":
+                    target = kw.value
+        elif chain and chain[-1] == "submit" and call.args:
+            target = call.args[0]
+        if target is None:
+            return False
+        for q in _callable_targets(self.p, target, env.cls):
+            self._enqueue(q, frozenset())
+        if isinstance(target, ast.Name):
+            b = env.locals.get(target.id)
+            if b and b[0] == "method":
+                self._enqueue(b[1], frozenset())
+        return chain[-1] == "Thread"
+
+    def _blocking(self, call, name, env, held, entry) -> None:
+        func = call.func
+        descr = None
+        if isinstance(func, ast.Attribute):
+            if name in BLOCKING_ATTRS:
+                recv = _attr_chain(func.value)
+                descr = f"{recv[-1] if recv else '?'}.{name}"
+            elif name == "wait":
+                key = self._lock_of(func.value, env)
+                if key is not None and held == frozenset({key}):
+                    return      # waiting on the ONLY held lock's condition
+                recv = _attr_chain(func.value)
+                descr = f"{recv[-1] if recv else '?'}.wait"
+            elif name == "join":
+                if isinstance(func.value, (ast.Constant, ast.JoinedStr,
+                                           ast.BinOp)):
+                    return      # str/bytes join
+                recv = _attr_chain(func.value)
+                if recv and recv[0] in ("os", "posixpath", "ntpath"):
+                    return
+                descr = f"{recv[-1] if recv else '?'}.join"
+            elif name == "publish" and self._is_bus(func.value, env):
+                descr = "bus.publish"
+        elif isinstance(func, ast.Name) and name in BLOCKING_NAMES:
+            descr = name
+        if descr is not None:
+            self.p.blocks.append(BlockFact(env.qual, descr,
+                                           tuple(sorted(held)),
+                                           entry.file, call.lineno))
+
+    def _is_bus(self, recv: ast.AST, env) -> bool:
+        t = self._type_of(recv, env)
+        if t == "EventBus":
+            return True
+        chain = _attr_chain(recv)
+        return bool(chain) and chain[-1] in ("bus", "_bus")
+
+    # -- resolution -------------------------------------------------------
+    def _type_of(self, node: ast.AST, env) -> Optional[str]:
+        p = self.p
+        if isinstance(node, ast.Name):
+            b = env.locals.get(node.id)
+            if b and b[0] == "type":
+                return b[1]
+            return p.class_hint(node.id)
+        if isinstance(node, ast.Attribute):
+            base = self._type_of(node.value, env)
+            if base and base in p.classes:
+                t = p.classes[base].attr_types.get(node.attr)
+                if t:
+                    return t
+            return p.class_hint(node.attr)
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in p.classes:
+                return f.id
+            if isinstance(f, ast.Attribute):
+                base = self._type_of(f.value, env)
+                if base:
+                    hint = RETURN_HINTS.get((base, f.attr))
+                    if hint:
+                        return hint
+        return None
+
+    def _lock_of(self, node: ast.AST, env) -> Optional[str]:
+        """Resolve an expression to a lock key (conditions → underlying)."""
+        p = self.p
+        if isinstance(node, ast.Name):
+            b = env.locals.get(node.id)
+            if b and b[0] in ("lock", "cond"):
+                return b[1]
+            entry = self.p.funcs.get(env.qual)
+            mod = entry.module if entry else ""
+            decl = p.module_locks.get((mod, node.id))
+            return decl.key if decl else None
+        if isinstance(node, ast.Attribute):
+            base = self._type_of(node.value, env)
+            if base and base in p.classes:
+                cm = p.classes[base]
+                attr = node.attr
+                if attr in cm.cond_alias:
+                    attr = cm.cond_alias[attr]
+                if attr in cm.locks:
+                    return cm.locks[attr].key
+        return None
+
+    def _binding(self, val: ast.AST, env, entry,
+                 varname: Optional[str] = None) -> Optional[tuple]:
+        p = self.p
+        if isinstance(val, ast.Call):
+            kind = _is_threading_call(val, set(_LOCK_KINDS))
+            if kind:
+                key = f"{env.qual}:{varname or 'local'}"
+                p.add_decl(LockDecl(key, _LOCK_KINDS[kind], entry.file,
+                                    val.lineno))
+                return ("lock", key)
+            if _is_threading_call(val, {"Condition"}):
+                if val.args:
+                    under = self._lock_of(val.args[0], env)
+                    if under:
+                        return ("cond", under)
+                key = f"{env.qual}:{varname or 'localcond'}"
+                p.add_decl(LockDecl(key, "cond", entry.file, val.lineno))
+                return ("cond", key)
+            t = self._type_of(val, env)
+            if t:
+                return ("type", t)
+            targets = _callable_targets(p, val, env.cls)
+            if targets:
+                return ("method", targets[0])
+            return None
+        key = self._lock_of(val, env)
+        if key:
+            return ("lock", key)
+        if isinstance(val, ast.Attribute) and isinstance(val.value, ast.Name)\
+                and val.value.id == "self" and env.cls:
+            # callback-attr alias: cb = self.on_residency
+            if (env.cls, val.attr) in p.bindings \
+                    or ("*", val.attr) in p.bindings:
+                return ("callback", env.cls, val.attr)
+            targets = _callable_targets(p, val, env.cls)
+            if targets:
+                return ("method", targets[0])
+        t = self._type_of(val, env)
+        if t:
+            return ("type", t)
+        return None
+
+    def _callees(self, call: ast.Call, env) -> List[str]:
+        p = self.p
+        func = call.func
+        out: List[str] = []
+        if isinstance(func, ast.Name):
+            b = env.locals.get(func.id)
+            if b and b[0] == "method":
+                out.append(b[1])
+            elif func.id in p.classes:
+                init = f"{func.id}.__init__"
+                if init in p.funcs:
+                    out.append(init)
+            elif func.id in p.funcs_by_name:
+                out.append(p.funcs_by_name[func.id])
+        elif isinstance(func, ast.Attribute):
+            recv = self._type_of(func.value, env)
+            if recv and recv in p.classes \
+                    and func.attr in p.classes[recv].methods:
+                out.append(f"{recv}.{func.attr}")
+        return out
+
+    def _callback_targets(self, func: ast.AST, env) -> List[str]:
+        p = self.p
+        owner = attr = None
+        if isinstance(func, ast.Attribute):
+            owner = self._type_of(func.value, env)
+            attr = func.attr
+        elif isinstance(func, ast.Name):
+            b = env.locals.get(func.id)
+            if b and b[0] == "callback":
+                owner, attr = b[1], b[2]
+        if attr is None:
+            return []
+        out: Set[str] = set()
+        if owner:
+            out |= p.bindings.get((owner, attr), set())
+        out |= p.bindings.get(("*", attr), set())
+        return sorted(out)
+
+
+# --------------------------------------------------------------- top level
+
+def analyze_paths(paths: List[str]) -> Program:
+    """Parse every ``.py`` under ``paths`` and run the full walk."""
+    prog = Program()
+    files: List[Tuple[str, str]] = []
+    for root in paths:
+        if os.path.isfile(root):
+            files.append((os.path.splitext(os.path.basename(root))[0], root))
+            continue
+        for dirpath, _dirs, names in os.walk(root):
+            for fn in sorted(names):
+                if fn.endswith(".py"):
+                    mod = os.path.splitext(fn)[0]
+                    files.append((mod, os.path.join(dirpath, fn)))
+    trees = []
+    for mod, path in files:
+        with open(path, "r", encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+        trees.append((mod, path, tree))
+        _collect_module(prog, mod, path, tree)
+    _infer_attrs(prog)
+    _collect_wiring(prog)
+    Walker(prog).run()
+    return prog

@@ -1,0 +1,275 @@
+"""Rule evaluation over the extracted lock graph + the suppression baseline.
+
+Rules
+-----
+R1  lock-order cycles: two lock identities acquired in both orders on some
+    pair of paths (plus self-acquisition of a non-reentrant lock). Each
+    strongly connected component of the acquisition graph is one finding.
+R2  blocking calls under a lock: ``Condition.wait`` (unless waiting on the
+    only held lock's own condition), ``Channel.stream/transfer``,
+    ``clock/time.sleep``, ``Future.result``, ``wait_for``, thread joins,
+    and ``bus.publish`` reached — possibly interprocedurally — while any
+    lock is held.
+R3  unlocked shared writes: in a class that owns a lock, a ``self``
+    attribute that IS written under the class lock somewhere (i.e. it is
+    lock-guarded by convention) written on another path with no class
+    lock held. Constructors are exempt.
+R4  ``*_locked``-suffix methods (the repo's "caller must hold the lock"
+    convention) called without a lock of the receiver's class held.
+R5  silent broad excepts: ``except Exception/BaseException:`` (or bare)
+    whose body neither raises, calls anything (logging/accounting), nor
+    references the caught exception — errors vanish without a trace.
+
+Fingerprints (``Violation.ident``) are built from qualnames + lock keys,
+never line numbers, so the committed baseline survives unrelated edits.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.lockgraph import Program
+
+RULE_TITLES = {
+    "R1": "lock-order cycle",
+    "R2": "blocking call while holding a lock",
+    "R3": "unlocked write to a lock-guarded attribute",
+    "R4": "_locked method called without the owning lock",
+    "R5": "silent broad except",
+}
+
+
+@dataclass
+class Violation:
+    rule: str
+    ident: str          # stable fingerprint (baseline key; no line numbers)
+    message: str
+    file: str
+    line: int
+    held: Tuple[str, ...] = ()
+
+    def format(self) -> str:
+        where = f"{self.file}:{self.line}"
+        return f"[{self.rule}] {where}: {self.message}"
+
+
+# ----------------------------------------------------------------- R1
+
+def _cycles(prog: Program) -> List[Violation]:
+    graph: Dict[str, Set[str]] = {}
+    witness: Dict[Tuple[str, str], Tuple[str, str, int]] = {}
+    for a in prog.acqs:
+        if a.src is None:
+            continue
+        if a.src == a.dst:
+            # re-acquiring a held lock: fine for an RLock, deadlock else
+            if prog.kind_of(a.dst) == "rlock":
+                continue
+        graph.setdefault(a.src, set()).add(a.dst)
+        witness.setdefault((a.src, a.dst), (a.context, a.file, a.line))
+
+    out: List[Violation] = []
+    seen_idents: Set[str] = set()
+    # self-loops first (non-reentrant re-acquisition)
+    for src, dsts in graph.items():
+        if src in dsts:
+            ctx, f, ln = witness[(src, src)]
+            ident = f"R1|self|{src}"
+            out.append(Violation("R1", ident,
+                                 f"non-reentrant lock {src} re-acquired "
+                                 f"while held (in {ctx})", f, ln))
+            seen_idents.add(ident)
+    # SCCs (iterative Tarjan) over the rest
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on: Set[str] = set()
+    stack: List[str] = []
+    counter = [0]
+    sccs: List[List[str]] = []
+
+    def strongconnect(v: str) -> None:
+        work = [(v, iter(sorted(graph.get(v, ()))))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on.add(w)
+                    work.append((w, iter(sorted(graph.get(w, ())))))
+                    advanced = True
+                    break
+                if w in on:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on.discard(w)
+                    comp.append(w)
+                    if w == node:
+                        break
+                if len(comp) > 1:
+                    sccs.append(sorted(comp))
+
+    for v in sorted(graph):
+        if v not in index:
+            strongconnect(v)
+    for comp in sccs:
+        ident = "R1|cycle|" + "+".join(comp)
+        if ident in seen_idents:
+            continue
+        edges = [(s, d) for (s, d) in witness
+                 if s in comp and d in comp and s != d]
+        ctx, f, ln = witness[edges[0]] if edges else ("?", "?", 0)
+        detail = ", ".join(
+            f"{s}->{d} (in {witness[(s, d)][0]})" for s, d in sorted(edges))
+        out.append(Violation("R1", ident,
+                             f"lock-order cycle over {{{', '.join(comp)}}}: "
+                             f"{detail}", f, ln))
+    return out
+
+
+# ----------------------------------------------------------------- R2-R5
+
+def _blocking(prog: Program) -> List[Violation]:
+    out = []
+    for b in prog.blocks:
+        ident = f"R2|{b.context}|{b.call}|{'+'.join(b.held)}"
+        out.append(Violation(
+            "R2", ident,
+            f"{b.context} calls blocking {b.call}() while holding "
+            f"{', '.join(b.held)}", b.file, b.line, b.held))
+    return out
+
+
+def _unlocked_writes(prog: Program) -> List[Violation]:
+    out = []
+    guarded: Dict[Tuple[str, str], bool] = {}
+    for w in prog.writes:
+        cm = prog.classes.get(w.cls)
+        if cm is None or not cm.locks:
+            continue
+        own = cm.lock_keys()
+        if own & set(w.held):
+            guarded[(w.cls, w.attr)] = True
+    for w in prog.writes:
+        cm = prog.classes.get(w.cls)
+        if cm is None or not cm.locks:
+            continue
+        if w.method in ("__init__", "__post_init__"):
+            continue
+        if not guarded.get((w.cls, w.attr)):
+            continue            # never lock-guarded: a config/hook slot
+        if cm.lock_keys() & set(w.held):
+            continue
+        ident = f"R3|{w.cls}.{w.method}|{w.attr}"
+        out.append(Violation(
+            "R3", ident,
+            f"{w.cls}.{w.method} writes self.{w.attr} (elsewhere guarded by "
+            f"{'/'.join(sorted(cm.lock_keys()))}) without the lock",
+            w.file, w.line, w.held))
+    return out
+
+
+def _locked_suffix(prog: Program) -> List[Violation]:
+    out = []
+    for c in prog.locked_calls:
+        if c.recv_cls and c.recv_cls in prog.classes:
+            own = prog.classes[c.recv_cls].lock_keys()
+            ok = bool(own & set(c.held)) if own else bool(c.held)
+        else:
+            ok = bool(c.held)
+        if ok:
+            continue
+        ident = f"R4|{c.context}|{c.callee}"
+        out.append(Violation(
+            "R4", ident,
+            f"{c.context} calls {c.callee}() without holding "
+            f"{(c.recv_cls or 'the owner') + chr(39) + 's'} lock "
+            f"(held: {', '.join(c.held) or 'nothing'})",
+            c.file, c.line, c.held))
+    return out
+
+
+def _silent_excepts(prog: Program) -> List[Violation]:
+    out = []
+    counts: Dict[str, int] = {}
+    for e in prog.excepts:
+        n = counts.get(e.context, 0)
+        counts[e.context] = n + 1
+        suffix = f"#{n}" if n else ""
+        ident = f"R5|{e.context}|{e.exc}{suffix}"
+        out.append(Violation(
+            "R5", ident,
+            f"{e.context}: `except {e.exc}` swallows the error with no "
+            f"raise/log/record", e.file, e.line))
+    return out
+
+
+# ------------------------------------------------------------- evaluation
+
+def evaluate(prog: Program) -> List[Violation]:
+    out: List[Violation] = []
+    out += _cycles(prog)
+    out += _blocking(prog)
+    out += _unlocked_writes(prog)
+    out += _locked_suffix(prog)
+    out += _silent_excepts(prog)
+    # one finding per fingerprint (interprocedural walks can reach the
+    # same site through several contexts)
+    uniq: Dict[str, Violation] = {}
+    for v in out:
+        uniq.setdefault(v.ident, v)
+    return sorted(uniq.values(), key=lambda v: (v.rule, v.ident))
+
+
+# --------------------------------------------------------------- baseline
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """``{ident: rationale}`` from a baseline file (missing → empty)."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        return {}
+    return {s["ident"]: s.get("rationale", "")
+            for s in data.get("suppressions", [])}
+
+
+def save_baseline(path: str, violations: List[Violation],
+                  existing: Optional[Dict[str, str]] = None) -> None:
+    """Write the current findings as the baseline, keeping rationales
+    already recorded for surviving idents."""
+    existing = existing or {}
+    sup = [{"ident": v.ident,
+            "rule": v.rule,
+            "rationale": existing.get(v.ident,
+                                      "TODO: justify or fix"),
+            }
+           for v in violations]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "suppressions": sup}, fh, indent=2)
+        fh.write("\n")
+
+
+def split_baselined(violations: List[Violation], baseline: Dict[str, str]
+                    ) -> Tuple[List[Violation], List[Violation]]:
+    """(new, suppressed) partition of ``violations`` against the baseline."""
+    new, old = [], []
+    for v in violations:
+        (old if v.ident in baseline else new).append(v)
+    return new, old

@@ -59,6 +59,18 @@ class BufferOfflineError(IOError):
     in ``wait_for``/``BufferReader`` are woken and raised out."""
 
 
+#: What a dead or partitioned peer can throw at a best-effort data-plane
+#: operation (poisoning a remote buffer, evacuating CAS content, a relay
+#: hop): the node died (NodeCrashError / KeyError for a deregistered
+#: node), the link went dark (LinkDownError), the buffer was wiped
+#: (BufferOfflineError and other IOErrors), or the operation timed out.
+#: Best-effort callers catch THIS tuple — a typed contract — instead of
+#: a blanket ``except Exception`` that would also swallow programming
+#: errors (AttributeError, TypeError) silently.
+DATA_PLANE_FAULTS = (NodeCrashError, LinkDownError, TransferStallError,
+                     IOError, KeyError, TimeoutError)
+
+
 class StageExecutionError(RuntimeError):
     """A workflow stage exhausted its retry budget (or had none). Carries
     the failure context the raw errbox propagation used to drop: which

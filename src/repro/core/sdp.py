@@ -35,7 +35,7 @@ import uuid
 from typing import Optional, Tuple
 
 from repro.core.buffer import content_digest
-from repro.core.errors import NodeCrashError
+from repro.core.errors import DATA_PLANE_FAULTS, NodeCrashError
 from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
                                  seed_content, ship_payload)
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
@@ -157,8 +157,9 @@ class SDP:
                 if placed is not None:
                     try:
                         cluster.node(placed["node"]).buffer.poison(buf_key)
-                    except Exception:   # noqa: BLE001 — target may be dead too
-                        pass
+                    except DATA_PLANE_FAULTS:
+                        pass            # target may be dead too — the
+                        #                 original error in errbox wins
 
         th = threading.Thread(target=data_path, daemon=True,
                               name=f"sdp-{request.fn}-{inv_id[:6]}")

@@ -8,6 +8,7 @@ job's cold start) and keeps a double-buffer ahead of the consumer."""
 from __future__ import annotations
 
 import io
+import queue
 import threading
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
@@ -49,7 +50,6 @@ class TruffleDataLoader:
     def __init__(self, dataset: TokenDataset, storage, *,
                  prefetch_depth: int = 2, start_step: int = 0,
                  buffer: Optional[Buffer] = None, populate: int = 0):
-        import queue
         self.dataset = dataset
         self.storage = storage
         self.depth = prefetch_depth
@@ -89,7 +89,7 @@ class TruffleDataLoader:
             while not self._stop.is_set():
                 try:
                     i = self._q.get(timeout=0.2)
-                except Exception:  # noqa: BLE001 — queue.Empty
+                except queue.Empty:
                     continue
                 key = self._key(i)
                 if not self.storage.exists(key):

@@ -144,8 +144,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             m2 = _compile_cell(_probe_cfg(cfg, 2), shape, mesh, multi_pod,
                                step_kw, jit_kw)
             rec.update(_extrapolate(m1, m2, cfg.num_periods))
-        except Exception as e:  # noqa: BLE001 — probes are best-effort
+        except Exception as e:  # noqa: BLE001 — probes are best-effort:
+            # the error (any compile failure) is RECORDED on the cell, not
+            # swallowed — the roofline table shows the probe hole
             rec["probe_error"] = str(e)[:500]
+            rec["probe_trace"] = traceback.format_exc()[-2000:]
 
     rec["model_flops"] = model_flops(cfg, shape)
     if rec.get("flops_est"):

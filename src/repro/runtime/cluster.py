@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.buffer import Buffer
+from repro.core.errors import DATA_PLANE_FAULTS
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 from repro.runtime.events import EventBus
 from repro.runtime.health import DEGRADED, DEAD, NodeHealthMonitor
@@ -193,8 +194,10 @@ class Cluster:
                              stream=True, digest=digest,
                              chunk_bytes=DEFAULT_CHUNK_BYTES)
                 moved.append(digest)
-            except Exception:
-                continue                    # node may die mid-evacuation
+            except DATA_PLANE_FAULTS:
+                continue                    # node may die mid-evacuation;
+                #                             anything else is a bug and
+                #                             propagates
         self.bus.publish("node.evacuated", {"node": name,
                                             "digests": len(moved),
                                             "t": self.clock.now()})

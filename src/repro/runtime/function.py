@@ -213,8 +213,9 @@ class FunctionInstance:
     def provision(self, record: LifecycleRecord) -> None:
         """ν + η (+ any Fig.11 extra delay). Real startup_fn runs unscaled."""
         clock = self.cluster.clock
-        self._require_alive()
-        self.state = self.PROVISIONING
+        with self._lock:
+            self._require_alive()
+            self.state = self.PROVISIONING
         clock.sleep((self.spec.provision_s + self.spec.extra_cold_start_s)
                     * self._cpu())
         record.t_prov_end = clock.now()
@@ -222,26 +223,35 @@ class FunctionInstance:
             self.spec.startup_fn()          # real work: e.g. jit compile
         clock.sleep(self.spec.startup_s * self._cpu())
         record.t_startup_end = clock.now()
-        self._require_alive()               # node died during cold start
-        self.state = self.WARM
+        with self._lock:
+            self._require_alive()           # node died during cold start
+            self.state = self.WARM
 
     def invoke(self, request: Request, record: LifecycleRecord) -> bytes:
+        # The lock covers ONLY the state transitions. An instance is
+        # exclusively owned while invoking (cold instances are fresh; warm
+        # ones are popped from the pool under the platform lock), so the
+        # execution itself — which blocks on the input wait and the modeled
+        # compute sleep — must not pin the instance lock: a concurrent
+        # observer (health probe, purge sweep) reading state would otherwise
+        # stall behind an entire function execution.
         clock = self.cluster.clock
         with self._lock:
             self._require_alive()
             self.state = self.EXECUTING
-            inv = Invocation(request, self.node, self.cluster, record)
-            if self.spec.streaming:
-                # handler drives chunk consumption (and models its own
-                # per-chunk compute) via inv.get_input_stream()
-                record.t_exec_start = clock.now()
-                out = self.spec.handler(b"", inv)
-            else:
-                data = inv.get_input()
-                record.t_exec_start = clock.now()
-                clock.sleep(self.spec.exec_s * self._cpu())
-                out = self.spec.handler(data, inv)
-            record.t_exec_end = clock.now()
+        inv = Invocation(request, self.node, self.cluster, record)
+        if self.spec.streaming:
+            # handler drives chunk consumption (and models its own
+            # per-chunk compute) via inv.get_input_stream()
+            record.t_exec_start = clock.now()
+            out = self.spec.handler(b"", inv)
+        else:
+            data = inv.get_input()
+            record.t_exec_start = clock.now()
+            clock.sleep(self.spec.exec_s * self._cpu())
+            out = self.spec.handler(data, inv)
+        record.t_exec_end = clock.now()
+        with self._lock:
             self._require_alive()           # node died mid-execution
             self.state = self.WARM
-            return out
+        return out

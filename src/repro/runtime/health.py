@@ -97,7 +97,7 @@ class NodeHealthMonitor:
         if node is None:
             return
         with self._lock:
-            self._stats(node).last_seen = event.get("t")
+            self._stats_locked(node).last_seen = event.get("t")
 
     def report_stage(self, node: Optional[str], measured_s: float,
                      predicted_s: Optional[float]) -> None:
@@ -106,7 +106,7 @@ class NodeHealthMonitor:
             return
         ratio = stage_inflation(measured_s, predicted_s)
         with self._lock:
-            st = self._stats(node)
+            st = self._stats_locked(node)
             if ratio is not None:
                 st.inflation = fold_inflation(st.inflation, ratio,
                                               self.alpha)
@@ -123,7 +123,7 @@ class NodeHealthMonitor:
         if node is None:
             return
         with self._lock:
-            st = self._stats(node)
+            st = self._stats_locked(node)
             st.stalls += 1
             st.clean_streak = 0
         self._reclassify(node)
@@ -134,7 +134,7 @@ class NodeHealthMonitor:
         if node is None:
             return
         with self._lock:
-            st = self._stats(node)
+            st = self._stats_locked(node)
             st.failures += 1
             st.clean_streak = 0
         self._reclassify(node)
@@ -142,13 +142,13 @@ class NodeHealthMonitor:
     # ------------------------------------------------------- forced states
     def mark_dead(self, node: str) -> None:
         with self._lock:
-            self._stats(node).forced = DEAD
+            self._stats_locked(node).forced = DEAD
         self._reclassify(node)
 
     def mark_degraded(self, node: str) -> None:
         """Operator/drain override: stop placing here, evacuate."""
         with self._lock:
-            self._stats(node).forced = DEGRADED
+            self._stats_locked(node).forced = DEGRADED
         self._reclassify(node)
 
     def mark_alive(self, node: str) -> None:
@@ -181,7 +181,7 @@ class NodeHealthMonitor:
                     for name, st in self._nodes.items()}
 
     # ------------------------------------------------------------ internals
-    def _stats(self, node: str) -> _NodeStats:
+    def _stats_locked(self, node: str) -> _NodeStats:
         st = self._nodes.get(node)
         if st is None:
             st = self._nodes[node] = _NodeStats()
@@ -201,7 +201,7 @@ class NodeHealthMonitor:
 
     def _reclassify(self, node: str) -> None:
         with self._lock:
-            st = self._stats(node)
+            st = self._stats_locked(node)
             new = self._classify(st)
             prev, st.state = st.state, new
             if new == prev:

@@ -413,25 +413,37 @@ class WorkflowRunner:
         order = plan.order
         started = set()
         checked_at = -1
-        with done_cv:
-            while len(results) < len(order) and not errbox:
-                # the re-planning hook runs BETWEEN waves: after each batch
-                # of completions, before the stages they unblock dispatch
-                if controller is not None and len(results) > checked_at:
-                    checked_at = len(results)
-                    fresh = controller.consider(planbox["plan"], started)
-                    if fresh is not None:
-                        planbox["plan"] = fresh
-                for name in order:
-                    if name in started:
-                        continue
-                    if all(d in results
-                           for d in planbox["plan"].stages[name].deps):
-                        started.add(name)
-                        threading.Thread(target=run_stage,
-                                         args=(name, planbox["plan"]),
-                                         daemon=True).start()
-                done_cv.wait(timeout=300)
+        while True:
+            with done_cv:
+                done = len(results)
+                failed = bool(errbox)
+            if failed or done >= len(order):
+                break
+            # the re-planning hook runs BETWEEN waves: after each batch of
+            # completions, before the stages they unblock dispatch. It (and
+            # the dispatch itself) must run OUTSIDE the completion lock:
+            # consider() publishes plan.replanned on the bus and reads the
+            # telemetry/health locks — a subscriber that blocks on stage
+            # completion would deadlock against a dispatcher holding done_cv
+            if controller is not None and done > checked_at:
+                checked_at = done
+                fresh = controller.consider(planbox["plan"], started)
+                if fresh is not None:
+                    planbox["plan"] = fresh
+            for name in order:
+                if name in started:
+                    continue
+                if all(d in results
+                       for d in planbox["plan"].stages[name].deps):
+                    started.add(name)
+                    threading.Thread(target=run_stage,
+                                     args=(name, planbox["plan"]),
+                                     daemon=True).start()
+            with done_cv:
+                # re-check under the lock: a stage that completed while we
+                # were dispatching already notified — don't sleep past it
+                if len(results) == done and not errbox:
+                    done_cv.wait(timeout=300)
         if errbox:
             raise errbox[0]
 
@@ -605,7 +617,12 @@ class WorkflowRunner:
                 sr.attempts = attempt
                 sr.record.attempt = attempt
                 return sr
-            except Exception as e:  # noqa: BLE001
+            except Exception as e:  # noqa: BLE001 — the retry
+                # classification boundary: user handlers raise arbitrary
+                # exceptions, so this must stay broad. Nothing is
+                # swallowed — every catch publishes stage.failed, and
+                # exhaustion re-raises as StageExecutionError with the
+                # original as __cause__
                 failed_node = (getattr(e, "node", None)
                                or self._placed_node(spec.name))
                 self._report_failure(e, failed_node)

@@ -1,0 +1,43 @@
+"""Clean fixture: disciplined locking — the analyzer must report nothing.
+
+Patterns exercised: guarded attr always written under the lock, publish
+moved outside the critical section, ``*_locked`` helper only called with
+the lock held, typed excepts.
+"""
+import threading
+
+
+class TidyCache:
+    def __init__(self, bus):
+        self._lock = threading.Lock()
+        self._bus = bus
+        self._items = {}
+        self._count = 0
+
+    def _evict_locked(self, key):
+        self._items.pop(key, None)
+
+    def put(self, key, value):
+        with self._lock:
+            self._items[key] = value
+            self._count += 1
+        self._bus.publish("cache.put", {"key": key})    # after release
+
+    def evict(self, key):
+        with self._lock:
+            self._evict_locked(key)
+
+    def get(self, key, default=None):
+        with self._lock:
+            return self._items.get(key, default)
+
+    def load(self, path):
+        try:
+            with open(path) as fh:
+                data = fh.read()
+        except OSError:
+            return None
+        with self._lock:
+            self._items["file"] = data
+            self._count += 1
+        return data

@@ -1,0 +1,24 @@
+"""R1 fixture: two classes acquire each other's locks in opposite orders."""
+import threading
+
+
+class CycleA:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def push(self, other: "CycleB"):
+        with self._lock:            # A._lock -> B._lock
+            with other._lock:
+                other.value = self.value
+
+
+class CycleB:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def pull(self, other: "CycleA"):
+        with self._lock:            # B._lock -> A._lock  (inversion!)
+            with other._lock:
+                other.value = self.value

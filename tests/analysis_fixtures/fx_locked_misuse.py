@@ -1,0 +1,19 @@
+"""R4 fixture: a ``*_locked`` method (caller-must-hold contract) invoked
+without holding the owning lock."""
+import threading
+
+
+class Table:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._rows = {}
+
+    def _drop_locked(self, key):
+        self._rows.pop(key, None)
+
+    def drop(self, key):
+        with self._lock:
+            self._drop_locked(key)  # fine: lock held
+
+    def drop_fast(self, key):
+        self._drop_locked(key)      # R4: contract method without the lock

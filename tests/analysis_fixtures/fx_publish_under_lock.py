@@ -1,0 +1,20 @@
+"""R2 fixture: blocking calls (bus.publish, time.sleep) made under a lock."""
+import threading
+import time
+
+
+class NoisyCache:
+    def __init__(self, bus):
+        self._lock = threading.Lock()
+        self._bus = bus
+        self._items = {}
+
+    def put(self, key, value):
+        with self._lock:
+            self._items[key] = value
+            self._bus.publish("cache.put", {"key": key})   # R2: publish under lock
+
+    def warm(self, key):
+        with self._lock:
+            time.sleep(0.01)                               # R2: sleep under lock
+            return self._items.get(key)

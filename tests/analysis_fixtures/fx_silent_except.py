@@ -1,0 +1,10 @@
+"""R5 fixture: a broad except clause that swallows the error untouched."""
+
+
+def flaky_read(path):
+    try:
+        with open(path) as fh:
+            return fh.read()
+    except Exception:       # R5: no raise, no log, no use of the exception
+        pass
+    return None

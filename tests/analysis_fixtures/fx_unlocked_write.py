@@ -1,0 +1,16 @@
+"""R3 fixture: an attribute guarded by the class lock in one method is
+written without the lock in another."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def bump(self):
+        with self._lock:
+            self._count += 1        # establishes: _count is lock-guarded
+
+    def reset(self):
+        self._count = 0             # R3: unlocked write to a guarded attr

@@ -1,0 +1,227 @@
+"""Concurrency auditor tests: each static rule demonstrated on a fixture,
+the repo itself clean against the baseline, the dynamic checker catching a
+synthetic inversion, and the DigestRegistry re-entrancy regression."""
+import os
+import subprocess
+import sys
+import threading
+
+from repro.analysis import lockcheck
+from repro.analysis.lockgraph import analyze_paths
+from repro.analysis.rules import evaluate, load_baseline, split_baselined
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+REPO = os.path.dirname(HERE)
+SRC = os.path.join(REPO, "src", "repro")
+
+
+def _violations(fixture):
+    prog = analyze_paths([os.path.join(FIXTURES, fixture)])
+    return evaluate(prog)
+
+
+# ----------------------------------------------------------- static rules
+
+def test_r1_lock_order_cycle_caught():
+    viols = _violations("fx_cycle.py")
+    r1 = [v for v in viols if v.rule == "R1"]
+    assert r1, "opposite-order lock acquisition must raise R1"
+    blob = " ".join(v.ident for v in r1)
+    assert "CycleA._lock" in blob and "CycleB._lock" in blob
+
+
+def test_r2_blocking_under_lock_caught():
+    viols = _violations("fx_publish_under_lock.py")
+    r2 = {v.ident for v in viols if v.rule == "R2"}
+    assert any("publish" in i for i in r2), "bus.publish under lock is R2"
+    assert any("sleep" in i for i in r2), "time.sleep under lock is R2"
+
+
+def test_r3_unlocked_write_caught():
+    viols = _violations("fx_unlocked_write.py")
+    r3 = [v for v in viols if v.rule == "R3"]
+    assert any("Counter.reset" in v.ident and "_count" in v.ident
+               for v in r3), "unlocked write to a guarded attr is R3"
+
+
+def test_r4_locked_suffix_misuse_caught():
+    viols = _violations("fx_locked_misuse.py")
+    r4 = [v for v in viols if v.rule == "R4"]
+    assert any("drop_fast" in v.ident for v in r4), \
+        "_locked call without the lock is R4"
+    assert not any("Table.drop|" in v.ident for v in r4), \
+        "the correctly-locked call site must NOT be flagged"
+
+
+def test_r5_silent_except_caught():
+    viols = _violations("fx_silent_except.py")
+    assert any(v.rule == "R5" for v in viols)
+
+
+def test_clean_fixture_passes():
+    assert _violations("fx_clean.py") == []
+
+
+def test_repo_clean_against_baseline():
+    """The shipped tree has zero non-baselined violations (the CI gate)."""
+    prog = analyze_paths([os.path.join(SRC, "core"),
+                          os.path.join(SRC, "runtime")])
+    viols = evaluate(prog)
+    baseline = load_baseline(os.path.join(SRC, "analysis", "baseline.json"))
+    fresh, _ = split_baselined(viols, baseline)
+    assert fresh == [], "new violations:\n" + "\n".join(
+        f"{v.ident}: {v.message}" for v in fresh)
+
+
+def test_cli_exits_zero_on_clean_tree():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-m", "repro.analysis"],
+                          cwd=REPO, env=env, capture_output=True, text=True,
+                          timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exits_nonzero_on_violations():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--no-baseline",
+         os.path.join(FIXTURES, "fx_cycle.py")],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 1
+    assert "R1" in proc.stdout
+
+
+# --------------------------------------------------------- dynamic checker
+
+def test_lockcheck_detects_inversion():
+    with lockcheck.isolated():
+        lock_a = lockcheck._CheckedLock()
+        lock_b = lockcheck._CheckedLock()
+
+        def ab():
+            with lock_a:
+                with lock_b:
+                    pass
+
+        def ba():
+            with lock_b:
+                with lock_a:
+                    pass
+
+        for fn in (ab, ba):                  # opposite orders, two threads
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            t.join(timeout=5.0)
+        invs = lockcheck.inversions()
+        assert len(invs) == 1
+        pair = invs[0]["pair"]
+        assert pair[0] != pair[1]
+        assert invs[0]["witness_ab"]["stack"]   # witness trace captured
+
+
+def test_lockcheck_consistent_order_is_clean():
+    with lockcheck.isolated():
+        lock_a = lockcheck._CheckedLock()
+        lock_b = lockcheck._CheckedLock()
+        for _ in range(3):
+            with lock_a:
+                with lock_b:
+                    pass
+        assert lockcheck.inversions() == []
+        assert lockcheck.report()["order_edges"] == 1
+
+
+def test_lockcheck_long_hold_warns(monkeypatch):
+    monkeypatch.setattr(lockcheck, "HOLD_S", 0.0)
+    with lockcheck.isolated():
+        lock = lockcheck._CheckedLock()
+        with lock:
+            pass
+        holds = lockcheck.long_holds()
+        assert holds and holds[0]["site"].startswith("test_analysis.py")
+
+
+def test_lockcheck_rlock_reentry_no_self_edge():
+    with lockcheck.isolated():
+        rl = lockcheck._CheckedRLock()
+        with rl:
+            with rl:                # re-entrant: adds no ordering info
+                pass
+        assert lockcheck.report()["order_edges"] == 0
+        # Condition protocol must survive the wrapper
+        cv = threading.Condition(rl)
+        with cv:
+            cv.notify_all()
+
+
+# ------------------------------------------- satellite 1: re-entrancy fix
+
+def _run_with_deadline(fn, timeout=5.0):
+    done = []
+
+    def drive():
+        fn()
+        done.append(True)
+
+    t = threading.Thread(target=drive, daemon=True)
+    t.start()
+    t.join(timeout=timeout)
+    return bool(done)
+
+
+def test_registry_subscriber_reentry_no_deadlock():
+    """A bus subscriber that re-enters the DigestRegistry (query AND nested
+    publish) must not deadlock: events fire after ``_lock`` is released."""
+    from repro.runtime.events import EventBus
+    from repro.runtime.registry import DigestRegistry, EVENT_DIGEST_ADDED
+
+    bus = EventBus()
+    reg = DigestRegistry(bus)
+    seen = []
+
+    def reenter(evt):
+        seen.append((evt["digest"], reg.nodes_for(evt["digest"])))
+        if evt["digest"] == "d1":
+            reg.publish("n2", "d2", 7)      # nested publish from delivery
+
+    bus.subscribe(EVENT_DIGEST_ADDED, reenter)
+    assert _run_with_deadline(lambda: reg.publish("n1", "d1", 5)), \
+        "subscriber re-entering DigestRegistry deadlocked"
+    assert ("d1", {"n1": 5}) in seen        # state visible at delivery time
+    assert reg.nodes_for("d2") == {"n2": 7}
+
+
+def test_registry_withdraw_reentry_no_deadlock():
+    from repro.runtime.events import EventBus
+    from repro.runtime.registry import DigestRegistry, EVENT_DIGEST_REMOVED
+
+    bus = EventBus()
+    reg = DigestRegistry(bus)
+    reg.publish("n1", "d1", 5)
+    views = []
+    bus.subscribe(EVENT_DIGEST_REMOVED,
+                  lambda evt: views.append(reg.nodes_for(evt["digest"])))
+    assert _run_with_deadline(lambda: reg.withdraw("n1", "d1"))
+    assert views == [{}]                    # withdrawal applied before event
+
+
+def test_buffer_flush_subscriber_reentry_no_deadlock():
+    """Full chain: Buffer.set → residency flush → registry → bus → a
+    subscriber that re-enters BOTH the buffer and the registry."""
+    from repro.core.buffer import Buffer, content_digest
+    from repro.runtime.events import EventBus
+    from repro.runtime.registry import DigestRegistry, EVENT_DIGEST_ADDED
+
+    bus = EventBus()
+    reg = DigestRegistry(bus)
+    buf = Buffer(capacity_bytes=1 << 20, name="n1")
+    buf.on_residency = reg.listener("n1")
+    data = b"x" * 64
+    digest = content_digest(data)
+    got = []
+    bus.subscribe(EVENT_DIGEST_ADDED,
+                  lambda evt: got.append((buf.get("k"),
+                                          reg.nodes_for(evt["digest"]))))
+    assert _run_with_deadline(lambda: buf.set("k", data, digest=digest))
+    assert got == [(data, {"n1": len(data)})]
