@@ -1,0 +1,190 @@
+"""Multi-tenant serving sweep: fleet vs FIFO no-pool baseline.
+
+Three tenants flood one fleet with a heterogeneous mix — one LONG
+workflow each (3-stage chain, heavy exec) plus a train of SHORT chains —
+submitted longs-first so the queue holds both classes. Two arms share
+the identical arrival sequence on fresh clusters:
+
+  fifo    Fleet(ordering="fifo", pools=False, share_cas=False): arrival-
+          order admission, every stage cold (no pre-warming), per-tenant
+          CAS namespaces (no cross-tenant aliasing)
+  fleet   Fleet(ordering="predicted", pools=True, share_cas=True): Eq. 5
+          shortest-predicted-first admission with weighted fairness +
+          aging, plan-aware pre-warming of next-wave stages, and
+          content-addressed sharing across tenants
+
+Figures of merit are per-instance SOJOURN time (submit -> complete,
+fleet sim-seconds) percentiles and GOODPUT (completed instances per
+sim-second of makespan). Every job uses job-unique function specs, so
+the fleet arm's wins come from admission ordering + pre-warm overlap,
+not from trivial warm reuse the baseline is denied.
+
+Emits (benchmarks/common.emit CSV + BENCH_truffle.json):
+  mt.fifo_p95       baseline p95 sojourn, seconds (derived: p50/p99,
+                    goodput, makespan)
+  mt.fleet_p95      fleet p95 sojourn, seconds (same derived)
+  mt.p95_ratio      fleet/fifo p95  (asserted < 1)
+  mt.goodput_ratio  fleet/fifo goodput  (asserted > 1)
+  mt.warm           stages absorbed by the pools (warm hits + pre-warm
+                    adoptions; asserted > 0)
+  mt.saved          cross-tenant CAS bytes saved by aliasing (asserted
+                    > 0 shared, == 0 isolated; ledger conservation
+                    asserted on both arms)
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import MB, SCALE, emit, make_cluster
+from repro.runtime.clock import Clock
+from repro.runtime.fleet import Fleet, TenantQuota
+from repro.runtime.function import FunctionSpec
+from repro.runtime.planner import EdgeProfile
+from repro.runtime.policy import DataPolicy
+from repro.runtime.workflow import Stage, Workflow
+
+#: cold starts are the pre-warm target; shorter than PAPER_COLD so the
+#: sweep's 20-ish instances stay tractable, same ν:η shape
+COLD = {"provision_s": 0.8, "startup_s": 0.2}
+TENANTS = ("t0", "t1", "t2")
+FLEET_MAX = 2
+STAGES = 3
+SIZE = 2 * MB
+
+#: below this clock scale host-side thread scheduling outweighs the
+#: modeled sleeps and the two arms' timings blur together
+MIN_SCALE = 0.1
+
+
+def _echo(data, inv):
+    return data
+
+
+def _job(tag: str, tenant: str, jid: str, *, long: bool = False):
+    """3-stage echo chain with job-unique specs and profiled edges (the
+    gate ranks on the profiled plan's predicted_total). Every stage
+    echoes the shared root payload — identical content across tenants,
+    the sharing layer's aliasing opportunity."""
+    exec_s = 1.2 if long else 0.05
+    stages, profiles = {}, {}
+    prev = None
+    for i in range(STAGES):
+        name = f"s{i}"
+        spec = FunctionSpec(f"mt-{tag}-{tenant}-{jid}-{i}", _echo,
+                            exec_s=exec_s, **COLD)
+        stages[name] = Stage(spec, deps=[prev] if prev else [])
+        profiles[(prev, name)] = EdgeProfile(size=SIZE)
+        prev = name
+    wf = Workflow(f"mt-{tag}-{tenant}-{jid}", stages,
+                  default_policy=DataPolicy(strategy="direct", dedup=True))
+    return wf, profiles
+
+
+def _pct(xs, q: float) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
+
+
+def _arm(tag: str, scale: float, shorts: int, *, ordering: str,
+         pools: bool, share: bool):
+    """One arm: fresh cluster, identical arrival sequence (all longs,
+    then the short trains round-robined across tenants)."""
+    cluster = make_cluster(Clock(scale))
+    fleet = Fleet(cluster, fleet_max=FLEET_MAX, ordering=ordering,
+                  pools=pools, share_cas=share)
+    for t in TENANTS:
+        fleet.register_tenant(t, TenantQuota(
+            max_concurrent=4, max_queued=1000, warm_slots=8))
+    jobs = [(t, _job(tag, t, "L", long=True)) for t in TENANTS]
+    for j in range(shorts):
+        jobs += [(t, _job(tag, t, f"S{j}")) for t in TENANTS]
+    root = b"\x5a" * SIZE
+    runs = [fleet.submit(t, wf, root, source_node="edge-0",
+                         profiles=profiles)
+            for t, (wf, profiles) in jobs]
+    for r in runs:
+        r.result(timeout=900)
+
+    sojourns = [r.completed_s - r.submitted_s for r in runs]
+    makespan = (max(r.completed_s for r in runs)
+                - min(r.submitted_s for r in runs))
+    stats = fleet.stats()
+    assert all(st["shed"] == 0 for st in stats["tenants"].values()), stats
+    ledger = fleet.sharing.ledger
+    charged = sum(ledger.charged(t) for t in TENANTS)
+    assert abs(charged - ledger.physical_bytes()) < 1e-6, \
+        (charged, ledger.physical_bytes())          # conservation
+    return {
+        "p50": _pct(sojourns, 0.50),
+        "p95": _pct(sojourns, 0.95),
+        "p99": _pct(sojourns, 0.99),
+        "goodput": len(runs) / makespan,
+        "makespan": makespan,
+        "jobs": len(runs),
+        "stats": stats,
+        "saved": sum(ledger.saved(t) for t in TENANTS),
+    }
+
+
+def run(scale: float = SCALE, shorts: int = None):
+    scale = max(scale, MIN_SCALE)
+    if shorts is None:
+        shorts = 3 if os.environ.get("BENCH_FAST") == "1" else 5
+
+    fifo = _arm("fifo", scale, shorts, ordering="fifo", pools=False,
+                share=False)
+    full = _arm("sjf", scale, shorts, ordering="predicted", pools=True,
+                share=True)
+
+    p95_ratio = full["p95"] / fifo["p95"]
+    goodput_ratio = full["goodput"] / fifo["goodput"]
+    plat = full["stats"]["platform"]
+    absorbed = plat["warm_hits"] + plat["adoptions"]
+    prewarmed = sum(t["prewarmed_stages"]
+                    for t in full["stats"]["tenants"].values())
+    hit_rate = max(t["warm_hit_rate"]
+                   for t in full["stats"]["tenants"].values())
+
+    rows = [
+        ("mt.fifo_p95", fifo["p95"],
+         f"p50={fifo['p50']:.3f}s p95={fifo['p95']:.3f}s "
+         f"p99={fifo['p99']:.3f}s goodput={fifo['goodput']:.4f} "
+         f"makespan={fifo['makespan']:.3f}s jobs={fifo['jobs']}"),
+        ("mt.fleet_p95", full["p95"],
+         f"p50={full['p50']:.3f}s p95={full['p95']:.3f}s "
+         f"p99={full['p99']:.3f}s goodput={full['goodput']:.4f} "
+         f"makespan={full['makespan']:.3f}s jobs={full['jobs']}"),
+        ("mt.p95_ratio", p95_ratio,
+         f"ratio={p95_ratio:.2f}x fifo={fifo['p95']:.3f}s "
+         f"fleet={full['p95']:.3f}s improved={p95_ratio < 1.0}"),
+        ("mt.goodput_ratio", goodput_ratio,
+         f"ratio={goodput_ratio:.2f}x fifo={fifo['goodput']:.4f} "
+         f"fleet={full['goodput']:.4f} jobs_per_s"),
+        ("mt.warm", float(absorbed),
+         f"absorbed={absorbed} warm_hits={plat['warm_hits']} "
+         f"adoptions={plat['adoptions']} prewarmed_stages={prewarmed} "
+         f"hit_rate={hit_rate:.2f}"),
+        ("mt.saved", float(full["saved"]),
+         f"saved={full['saved']} isolated_saved={fifo['saved']} "
+         f"shared_claims={full['stats']['sharing']['shared_claims']}"),
+    ]
+    emit(rows)
+
+    # acceptance: SJF + pre-warm beat FIFO-no-pool on tail latency AND
+    # throughput; next-wave stages actually absorbed cold starts; the
+    # isolated arm never aliased across tenants, the shared arm did
+    assert p95_ratio < 1.0, (full["p95"], fifo["p95"])
+    assert goodput_ratio > 1.0, (full["goodput"], fifo["goodput"])
+    assert absorbed > 0 and prewarmed > 0 and hit_rate > 0, plat
+    assert full["saved"] > 0 and fifo["saved"] == 0, (full["saved"],
+                                                      fifo["saved"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -18,6 +18,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
               speculation="auto" budget resolution
   fault.*     node crash recovery: data-plane-aware retries (re-ship from
               surviving CAS replicas) vs naive restart + full rerun
+  mt.*        multi-tenant serving fleet: Eq. 5 SJF admission + plan-aware
+              pre-warm + shared CAS vs a FIFO no-pool baseline
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
@@ -52,9 +54,9 @@ def main() -> None:
 
     from benchmarks import (adaptive_sweep, chained_sweep, chained_total,
                             coldstart_sweep, fault_sweep, lifecycle,
-                            locality_sweep, model_validation, policy_sweep,
-                            replan_sweep, roofline, streaming_sweep,
-                            video_analytics)
+                            locality_sweep, model_validation,
+                            multitenant_sweep, policy_sweep, replan_sweep,
+                            roofline, streaming_sweep, video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -85,6 +87,9 @@ def main() -> None:
 
     print("# --- node crash recovery (replica re-ship vs naive rerun) ---")
     fault_sweep.run()
+
+    print("# --- multi-tenant serving fleet (SJF+pools+sharing vs FIFO) ---")
+    multitenant_sweep.run()
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")

@@ -27,7 +27,11 @@ from repro.analysis.rules import (RULE_TITLES, evaluate, load_baseline,
 _PKG = os.path.dirname(os.path.abspath(__file__))        # src/repro/analysis
 _REPRO = os.path.dirname(_PKG)                           # src/repro
 DEFAULT_PATHS = [os.path.join(_REPRO, "core"),
-                 os.path.join(_REPRO, "runtime")]
+                 os.path.join(_REPRO, "runtime"),
+                 # explicit: the fleet subpackage stays audited even if the
+                 # runtime root is ever narrowed (analyze_paths dedups files
+                 # reached through both roots)
+                 os.path.join(_REPRO, "runtime", "fleet")]
 DEFAULT_BASELINE = os.path.join(_PKG, "baseline.json")
 
 

@@ -66,6 +66,8 @@ NAME_HINTS: Dict[str, str] = {
     "prefetcher": "Prefetcher", "network": "NetworkFabric",
     "channel": "Channel", "ch": "Channel",
     "node": "Node", "target": "Node", "src": "Node", "dst": "Node",
+    "fleet": "Fleet", "gate": "FleetGate", "pools": "WarmPools",
+    "sharing": "CasSharing", "ledger": "TenantLedger",
 }
 
 #: (class, method) → class of the return value, for call-chain receivers.
@@ -909,15 +911,23 @@ def analyze_paths(paths: List[str]) -> Program:
     """Parse every ``.py`` under ``paths`` and run the full walk."""
     prog = Program()
     files: List[Tuple[str, str]] = []
+    seen: Set[str] = set()     # overlapping roots must not double-collect
+
+    def _add(mod: str, path: str) -> None:
+        real = os.path.realpath(path)
+        if real not in seen:
+            seen.add(real)
+            files.append((mod, path))
+
     for root in paths:
         if os.path.isfile(root):
-            files.append((os.path.splitext(os.path.basename(root))[0], root))
+            _add(os.path.splitext(os.path.basename(root))[0], root)
             continue
         for dirpath, _dirs, names in os.walk(root):
             for fn in sorted(names):
                 if fn.endswith(".py"):
                     mod = os.path.splitext(fn)[0]
-                    files.append((mod, os.path.join(dirpath, fn)))
+                    _add(mod, os.path.join(dirpath, fn))
     trees = []
     for mod, path in files:
         with open(path, "r", encoding="utf-8") as fh:

@@ -284,6 +284,21 @@ class Buffer:
         self._flush_residency()
         return data
 
+    def drop(self, key: str) -> bool:
+        """Administratively drop a COMPLETE entry (fleet quota pressure,
+        tenant eviction). In-flight streams are left to their writers —
+        aborting them is ``abort_stream``'s job. Fires the residency
+        withdrawal like any eviction, so the registry (and any ledgers on
+        it) see the bytes leave. Returns whether an entry was dropped."""
+        with self._cond:
+            e = self._entries.get(key)
+            if e is None or not e.complete:
+                return False
+            self._drop_locked(key)
+            self._cond.notify_all()
+        self._flush_residency()
+        return True
+
     # ------------------------------------------------------------- streaming
     def open_stream(self, key: str, pinned: bool = False) -> None:
         """Create an in-flight entry; chunks land via ``append_chunk``.

@@ -1,0 +1,21 @@
+"""Fleet-scale multi-tenant serving.
+
+Turns the single-run runtime into a serving fleet (ROADMAP: "Fleet-scale
+multi-tenant serving"): an admission gate ordering arrivals by the
+compiled plan's predicted total (the paper's Eq. 5 plan orderings,
+applied to the queue), warm container pools with plan-aware pre-warming
+(the SDP/CSP cold-start window absorbed entirely by the pool), and
+cross-tenant CAS sharing with per-tenant accounting, quotas, and an
+isolation switch. See each submodule's docstring for its locking
+discipline — every fleet lock is a leaf; nothing publishes or sleeps
+under one.
+"""
+from repro.runtime.fleet.admission import (AdmissionRejected, FleetGate,
+                                           TenantQuota, Ticket)
+from repro.runtime.fleet.pools import PoolPolicy, WarmPools
+from repro.runtime.fleet.serving import Fleet, FleetRun
+from repro.runtime.fleet.sharing import CasSharing, TenantLedger
+
+__all__ = ["AdmissionRejected", "CasSharing", "Fleet", "FleetGate",
+           "FleetRun", "PoolPolicy", "TenantLedger", "TenantQuota",
+           "Ticket", "WarmPools"]

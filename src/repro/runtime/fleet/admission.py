@@ -1,0 +1,269 @@
+"""Fleet admission gate: per-tenant quotas, arrival queueing, and
+predicted-total ordering.
+
+The paper's Eq. 5 defines plan-total time orderings over candidate
+execution plans; at fleet scale the same quantity —
+``ExecutionPlan.predicted_total`` — orders ARRIVALS: among queued
+workflow instances, shortest-predicted-first minimizes mean sojourn
+(SJF), weighted per tenant so one tenant's flood of short jobs cannot
+monopolize the admitted slots, and aged so a long job's rank improves
+the longer it waits (no starvation: waited time grows without bound,
+every queued ticket's rank eventually dominates).
+
+Rank (lower admits first)::
+
+    rank = predicted_s * (running[tenant] + 1) / weight  -  aging * waited_s
+
+``ordering="fifo"`` disables the policy term and admits in arrival
+order — the benchmark baseline.
+
+Locking: ``FleetGate._lock`` is a leaf. Bus publishes
+(``fleet.queued`` / ``fleet.admitted`` / ``fleet.shed``) and
+``Ticket.admitted_evt.set()`` happen strictly OUTSIDE the lock, so a
+bus subscriber or an awakened submitter can re-enter the gate freely.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+
+class AdmissionRejected(RuntimeError):
+    """The fleet gate shed a submission instead of queueing it: the
+    tenant's ``max_queued`` quota is already full. Carries
+    ``tenant`` / ``reason`` / ``depth`` / ``limit`` so callers can
+    implement backpressure (retry later, divert, or surface upstream)."""
+
+    def __init__(self, tenant: str, reason: str, depth: int = 0,
+                 limit: int = 0):
+        self.tenant = tenant
+        self.reason = reason
+        self.depth = depth
+        self.limit = limit
+        super().__init__(f"tenant {tenant!r} shed ({reason}): "
+                         f"queue depth {depth} >= limit {limit}")
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant resource envelope the gate (and the sharing layer)
+    enforce. ``weight`` scales fairness: a weight-2 tenant's jobs rank as
+    if the tenant ran half as much. ``cas_bytes`` caps the tenant's
+    charged share of resident CAS bytes (None = uncapped);
+    ``share_cas=False`` salts the tenant's digests into a private
+    namespace — full isolation, no cross-tenant aliasing either way."""
+    max_concurrent: int = 4
+    max_queued: int = 64
+    cas_bytes: Optional[int] = None
+    warm_slots: int = 8
+    weight: float = 1.0
+    share_cas: bool = True
+
+    def __post_init__(self):
+        if self.max_concurrent < 1:
+            raise ValueError("max_concurrent must be >= 1")
+        if self.max_queued < 0:
+            raise ValueError("max_queued must be >= 0")
+        if self.weight <= 0:
+            raise ValueError("weight must be > 0")
+        if self.warm_slots < 0:
+            raise ValueError("warm_slots must be >= 0")
+
+
+class Ticket:
+    """One submitted workflow instance's admission lifecycle:
+    queued -> admitted -> done (or shed at submit). The submitter's run
+    thread blocks on ``admitted_evt``; the gate sets it (outside its
+    lock) when the instance wins a slot."""
+
+    __slots__ = ("tenant", "predicted_s", "tag", "seq", "enqueued_at",
+                 "admitted_at", "state", "admitted_evt")
+
+    def __init__(self, tenant: str, predicted_s: float, tag: str, seq: int,
+                 enqueued_at: float):
+        self.tenant = tenant
+        self.predicted_s = predicted_s
+        self.tag = tag
+        self.seq = seq                   # arrival order (FIFO tiebreak)
+        self.enqueued_at = enqueued_at
+        self.admitted_at: Optional[float] = None
+        self.state = "queued"
+        self.admitted_evt = threading.Event()
+
+
+class FleetGate:
+    #: predicted total assumed for a submission with no compiled plan
+    DEFAULT_PREDICTED_S = 10.0
+
+    def __init__(self, *, fleet_max: int = 8, ordering: str = "predicted",
+                 aging_weight: float = 1.0,
+                 now_fn: Optional[Callable[[], float]] = None,
+                 bus=None, default_quota: Optional[TenantQuota] = None):
+        if ordering not in ("predicted", "fifo"):
+            raise ValueError(f"unknown ordering {ordering!r} "
+                             "(want 'predicted' or 'fifo')")
+        if fleet_max < 1:
+            raise ValueError("fleet_max must be >= 1")
+        self.fleet_max = fleet_max
+        self.ordering = ordering
+        self.aging_weight = aging_weight
+        self._now = now_fn if now_fn is not None else self._zero
+        self._bus = bus
+        self.default_quota = default_quota or TenantQuota()
+        self._lock = threading.Lock()
+        self._quotas: Dict[str, TenantQuota] = {}
+        self._queue: List[Ticket] = []
+        self._running: Dict[str, int] = {}
+        self._total_running = 0
+        self._seq = 0
+        self._stats: Dict[str, Dict[str, int]] = {}
+
+    @staticmethod
+    def _zero() -> float:
+        return 0.0
+
+    # ------------------------------------------------------------- wiring
+    def register(self, tenant: str, quota: TenantQuota) -> None:
+        with self._lock:
+            self._quotas[tenant] = quota
+
+    def quota(self, tenant: str) -> TenantQuota:
+        with self._lock:
+            return self._quotas.get(tenant, self.default_quota)
+
+    # ---------------------------------------------------------- lifecycle
+    def submit(self, tenant: str, predicted_s: Optional[float] = None,
+               tag: str = "") -> Ticket:
+        """Queue one workflow instance; raises :class:`AdmissionRejected`
+        when the tenant's queue quota is full. The returned ticket's
+        ``admitted_evt`` fires when the instance may run."""
+        now = self._now()
+        p = predicted_s if predicted_s is not None else self.DEFAULT_PREDICTED_S
+        shed = None
+        admitted: List[Ticket] = []
+        with self._lock:
+            q = self._quotas.get(tenant, self.default_quota)
+            depth = sum(1 for t in self._queue if t.tenant == tenant)
+            st = self._stats.setdefault(
+                tenant, {"submitted": 0, "admitted": 0, "shed": 0,
+                         "completed": 0})
+            st["submitted"] += 1
+            self._seq += 1
+            ticket = Ticket(tenant, p, tag, self._seq, now)
+            self._queue.append(ticket)
+            admitted = self._pump_locked(now)
+            # shed AFTER the pump: max_queued caps WAITING instances — an
+            # arrival that admits immediately never counts against it
+            if ticket.state == "queued" and depth >= q.max_queued:
+                self._queue.remove(ticket)
+                ticket.state = "shed"
+                st["shed"] += 1
+                shed = (depth, q.max_queued)
+        if shed is not None:
+            if self._bus is not None:
+                self._bus.publish("fleet.shed", {
+                    "tenant": tenant, "tag": tag, "depth": shed[0],
+                    "limit": shed[1], "t": now})
+            raise AdmissionRejected(tenant, "queue-full", depth=shed[0],
+                                    limit=shed[1])
+        self._deliver(admitted)
+        if ticket.state == "queued" and self._bus is not None:
+            self._bus.publish("fleet.queued", {
+                "tenant": tenant, "tag": tag, "predicted_s": p, "t": now})
+        return ticket
+
+    def complete(self, ticket: Ticket) -> None:
+        """A run finished (or failed): release its slot and pump the queue.
+        Idempotent per ticket."""
+        now = self._now()
+        with self._lock:
+            if ticket.state != "admitted":
+                return
+            ticket.state = "done"
+            self._running[ticket.tenant] = max(
+                self._running.get(ticket.tenant, 1) - 1, 0)
+            self._total_running = max(self._total_running - 1, 0)
+            self._stats.setdefault(
+                ticket.tenant, {"submitted": 0, "admitted": 0, "shed": 0,
+                                "completed": 0})["completed"] += 1
+            admitted = self._pump_locked(now)
+        self._deliver(admitted)
+
+    def pump(self) -> None:
+        """Re-evaluate the queue (aging has advanced even with no
+        completion — callers with a real clock may tick this)."""
+        with self._lock:
+            admitted = self._pump_locked(self._now())
+        self._deliver(admitted)
+
+    # ----------------------------------------------------------- ordering
+    def _rank_locked(self, t: Ticket, now: float) -> tuple:
+        if self.ordering == "fifo":
+            return (t.seq,)
+        q = self._quotas.get(t.tenant, self.default_quota)
+        running = self._running.get(t.tenant, 0)
+        rank = (t.predicted_s * (running + 1) / q.weight
+                - self.aging_weight * max(now - t.enqueued_at, 0.0))
+        return (rank, t.seq)
+
+    def _pump_locked(self, now: float) -> List[Ticket]:
+        """Admit while fleet capacity and per-tenant quotas allow, picking
+        the best-ranked eligible ticket each step (running counts change
+        per admission, so the rank is re-evaluated every iteration)."""
+        admitted: List[Ticket] = []
+        while self._total_running < self.fleet_max:
+            eligible = [
+                t for t in self._queue
+                if self._running.get(t.tenant, 0)
+                < self._quotas.get(t.tenant, self.default_quota).max_concurrent]
+            if not eligible:
+                break
+            best = min(eligible, key=lambda t: self._rank_locked(t, now))
+            self._queue.remove(best)
+            best.state = "admitted"
+            best.admitted_at = now
+            self._running[best.tenant] = self._running.get(best.tenant, 0) + 1
+            self._total_running += 1
+            self._stats.setdefault(
+                best.tenant, {"submitted": 0, "admitted": 0, "shed": 0,
+                              "completed": 0})["admitted"] += 1
+            admitted.append(best)
+        return admitted
+
+    def _deliver(self, admitted: List[Ticket]) -> None:
+        """Wake admitted submitters and mirror onto the bus — outside the
+        gate lock (subscribers and awakened threads may re-enter)."""
+        for t in admitted:
+            t.admitted_evt.set()
+            if self._bus is not None:
+                self._bus.publish("fleet.admitted", {
+                    "tenant": t.tenant, "tag": t.tag,
+                    "predicted_s": t.predicted_s,
+                    "waited_s": max((t.admitted_at or 0.0) - t.enqueued_at,
+                                    0.0),
+                    "t": t.admitted_at})
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant snapshot: submitted/admitted/shed/completed counters
+        plus current ``running`` and ``queue_depth``."""
+        with self._lock:
+            tenants = (set(self._stats) | set(self._running)
+                       | {t.tenant for t in self._queue})
+            out = {}
+            for tenant in tenants:
+                st = dict(self._stats.get(tenant, {}))
+                st["running"] = self._running.get(tenant, 0)
+                st["queue_depth"] = sum(
+                    1 for t in self._queue if t.tenant == tenant)
+                out[tenant] = st
+            return out
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def running(self) -> int:
+        with self._lock:
+            return self._total_running

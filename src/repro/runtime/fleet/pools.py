@@ -1,0 +1,184 @@
+"""Warm container pools with plan-aware pre-warming.
+
+The paper hides input transfer inside the cold-start window (SDP/CSP);
+the pool generalizes that: provision the NEXT wave's sandboxes while the
+current wave executes, so by the time a trigger fires its CSP ship lands
+in an already-provisioning (or already-warm) sandbox. Two mechanisms:
+
+* **pool checkin/checkout** — extends ``Platform._checkout_warm`` /
+  ``_checkin`` (never bypasses them): ``PoolPolicy`` sizes each
+  function's pool (``min`` floor, ``warm`` target, ``max`` cap, idle
+  TTL), pushed down via ``Platform.set_pool_limit``.
+* **adoption** — a checkout miss while a pre-warm provision is in
+  flight hands that instance to the live request
+  (``Platform._adopt_provisioning`` <- ``WarmPools.adopt``): the
+  request pays only the residual ν+η, not a fresh cold start.
+
+Locking: ``WarmPools._lock`` is a leaf guarding the policy table and the
+in-flight provision lists. Provisioning itself (clock sleeps) runs on
+dedicated ``prewarm-*`` threads, never under the lock; bus publishes
+happen outside it.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.runtime.function import (FunctionInstance, FunctionSpec,
+                                    LifecycleRecord)
+
+
+@dataclass(frozen=True)
+class PoolPolicy:
+    """Sizing for one function's warm pool (tensorlake-style
+    min/warm/max): ``min`` instances survive TTL expiry, ``warm`` is the
+    pre-warm target per next-wave stage, ``max`` caps the pool (and
+    checkins past it discard)."""
+    min: int = 0
+    warm: int = 1
+    max: int = 8
+    idle_ttl_s: Optional[float] = None
+
+    def __post_init__(self):
+        if not (0 <= self.min <= self.max):
+            raise ValueError("need 0 <= min <= max")
+        if self.warm < 0 or self.warm > self.max:
+            raise ValueError("need 0 <= warm <= max")
+
+
+class _Prewarm:
+    """One in-flight pre-warm provision. ``ready`` fires when provisioning
+    finished (instance WARM) or failed (``error`` set). ``adopted`` means
+    a live request took it — it must not also land in the pool."""
+
+    __slots__ = ("fn", "instance", "ready", "error", "adopted")
+
+    def __init__(self, fn: str):
+        self.fn = fn
+        self.instance: Optional[FunctionInstance] = None
+        self.ready = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.adopted = False
+
+
+class WarmPools:
+    def __init__(self, cluster, default: Optional[PoolPolicy] = None):
+        self.cluster = cluster
+        self.default = default or PoolPolicy()
+        self._lock = threading.Lock()
+        self._policies: Dict[str, PoolPolicy] = {}
+        self._provisioning: Dict[str, List[_Prewarm]] = {}
+        self.stats = {"prewarms_started": 0, "prewarms_pooled": 0,
+                      "adoptions": 0}
+        cluster.platform.pools = self     # the platform's adoption hook
+
+    # ------------------------------------------------------------- config
+    def configure(self, spec: FunctionSpec,
+                  policy: Optional[PoolPolicy] = None) -> None:
+        """Apply (or default) a policy for ``spec`` — pushes the cap/TTL
+        down to the platform pool and provisions the ``min`` floor."""
+        pol = policy or self.default
+        with self._lock:
+            self._policies[spec.name] = pol
+        self.cluster.platform.set_pool_limit(spec.name, pol.max,
+                                             pol.idle_ttl_s, pol.min)
+        if pol.min > 0:
+            self.prewarm(spec, pol.min)
+
+    def policy(self, fn: str) -> PoolPolicy:
+        with self._lock:
+            return self._policies.get(fn, self.default)
+
+    # ----------------------------------------------------------- pre-warm
+    def prewarm(self, spec: FunctionSpec, target: int) -> int:
+        """Provision toward ``target`` instances for ``spec``
+        asynchronously, counting what is already warm or in flight (so
+        repeated calls converge instead of stacking). Returns how many
+        provisions were started."""
+        platform = self.cluster.platform
+        pol = self.policy(spec.name)
+        warm = len(platform.warm_instances(spec.name))
+        started: List[_Prewarm] = []
+        with self._lock:
+            inflight = self._provisioning.setdefault(spec.name, [])
+            need = min(target, pol.max) - warm - len(inflight)
+            for _ in range(max(need, 0)):
+                pw = _Prewarm(spec.name)
+                inflight.append(pw)
+                started.append(pw)
+            self.stats["prewarms_started"] += len(started)
+        for pw in started:
+            threading.Thread(target=self._provision_one, args=(spec, pw),
+                             daemon=True,
+                             name=f"prewarm-{spec.name}").start()
+        return len(started)
+
+    def prewarm_next_wave(self, wf, plan, started) -> int:
+        """Plan-aware pre-warming (the runner's between-waves hook): a
+        stage whose deps are ALL dispatched will trigger as soon as they
+        complete — provision its sandboxes NOW, placed by the same
+        locality/health scoring a real dispatch would use."""
+        total = 0
+        for name in plan.order:
+            if name in started:
+                continue
+            deps = plan.stages[name].deps
+            if not deps or not all(d in started for d in deps):
+                continue
+            spec = wf.stages[name].spec
+            target = self.policy(spec.name).warm
+            if target > 0:
+                total += self.prewarm(spec, target)
+        return total
+
+    def adopt(self, fn: str) -> Optional[_Prewarm]:
+        """Hand an in-flight provision to a live request (the platform's
+        checkout-miss path). Exactly-once: an adopted handle never also
+        lands in the pool. None when nothing is provisioning for ``fn``."""
+        with self._lock:
+            inflight = self._provisioning.get(fn)
+            if not inflight:
+                return None
+            pw = inflight.pop(0)
+            pw.adopted = True
+            self.stats["adoptions"] += 1
+            return pw
+
+    def _provision_one(self, spec: FunctionSpec, pw: _Prewarm) -> None:
+        cluster = self.cluster
+        try:
+            node = cluster.scheduler.pick_node(spec)
+            inst = FunctionInstance(spec, node, cluster)
+            inst.prewarmed = True
+            rec = LifecycleRecord(fn=spec.name)
+            rec.t_request = cluster.clock.now()
+            inst.provision(rec)          # ν + η on this thread's time
+            pw.instance = inst
+        except BaseException as e:  # noqa: BLE001 — surfaced via pw.error:
+            # the adopter (or nobody) inspects it; a dead node mid-provision
+            # must not kill the pool
+            pw.error = e
+        pw.ready.set()
+        pooled = False
+        with self._lock:
+            inflight = self._provisioning.get(pw.fn)
+            if inflight is not None and pw in inflight:
+                inflight.remove(pw)
+                pooled = pw.error is None          # unadopted and healthy
+            if pooled:
+                self.stats["prewarms_pooled"] += 1
+        if pooled:
+            cluster.platform.checkin_prewarmed(pw.fn, pw.instance)
+            cluster.bus.publish("fleet.prewarmed", {
+                "function": pw.fn, "node": pw.instance.node.name,
+                "t": cluster.clock.now()})
+
+    # -------------------------------------------------------------- stats
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            snap = dict(self.stats)
+            snap["provisioning"] = {fn: len(v)
+                                    for fn, v in self._provisioning.items()
+                                    if v}
+            return snap

@@ -1,0 +1,205 @@
+"""Fleet facade: admission gate + warm pools + CAS sharing on one cluster.
+
+``Fleet(cluster)`` wires the three fleet layers together and exposes the
+multi-tenant serving surface::
+
+    fleet = Fleet(cluster, fleet_max=8, ordering="predicted")
+    fleet.register_tenant("acme", TenantQuota(max_concurrent=2))
+    run = fleet.submit("acme", wf, input_data, profiles=profiles)
+    trace = run.result()          # blocks: queued -> admitted -> ran
+
+``submit`` compiles the workflow's :class:`ExecutionPlan` FIRST — its
+``predicted_total`` (the paper's Eq. 5 plan-total) is what the gate
+ranks arrivals by — then queues a ticket and drives the run on its own
+thread once admitted. Pool policies for the workflow's functions are
+sized from the tenant's ``warm_slots`` quota; tenant identity and the
+CAS salt (isolation switch) thread into the
+:class:`~repro.runtime.workflow.WorkflowRunner`.
+
+``fleet.stats()`` is the per-tenant observability snapshot: queue
+depth, shed count, warm-hit rate, shared-CAS bytes saved/charged.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Dict, Optional
+
+from repro.runtime.fleet.admission import FleetGate, TenantQuota, Ticket
+from repro.runtime.fleet.pools import PoolPolicy, WarmPools
+from repro.runtime.fleet.sharing import CasSharing
+from repro.runtime.workflow import WorkflowRunner
+
+
+class FleetRun:
+    """Handle for one submitted workflow instance. ``result()`` blocks
+    through the whole queued -> admitted -> ran lifecycle. Sojourn
+    bounds (``submitted_s`` / ``admitted_s`` / ``completed_s``, fleet
+    sim-seconds) are what the multitenant benchmark's latency
+    percentiles are computed from."""
+
+    def __init__(self, ticket: Ticket):
+        self.ticket = ticket
+        self.submitted_s: float = 0.0
+        self.admitted_s: Optional[float] = None
+        self.completed_s: Optional[float] = None
+        self._fut: Future = Future()
+
+    @property
+    def state(self) -> str:
+        return self.ticket.state
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None):
+        """The run's :class:`WorkflowTrace` (or raises what the run
+        raised)."""
+        return self._fut.result(timeout)
+
+
+class Fleet:
+    def __init__(self, cluster, *, fleet_max: int = 8,
+                 ordering: str = "predicted", pools: bool = True,
+                 pool_policy: Optional[PoolPolicy] = None,
+                 share_cas: bool = True, aging_weight: float = 1.0,
+                 default_quota: Optional[TenantQuota] = None):
+        self.cluster = cluster
+        self._t0 = cluster.clock.now()
+        self.gate = FleetGate(fleet_max=fleet_max, ordering=ordering,
+                              aging_weight=aging_weight, now_fn=self.now,
+                              bus=cluster.bus, default_quota=default_quota)
+        self.pools = (WarmPools(cluster, default=pool_policy)
+                      if pools else None)
+        self.sharing = CasSharing(cluster, share_default=share_cas)
+        self._lock = threading.Lock()
+        self._tenant_runs: Dict[str, Dict[str, int]] = {}
+        cluster.fleet = self          # runner discovers the claim hook here
+
+    def now(self) -> float:
+        """Fleet-relative sim-seconds (the gate's aging clock)."""
+        clock = self.cluster.clock
+        return clock.elapsed_sim(clock.now() - self._t0)
+
+    # ------------------------------------------------------------ tenants
+    def register_tenant(self, tenant: str,
+                        quota: Optional[TenantQuota] = None) -> TenantQuota:
+        quota = quota or TenantQuota()
+        self.gate.register(tenant, quota)
+        self.sharing.register(tenant, quota)
+        return quota
+
+    def claim(self, tenant: str, digest: str, nbytes: int) -> bool:
+        """Runner hook: tenant content seeded into the CAS."""
+        return self.sharing.claim(tenant, digest, nbytes)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, tenant: str, wf, input_data: bytes, *,
+               source_node: Optional[str] = None, profiles=None,
+               use_truffle: bool = True, policy=None,
+               replan=None) -> FleetRun:
+        """Queue one workflow instance for ``tenant``. Compiles the plan
+        now (admission ranks on its ``predicted_total``), runs it on its
+        own thread once the gate admits. Raises
+        :class:`~repro.runtime.fleet.admission.AdmissionRejected` when the
+        tenant's queue quota sheds the arrival."""
+        runner = WorkflowRunner(self.cluster, use_truffle=use_truffle,
+                                policy=policy, replan=replan, tenant=tenant,
+                                cas_salt=self.sharing.salt_for(tenant))
+        plan = runner.compile(wf, profiles=profiles)
+        if self.pools is not None:
+            quota = self.gate.quota(tenant)
+            base = self.pools.default
+            cap = (min(base.max, quota.warm_slots) if quota.warm_slots
+                   else base.max)
+            for st in wf.stages.values():
+                self.cluster.platform.register(st.spec)
+                self.pools.configure(st.spec, PoolPolicy(
+                    min=base.min, warm=min(base.warm, cap), max=max(cap, 1),
+                    idle_ttl_s=base.idle_ttl_s))
+        ticket = self.gate.submit(tenant,
+                                  predicted_s=plan.predicted_total,
+                                  tag=wf.name)
+        run = FleetRun(ticket)
+        run.submitted_s = self.now()
+        threading.Thread(target=self._drive,
+                         args=(run, runner, wf, plan, input_data,
+                               source_node),
+                         daemon=True,
+                         name=f"fleet-{tenant}-{wf.name}").start()
+        return run
+
+    def _drive(self, run: FleetRun, runner: WorkflowRunner, wf, plan,
+               input_data: bytes, source_node: Optional[str]) -> None:
+        ticket = run.ticket
+        try:
+            if not ticket.admitted_evt.wait(timeout=600.0):
+                raise TimeoutError(
+                    f"tenant {ticket.tenant!r}: {wf.name} never admitted")
+            run.admitted_s = self.now()
+            trace = runner.run(wf, input_data, source_node=source_node,
+                               plan=plan)
+            run.completed_s = self.now()
+            self._tally(ticket.tenant, trace)
+            run._fut.set_result(trace)
+        except BaseException as e:  # noqa: BLE001 — the run thread's
+            # boundary: whatever the workflow raised is re-raised to the
+            # submitter via the future, nothing is swallowed
+            run._fut.set_exception(e)
+        finally:
+            self.gate.complete(ticket)
+            # quota pressure runs BETWEEN runs (never on the data path):
+            # evict the tenant's oldest private digests down to quota
+            self.sharing.pressure(ticket.tenant)
+
+    def _tally(self, tenant: str, trace) -> None:
+        recs = [sr.record for sr in trace.stages.values()]
+        warm = sum(1 for r in recs if r.warm_hit)
+        pre = sum(1 for r in recs if r.prewarmed)
+        # a pooled pre-warm hit sets BOTH flags — count it once
+        absorbed = sum(1 for r in recs if r.warm_hit or r.prewarmed)
+        with self._lock:
+            t = self._tenant_runs.setdefault(
+                tenant, {"runs": 0, "stages": 0, "warm_hits": 0,
+                         "prewarmed": 0, "absorbed": 0})
+            t["runs"] += 1
+            t["stages"] += len(recs)
+            t["warm_hits"] += warm
+            t["prewarmed"] += pre
+            t["absorbed"] += absorbed
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Per-tenant fleet snapshot: admission counters + queue depth,
+        warm-hit rate over executed stages, shared-CAS bytes
+        saved/charged — plus platform pool counters."""
+        gate = self.gate.stats()
+        ledger = self.sharing.ledger.snapshot()
+        with self._lock:
+            runs = {t: dict(v) for t, v in self._tenant_runs.items()}
+        tenants = {}
+        for t in set(gate) | set(runs) | set(ledger):
+            g = gate.get(t, {})
+            r = runs.get(t, {})
+            led = ledger.get(t, {})
+            stages = r.get("stages", 0)
+            absorbed = r.get("absorbed", 0)
+            tenants[t] = {
+                "queue_depth": g.get("queue_depth", 0),
+                "running": g.get("running", 0),
+                "submitted": g.get("submitted", 0),
+                "admitted": g.get("admitted", 0),
+                "shed": g.get("shed", 0),
+                "completed": g.get("completed", 0),
+                "stages": stages,
+                "warm_hit_rate": (absorbed / stages) if stages else 0.0,
+                "prewarmed_stages": r.get("prewarmed", 0),
+                "cas_charged_bytes": led.get("charged", 0.0),
+                "cas_saved_bytes": led.get("saved", 0),
+            }
+        out = {"tenants": tenants,
+               "platform": dict(self.cluster.platform.stats),
+               "sharing": self.sharing.stats_snapshot()}
+        if self.pools is not None:
+            out["pools"] = self.pools.stats_snapshot()
+        return out

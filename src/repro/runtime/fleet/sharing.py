@@ -1,0 +1,229 @@
+"""Cross-workflow / cross-tenant CAS sharing with per-tenant accounting.
+
+The data plane is already content-addressed (Buffer dedup + the
+cluster-wide DigestRegistry), so two tenants uploading the SAME bytes
+alias to one resident copy per node for free — what is missing at fleet
+scale is WHO pays for those bytes and what happens at a tenant's quota.
+This module adds both, without touching the data path:
+
+* :class:`TenantLedger` — hangs off ``DigestRegistry.add_ledger``:
+  tracks per-digest replica counts from residency events and per-tenant
+  claims from the runner's ``_seed_output``. A tenant's ``charged``
+  bytes are its *share* of the physical bytes:
+  ``size x replicas / claimants`` per claimed digest — summed over all
+  tenants this equals the physically resident bytes (conservation).
+  ``saved`` counts bytes a claim aliased instead of re-shipping.
+* :class:`CasSharing` — the policy layer: per-tenant ``cas_bytes``
+  quotas drive eviction pressure (oldest tenant-PRIVATE digests are
+  dropped from every holder node until the charge fits — shared digests
+  are never evicted on one tenant's account), and the isolation switch:
+  ``share_cas=False`` gives the tenant a digest *salt*, so its content
+  hashes into a private namespace and can neither alias to nor be
+  aliased by other tenants' bytes.
+
+Locking: ``TenantLedger._lock`` and ``CasSharing._lock`` are leaves.
+Eviction victims are computed under the ledger lock, but the buffer
+drops (which re-enter the registry -> ledger via the residency chain)
+run with NO fleet lock held.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Set
+
+from repro.runtime.fleet.admission import TenantQuota
+
+
+class TenantLedger:
+    """Per-tenant byte accounting over the shared digest index."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._claims: Dict[str, Set[str]] = {}    # digest -> {tenant}
+        self._sizes: Dict[str, int] = {}          # digest -> logical bytes
+        self._replicas: Dict[str, int] = {}       # digest -> resident nodes
+        self._saved: Dict[str, int] = {}          # tenant -> aliased bytes
+        self._order: Dict[str, List[str]] = {}    # tenant -> claim order
+
+    # ------------------------------------------------- registry callback
+    def on_residency(self, event: str, node: str, digest: str,
+                     size: int) -> None:
+        """``DigestRegistry`` ledger callback (invoked outside the
+        registry lock): keeps the physical replica count per digest."""
+        with self._lock:
+            if event == "added":
+                self._replicas[digest] = self._replicas.get(digest, 0) + 1
+                self._sizes.setdefault(digest, size)
+            elif event == "removed":
+                n = self._replicas.get(digest, 0) - 1
+                if n <= 0:
+                    self._replicas.pop(digest, None)
+                else:
+                    self._replicas[digest] = n
+
+    # ------------------------------------------------------------ claims
+    def claim(self, tenant: str, digest: str, size: int) -> bool:
+        """Record that ``tenant``'s workflow produced/needs ``digest``.
+        Returns True when the bytes were ALREADY resident on account of
+        another tenant — the cross-tenant alias the fleet's shared-CAS
+        saving counts."""
+        with self._lock:
+            owners = self._claims.setdefault(digest, set())
+            shared = bool(self._replicas.get(digest)) and bool(
+                owners - {tenant})
+            if tenant not in owners:
+                owners.add(tenant)
+                self._order.setdefault(tenant, []).append(digest)
+            if size > self._sizes.get(digest, 0):
+                self._sizes[digest] = size
+            if shared:
+                self._saved[tenant] = self._saved.get(tenant, 0) + size
+            return shared
+
+    def release(self, tenant: str, digest: str) -> None:
+        with self._lock:
+            owners = self._claims.get(digest)
+            if owners is not None:
+                owners.discard(tenant)
+                if not owners:
+                    self._claims.pop(digest, None)
+            order = self._order.get(tenant)
+            if order is not None and digest in order:
+                order.remove(digest)
+
+    # ------------------------------------------------------------ queries
+    def charged(self, tenant: str) -> float:
+        """Tenant's share of the physical resident bytes of its claimed
+        digests: ``size x replicas / claimants`` per digest. Summing this
+        over every tenant yields exactly :meth:`physical_bytes` —
+        conservation, asserted by the benchmark."""
+        with self._lock:
+            total = 0.0
+            for digest in self._order.get(tenant, ()):
+                owners = self._claims.get(digest)
+                reps = self._replicas.get(digest, 0)
+                if owners and tenant in owners and reps:
+                    total += self._sizes.get(digest, 0) * reps / len(owners)
+            return total
+
+    def saved(self, tenant: str) -> int:
+        with self._lock:
+            return self._saved.get(tenant, 0)
+
+    def physical_bytes(self) -> int:
+        """Resident bytes across all CLAIMED digests, each node copy
+        counted once (the quantity tenant charges partition)."""
+        with self._lock:
+            return sum(self._sizes.get(d, 0) * reps
+                       for d, reps in self._replicas.items()
+                       if self._claims.get(d))
+
+    def private_digests(self, tenant: str) -> List[str]:
+        """Eviction candidates for quota pressure: resident digests
+        claimed ONLY by this tenant, oldest claim first. Digests other
+        tenants also claim are never victims of one tenant's quota."""
+        with self._lock:
+            return [d for d in self._order.get(tenant, ())
+                    if self._claims.get(d) == {tenant}
+                    and self._replicas.get(d)]
+
+    def snapshot(self) -> Dict[str, dict]:
+        with self._lock:
+            tenants = set(self._order) | set(self._saved)
+            out = {}
+            for t in tenants:
+                charged = 0.0
+                for digest in self._order.get(t, ()):
+                    owners = self._claims.get(digest)
+                    reps = self._replicas.get(digest, 0)
+                    if owners and t in owners and reps:
+                        charged += (self._sizes.get(digest, 0) * reps
+                                    / len(owners))
+                out[t] = {"charged": charged,
+                          "saved": self._saved.get(t, 0),
+                          "claims": len(self._order.get(t, ()))}
+            return out
+
+
+class CasSharing:
+    def __init__(self, cluster, *, share_default: bool = True):
+        self.cluster = cluster
+        self.share_default = share_default
+        self.ledger = TenantLedger()
+        self._lock = threading.Lock()
+        self._quotas: Dict[str, Optional[int]] = {}
+        self._salts: Dict[str, Optional[bytes]] = {}
+        self.stats = {"pressure_evictions": 0, "shared_claims": 0}
+        cluster.digests.add_ledger(self.ledger.on_residency)
+
+    # ------------------------------------------------------------- wiring
+    def register(self, tenant: str, quota: TenantQuota) -> None:
+        isolated = not (quota.share_cas and self.share_default)
+        with self._lock:
+            self._quotas[tenant] = quota.cas_bytes
+            # salting the digest is the WHOLE isolation mechanism: the
+            # content hashes into a tenant-private namespace, so neither
+            # the buffer alias check nor the registry can ever match it
+            # against another tenant's bytes
+            self._salts[tenant] = (f"cas-ns:{tenant}:".encode()
+                                   if isolated else None)
+
+    def salt_for(self, tenant: Optional[str]) -> Optional[bytes]:
+        if tenant is None:
+            return None
+        with self._lock:
+            return self._salts.get(tenant)
+
+    # ------------------------------------------------------------- policy
+    def claim(self, tenant: str, digest: str, size: int) -> bool:
+        """Runner hook: a stage of ``tenant``'s workflow seeded
+        ``digest``. Returns whether the claim aliased cross-tenant
+        resident bytes."""
+        shared = self.ledger.claim(tenant, digest, size)
+        if shared:
+            with self._lock:
+                self.stats["shared_claims"] += 1
+        return shared
+
+    def pressure(self, tenant: str) -> int:
+        """Quota-driven eviction: while the tenant's charged bytes exceed
+        its ``cas_bytes`` quota, drop its oldest tenant-private digests
+        from every holder node (the buffer drop flows back through
+        residency -> registry -> ledger, so the charge falls as replicas
+        disappear). Called between runs, never on the data path — an
+        active run's inputs are not yanked out from under a waiting
+        consumer. Returns digests evicted."""
+        with self._lock:
+            quota = self._quotas.get(tenant)
+        if quota is None:
+            return 0
+        evicted = 0
+        for digest in self.ledger.private_digests(tenant):
+            if self.ledger.charged(tenant) <= quota:
+                break
+            self._drop_digest(tenant, digest)
+            evicted += 1
+        return evicted
+
+    def _drop_digest(self, tenant: str, digest: str) -> None:
+        """Evict every node replica of a tenant-private digest. Runs with
+        no fleet lock held: each ``buffer.drop`` re-enters the registry
+        and the ledger through the residency chain."""
+        for node_name in list(self.cluster.digests.nodes_for(digest)):
+            node = self.cluster.nodes.get(node_name)
+            if node is None:
+                continue
+            key = node.buffer.find_digest(digest)
+            if key is not None:
+                node.buffer.drop(key)
+        self.ledger.release(tenant, digest)
+        with self._lock:
+            self.stats["pressure_evictions"] += 1
+
+    # -------------------------------------------------------------- stats
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            snap = dict(self.stats)
+        snap["physical_bytes"] = self.ledger.physical_bytes()
+        snap["tenants"] = self.ledger.snapshot()
+        return snap

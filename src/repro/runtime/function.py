@@ -79,6 +79,9 @@ class LifecycleRecord:
     relay_shared: bool = False    # transfer piggybacked on an in-flight relay
     transfer_stalled: bool = False  # data-path thread outlived its join budget
     prefetched: bool = False      # scheduler kicked the relay at placement
+    warm_hit: bool = False        # served by a pooled warm instance (no ν+η)
+    prewarmed: bool = False       # instance was pool-provisioned ahead of the
+    #                               trigger (plan-aware pre-warm / adoption)
     compress_ratio: Optional[float] = None  # wire bytes / payload bytes
     io_blocked_s: Optional[float] = None  # measured blocked wait (streaming)
     predicted_s: Optional[float] = None  # Eq. 4 compile-time stage time (sim
@@ -198,6 +201,10 @@ class FunctionInstance:
         self.cluster = cluster
         self.state = self.COLD
         self._lock = threading.Lock()
+        #: pool bookkeeping (stamped by the platform / fleet pools, read
+        #: without the instance lock: plain floats/bools, monotonic writers)
+        self.prewarmed = False        # provisioned ahead of any trigger
+        self.idle_since = 0.0         # clock.now() at last pool checkin
 
     def _require_alive(self) -> None:
         if not getattr(self.node, "alive", True):

@@ -22,12 +22,25 @@ class Platform:
     #: nearly free.
     INGRESS_OVERHEAD_S = 0.30
     REF_TRIGGER_OVERHEAD_S = 0.05
+    #: default warm-pool cap per function: a checkin past it discards the
+    #: instance (scale-down) instead of growing the pool forever — a burst
+    #: used to pin its high-water mark of sandboxes permanently
+    DEFAULT_POOL_MAX = 8
 
     def __init__(self, cluster):
         self.cluster = cluster
         self._specs: Dict[str, FunctionSpec] = {}
         self._warm: Dict[str, List[FunctionInstance]] = {}
         self._lock = threading.Lock()
+        # fn -> (max_instances, idle_ttl_s | None, min_keep): fleet pool
+        # sizing; unset functions get (DEFAULT_POOL_MAX, no TTL, 0)
+        self._pool_limits: Dict[str, Tuple[int, Optional[float], int]] = {}
+        #: fleet warm-pool manager hook (WarmPools attaches itself): on a
+        #: warm-checkout miss the platform may ADOPT an instance the pool is
+        #: already provisioning instead of paying a fresh cold start
+        self.pools = None
+        self.stats = {"warm_hits": 0, "cold_starts": 0, "adoptions": 0,
+                      "pool_drops": 0, "pool_expired": 0}
 
     # ------------------------------------------------------------------ API
     def register(self, spec: FunctionSpec) -> None:
@@ -39,6 +52,34 @@ class Platform:
         with self._lock:
             for name in ([fn] if fn else list(self._warm)):
                 self._warm[name] = []
+
+    def set_pool_limit(self, fn: str, max_instances: int,
+                       idle_ttl_s: Optional[float] = None,
+                       min_instances: int = 0) -> None:
+        """Size ``fn``'s warm pool: checkins past ``max_instances`` discard
+        the instance, and instances idle longer than ``idle_ttl_s``
+        sim-seconds expire (lazily, at checkout / ``reap_idle`` time) down
+        to a floor of ``min_instances``."""
+        with self._lock:
+            self._pool_limits[fn] = (max(int(max_instances), 0), idle_ttl_s,
+                                     max(int(min_instances), 0))
+
+    def pool_limit(self, fn: str) -> Tuple[int, Optional[float], int]:
+        """(max, idle_ttl_s, min) in force for ``fn``'s warm pool."""
+        with self._lock:
+            return self._pool_limits.get(fn, (self.DEFAULT_POOL_MAX, None, 0))
+
+    def reap_idle(self) -> int:
+        """Expire TTL-idle warm instances across all pools; returns how many
+        were reaped. (Checkout also expires lazily — this is the explicit
+        sweep for pools nothing is invoking.)"""
+        clock = self.cluster.clock
+        now = clock.now()
+        before = self.stats["pool_expired"]
+        with self._lock:
+            for fn in list(self._warm):
+                self._expire_idle_locked(fn, now)
+        return self.stats["pool_expired"] - before
 
     def warm_instances(self, fn: str) -> List[FunctionInstance]:
         with self._lock:
@@ -91,23 +132,32 @@ class Platform:
         scheduled_node = None           # set iff this invocation took a load
         if inst is not None:            # credit via scheduler.schedule()
             rec.cold = False
+            rec.warm_hit = True
+            rec.prewarmed = inst.prewarmed
             rec.t_placed = rec.t_prov_end = rec.t_startup_end = clock.now()
             rec.node = inst.node.name
+            with self._lock:
+                self.stats["warm_hits"] += 1
             # host already assigned — tell the watcher (hot-function path)
             self.cluster.bus.publish("scheduling.placed", {
                 "function": spec.name, "node": inst.node.name,
                 "invocation": inv_id, "warm": True, "t": clock.now()})
         else:
-            node = self.cluster.scheduler.schedule(
-                spec, inv_id,
-                hint=(hint if hint is not None
-                      else PlacementHint.from_request(request)),
-                record=rec)
-            scheduled_node = node.name
-            rec.t_placed = clock.now()
-            rec.node = node.name
-            inst = FunctionInstance(spec, node, self.cluster)
-            inst.provision(rec)          # ν + η (Truffle's overlap window)
+            if self.pools is not None:
+                inst = self._adopt_provisioning(request.fn, rec, spec, inv_id)
+            if inst is None:
+                node = self.cluster.scheduler.schedule(
+                    spec, inv_id,
+                    hint=(hint if hint is not None
+                          else PlacementHint.from_request(request)),
+                    record=rec)
+                scheduled_node = node.name
+                rec.t_placed = clock.now()
+                rec.node = node.name
+                inst = FunctionInstance(spec, node, self.cluster)
+                inst.provision(rec)      # ν + η (Truffle's overlap window)
+                with self._lock:
+                    self.stats["cold_starts"] += 1
 
         try:
             # queue-proxy resumes the request: a direct payload crosses the
@@ -119,8 +169,7 @@ class Platform:
                 rec.t_transfer_end = clock.now()
 
             out = inst.invoke(request, rec)
-            with self._lock:
-                self._warm[request.fn].append(inst)
+            self._checkin(request.fn, inst)
             return out
         finally:
             # release ONLY what schedule() charged: warm checkouts never took
@@ -130,9 +179,84 @@ class Platform:
             if scheduled_node is not None:
                 self.cluster.scheduler.release(scheduled_node)
 
+    def _adopt_provisioning(self, fn: str, rec: LifecycleRecord,
+                            spec: FunctionSpec,
+                            inv_id: str) -> Optional[FunctionInstance]:
+        """Checkout miss while the fleet pool is still provisioning an
+        instance for ``fn``: wait for THAT cold start instead of paying a
+        fresh one — the CSP ship lands in an already-provisioning sandbox.
+        The record stays ``cold`` (honest accounting: the invocation did
+        wait), but its cold-start phase is only the RESIDUAL wait, not the
+        full ν+η. Returns None (fall back to a real cold start) when
+        nothing is in flight or the adopted provision failed."""
+        pw = self.pools.adopt(fn)
+        if pw is None:
+            return None
+        clock = self.cluster.clock
+        rec.t_placed = clock.now()
+        pw.ready.wait(timeout=120.0)
+        inst = pw.instance
+        if (pw.error is not None or inst is None
+                or inst.state != FunctionInstance.WARM
+                or not getattr(inst.node, "alive", True)):
+            return None
+        rec.node = inst.node.name
+        rec.prewarmed = True
+        rec.t_prov_end = rec.t_startup_end = clock.now()
+        with self._lock:
+            self.stats["adoptions"] += 1
+        self.cluster.bus.publish("scheduling.placed", {
+            "function": spec.name, "node": inst.node.name,
+            "invocation": inv_id, "warm": False, "prewarm_adopted": True,
+            "t": clock.now()})
+        return inst
+
+    def _checkin(self, fn: str, inst: FunctionInstance) -> None:
+        """Return an instance to the warm pool — bounded: past the pool's
+        ``max`` the instance is discarded (scale-down) instead of appended,
+        so a burst no longer inflates the pool permanently."""
+        inst.idle_since = self.cluster.clock.now()
+        with self._lock:
+            limit = self._pool_limits.get(fn,
+                                          (self.DEFAULT_POOL_MAX, None, 0))
+            pool = self._warm.setdefault(fn, [])
+            if len(pool) < limit[0]:
+                pool.append(inst)
+            else:
+                self.stats["pool_drops"] += 1
+
+    def checkin_prewarmed(self, fn: str, inst: FunctionInstance) -> None:
+        """A pool-provisioned instance lands in the warm pool (subject to
+        the same cap as any checkin)."""
+        self._checkin(fn, inst)
+
+    def _expire_idle_locked(self, fn: str, now: float) -> None:
+        """Drop WARM instances idle past the pool's TTL, keeping the newest
+        ``min`` as a floor. Caller holds ``self._lock``."""
+        limit = self._pool_limits.get(fn)
+        if limit is None or limit[1] is None:
+            return
+        _max, ttl, keep = limit
+        pool = self._warm.get(fn)
+        if not pool or len(pool) <= keep:
+            return
+        clock = self.cluster.clock
+        expired = [
+            inst for inst in pool
+            if inst.state == FunctionInstance.WARM
+            and clock.elapsed_sim(now - inst.idle_since) > ttl]
+        # floor: retain the most-recently idle of the expired set
+        excess = expired[:max(len(pool) - keep, 0)] if keep else expired
+        if not excess:
+            return
+        gone = set(map(id, excess))
+        self._warm[fn] = [i for i in pool if id(i) not in gone]
+        self.stats["pool_expired"] += len(excess)
+
     def _checkout_warm(self, fn: str) -> Optional[FunctionInstance]:
         health = getattr(self.cluster, "health", None)
         with self._lock:
+            self._expire_idle_locked(fn, self.cluster.clock.now())
             pool = self._warm.get(fn, [])
             for i, inst in enumerate(pool):
                 if inst.state != FunctionInstance.WARM:

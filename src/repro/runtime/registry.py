@@ -33,8 +33,20 @@ class DigestRegistry:
         # digest -> {node_name: resident_bytes}
         self._where: Dict[str, Dict[str, int]] = {}
         self.stats = {"publishes": 0, "withdrawals": 0}
+        # fleet accounting callbacks: cb(event, node, digest, size) with
+        # event in {"added", "removed"}, invoked OUTSIDE the registry lock
+        # at exactly the points the bus events fire — a ledger may re-enter
+        # the registry (or take its own lock) from the callback.
+        # Append-only at wiring time, so iteration needs no lock.
+        self._ledgers: list = []
 
     # ------------------------------------------------------------- wiring
+    def add_ledger(self, cb) -> None:
+        """Register a residency-accounting callback (e.g. the fleet's
+        TenantLedger): called as ``cb("added"|"removed", node, digest,
+        size)`` after each residency change is applied."""
+        self._ledgers.append(cb)
+
     def listener(self, node_name: str):
         """Residency callback for one node's Buffer (``on_residency``)."""
         def on_residency(digest: str, size: int, resident: bool) -> None:
@@ -53,9 +65,13 @@ class DigestRegistry:
             fresh = node not in self._where.setdefault(digest, {})
             self._where[digest][node] = size
             self.stats["publishes"] += 1
-        if fresh and self._bus is not None:
-            self._bus.publish(EVENT_DIGEST_ADDED,
-                              {"digest": digest, "node": node, "bytes": size})
+        if fresh:
+            for cb in self._ledgers:
+                cb("added", node, digest, size)
+            if self._bus is not None:
+                self._bus.publish(EVENT_DIGEST_ADDED,
+                                  {"digest": digest, "node": node,
+                                   "bytes": size})
 
     def withdraw(self, node: str, digest: str) -> None:
         """Record that ``node`` no longer resolves ``digest`` (evicted or
@@ -70,9 +86,13 @@ class DigestRegistry:
                 if not nodes:
                     del self._where[digest]
                 self.stats["withdrawals"] += 1
-        if size is not None and self._bus is not None:
-            self._bus.publish(EVENT_DIGEST_REMOVED,
-                              {"digest": digest, "node": node, "bytes": size})
+        if size is not None:
+            for cb in self._ledgers:
+                cb("removed", node, digest, size)
+            if self._bus is not None:
+                self._bus.publish(EVENT_DIGEST_REMOVED,
+                                  {"digest": digest, "node": node,
+                                   "bytes": size})
 
     def drop_node(self, node: str) -> Dict[str, int]:
         """Forget EVERY residency entry for ``node`` (death or removal):
@@ -90,8 +110,10 @@ class DigestRegistry:
                     if not nodes:
                         del self._where[digest]
                     self.stats["withdrawals"] += 1
-        if self._bus is not None:
-            for digest, size in dropped.items():
+        for digest, size in dropped.items():
+            for cb in self._ledgers:
+                cb("removed", node, digest, size)
+            if self._bus is not None:
                 self._bus.publish(EVENT_DIGEST_REMOVED,
                                   {"digest": digest, "node": node,
                                    "bytes": size})

@@ -172,6 +172,16 @@ class Scheduler:
         })
         return node
 
+    def pick_node(self, spec: FunctionSpec,
+                  hint: Optional[PlacementHint] = None):
+        """Placement decision WITHOUT the α sleep, the load credit, or the
+        ``scheduling.placed`` event — the fleet's pre-warm path: pool
+        provisioning wants the node a real dispatch would pick (locality,
+        health penalties, and ``avoid`` all apply), but must not charge
+        load for a sandbox no request occupies yet nor publish a placement
+        the CSP watcher would ship data after."""
+        return self._pick(spec, hint)
+
     def _weight(self, hint: Optional[PlacementHint]) -> float:
         if hint is not None and hint.weight is not None:
             return hint.weight

@@ -282,7 +282,9 @@ class WorkflowRunner:
                  estimates: Optional[Dict[str, PhaseEstimate]] = None,
                  stream: bool = False, dedup: bool = False,
                  replan: Optional[ReplanPolicy] = None,
-                 planner: Optional[Planner] = None):
+                 planner: Optional[Planner] = None,
+                 tenant: Optional[str] = None,
+                 cas_salt: Optional[bytes] = None):
         """``policy`` (or a precompiled ``plan``) is the native surface.
         The legacy runner-global knobs — ``storage``/``stream``/``dedup``/
         ``straggler_factor`` — are a back-compat shim: they construct the
@@ -293,8 +295,17 @@ class WorkflowRunner:
         module docstring); ``planner`` overrides the planner used for
         compiles AND replans (default: a telemetry-wired
         :class:`~repro.runtime.planner.AdaptivePlanner` when either
-        ``replan`` is set or ``compile`` receives edge profiles)."""
+        ``replan`` is set or ``compile`` receives edge profiles).
+
+        ``tenant``/``cas_salt`` are the fleet context (set by
+        :class:`~repro.runtime.fleet.serving.Fleet`): the tenant tags
+        requests and claims seeded digests on the fleet's per-tenant
+        ledger; a salt namespaces this run's content digests — the
+        sharing layer's isolation switch (salted content can never alias
+        to another tenant's bytes)."""
         self.cluster = cluster
+        self.tenant = tenant
+        self.cas_salt = cas_salt
         self.use_truffle = use_truffle
         self.prewarm_roots = prewarm_roots
         self.estimates = estimates or {}
@@ -439,6 +450,13 @@ class WorkflowRunner:
                     threading.Thread(target=run_stage,
                                      args=(name, planbox["plan"]),
                                      daemon=True).start()
+            # plan-aware pre-warming: a stage whose deps are ALL dispatched
+            # triggers next wave — the fleet pool provisions its sandboxes
+            # now, so the CSP ship lands in an already-provisioning sandbox
+            # (runs outside done_cv: provisioning threads publish on the bus)
+            pools = getattr(cluster.platform, "pools", None)
+            if pools is not None:
+                pools.prewarm_next_wave(wf, planbox["plan"], started)
             with done_cv:
                 # re-check under the lock: a stage that completed while we
                 # were dispatching already notified — don't sleep past it
@@ -463,10 +481,15 @@ class WorkflowRunner:
         where they actually live — the multi-input fan-in hint."""
         if not sp.seed_output or not self.use_truffle:
             return
-        sr.digest = content_digest(sr.output)
+        sr.digest = self._digest(sr.output)
         node = self.cluster.nodes.get(sr.record.node)
         if node is not None:
             publish_content(node, sr.output, sr.digest)
+        # fleet context: claim the seeded bytes on the tenant's CAS ledger
+        # (per-tenant accounting + cross-tenant alias detection)
+        fleet = getattr(self.cluster, "fleet", None)
+        if fleet is not None and self.tenant is not None:
+            fleet.claim(self.tenant, sr.digest, len(sr.output))
 
     # ------------------------------------------------- input (re)derivation
     def _stage_input(self, sp: StagePlan,
@@ -738,8 +761,15 @@ class WorkflowRunner:
                 return ev["node"]
         return None
 
-    @staticmethod
-    def _known_digest(pol: DataPolicy, data: bytes,
+    def _digest(self, data: bytes) -> str:
+        """Content digest, namespaced by the fleet's tenant salt when one
+        is set (``share_cas=False`` isolation: salted digests can never
+        collide with — so never alias to — another tenant's content)."""
+        if self.cas_salt is not None:
+            return content_digest(self.cas_salt + data)
+        return content_digest(data)
+
+    def _known_digest(self, pol: DataPolicy, data: bytes,
                       input_hints: tuple) -> Optional[str]:
         """The stage input's digest when an upstream seed already computed
         it (single-dep stage: input IS the dep's output) — re-hashing tens
@@ -748,7 +778,7 @@ class WorkflowRunner:
             return None
         if len(input_hints) == 1 and input_hints[0][1] == len(data):
             return input_hints[0][0]
-        return content_digest(data)
+        return self._digest(data)
 
     def _invoke_once(self, name: str, spec: FunctionSpec, sp: StagePlan,
                      data: bytes, source_node: str, input_hints: tuple,
@@ -760,6 +790,8 @@ class WorkflowRunner:
         meta = {}
         # baseline paths have no policy plumbing — the hint directives ride
         # the request meta and PlacementHint.from_request picks them up
+        if self.tenant is not None:
+            meta["tenant"] = self.tenant    # fleet context (observability)
         if avoid is not None:
             meta["avoid_node"] = avoid
         if pol.prefetch and self.use_truffle:

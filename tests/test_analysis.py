@@ -74,6 +74,26 @@ def test_repo_clean_against_baseline():
         f"{v.ident}: {v.message}" for v in fresh)
 
 
+def test_fleet_subpackage_is_walked_and_its_locks_named():
+    """The auditor's default roots cover ``runtime/fleet/`` and resolve the
+    fleet classes' lock identities (NAME_HINTS), so new fleet code cannot
+    silently escape the lock-graph."""
+    from repro.analysis.__main__ import DEFAULT_PATHS
+
+    assert any(p.endswith(os.path.join("runtime", "fleet"))
+               for p in DEFAULT_PATHS)
+    prog = analyze_paths(DEFAULT_PATHS)
+    for ident in ("FleetGate._lock", "WarmPools._lock",
+                  "TenantLedger._lock", "CasSharing._lock", "Fleet._lock"):
+        assert ident in prog.decls, f"{ident} missing from lock graph"
+    # dual roots (runtime/ AND the explicit runtime/fleet/ entry) must not
+    # double-count files reached through both
+    without_dup = analyze_paths(
+        [p for p in DEFAULT_PATHS
+         if not p.endswith(os.path.join("runtime", "fleet"))])
+    assert len(prog.acqs) == len(without_dup.acqs)
+
+
 def test_cli_exits_zero_on_clean_tree():
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     proc = subprocess.run([sys.executable, "-m", "repro.analysis"],

@@ -1,0 +1,411 @@
+"""Fleet subsystem: admission gate (quotas, Eq. 5 ordering, fairness),
+warm pools (pre-warm, adoption, caps), CAS sharing (ledger conservation,
+quota pressure, isolation), and the end-to-end multi-tenant serving path."""
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.runtime.cluster import Cluster
+from repro.runtime.fleet import (AdmissionRejected, CasSharing, Fleet,
+                                 FleetGate, PoolPolicy, TenantLedger,
+                                 TenantQuota, WarmPools)
+from repro.runtime.function import FunctionSpec, Request
+from repro.runtime.policy import DataPolicy
+from repro.runtime.workflow import Stage, Workflow
+
+
+# ------------------------------------------------------------------ helpers
+
+def _chain(tag, n=3, *, provision_s=0.4, payload=None, dedup=True):
+    """n-stage chain whose every stage echoes its input (so content is
+    identical across workflows built with the same payload)."""
+    def handler(data, inv):
+        return data or b"x"
+
+    stages = {}
+    for i in range(n):
+        spec = FunctionSpec(f"fleet-{tag}-{i}", handler,
+                            provision_s=provision_s, startup_s=0.1,
+                            exec_s=0.02)
+        stages[f"s{i}"] = Stage(spec, deps=[f"s{i-1}"] if i else [])
+    return Workflow(f"wf-{tag}", stages,
+                    default_policy=DataPolicy(strategy="direct", dedup=dedup))
+
+
+# ------------------------------------------------------------ admission gate
+
+class _ScriptClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_gate_predicted_ordering_is_sjf():
+    """With the fleet full, the shortest predicted_total admits first."""
+    now = _ScriptClock()
+    gate = FleetGate(fleet_max=1, now_fn=now)
+    hog = gate.submit("a", 5.0)
+    long_t = gate.submit("a", 9.0)
+    short_t = gate.submit("a", 1.0)
+    assert hog.state == "admitted"
+    assert long_t.state == "queued" and short_t.state == "queued"
+    gate.complete(hog)
+    assert short_t.state == "admitted", "SJF must pick the short job"
+    assert long_t.state == "queued"
+
+
+def test_gate_fifo_ordering_ignores_predictions():
+    gate = FleetGate(fleet_max=1, ordering="fifo")
+    hog = gate.submit("a", 5.0)
+    first = gate.submit("a", 9.0)
+    second = gate.submit("a", 1.0)
+    gate.complete(hog)
+    assert first.state == "admitted" and second.state == "queued"
+
+
+def test_gate_sheds_past_queue_quota_with_typed_error():
+    gate = FleetGate(fleet_max=1,
+                     default_quota=TenantQuota(max_concurrent=1,
+                                               max_queued=2))
+    gate.submit("a", 1.0)                      # admitted
+    gate.submit("a", 1.0)
+    gate.submit("a", 1.0)                      # queue now at max_queued=2
+    with pytest.raises(AdmissionRejected) as ei:
+        gate.submit("a", 1.0)
+    assert ei.value.tenant == "a"
+    assert ei.value.reason == "queue-full"
+    assert ei.value.depth >= ei.value.limit
+    assert gate.stats()["a"]["shed"] == 1
+
+
+def test_gate_per_tenant_concurrency_quota():
+    """Tenant 'a' may not occupy the whole fleet past its own cap; 'b'
+    gets the remaining slot even with worse predictions."""
+    gate = FleetGate(fleet_max=4,
+                     default_quota=TenantQuota(max_concurrent=2))
+    a = [gate.submit("a", 1.0) for _ in range(4)]
+    assert [t.state for t in a] == ["admitted", "admitted", "queued",
+                                    "queued"]
+    b = gate.submit("b", 100.0)
+    assert b.state == "admitted", "within-quota tenant must not be starved"
+
+
+def test_gate_aging_prevents_starvation():
+    """An aged long job eventually beats fresher short jobs."""
+    now = _ScriptClock()
+    gate = FleetGate(fleet_max=1, aging_weight=1.0, now_fn=now)
+    hog = gate.submit("x", 1.0)
+    old_long = gate.submit("x", 50.0)
+    now.t = 100.0                              # old_long has waited 100 s
+    fresh_short = gate.submit("x", 1.0)
+    gate.complete(hog)
+    assert old_long.state == "admitted", \
+        "aging must eventually dominate SJF (starvation freedom)"
+    assert fresh_short.state == "queued"
+
+
+def test_gate_tenant_weight_scales_rank():
+    """A weight-2 tenant's jobs rank at half their predicted cost."""
+    gate = FleetGate(fleet_max=1)
+    gate.register("heavy", TenantQuota(weight=2.0))
+    hog = gate.submit("x", 1.0)
+    plain = gate.submit("x", 6.0)
+    weighted = gate.submit("heavy", 10.0)      # 10/2 = 5 < 6
+    gate.complete(hog)
+    assert weighted.state == "admitted"
+    assert plain.state == "queued"
+
+
+def test_gate_events_on_bus():
+    from repro.runtime.events import EventBus
+    bus = EventBus()
+    gate = FleetGate(fleet_max=1, bus=bus,
+                     default_quota=TenantQuota(max_queued=1))
+    gate.submit("a", 1.0)
+    gate.submit("a", 2.0)
+    with pytest.raises(AdmissionRejected):
+        gate.submit("a", 3.0)
+    assert len(bus.history("fleet.admitted")) == 1
+    assert len(bus.history("fleet.queued")) == 1
+    assert len(bus.history("fleet.shed")) == 1
+
+
+@settings(max_examples=30)
+@given(arrivals=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=3),
+              st.integers(min_value=1, max_value=40)),
+    min_size=1, max_size=24))
+def test_gate_fairness_property(arrivals):
+    """Under random arrival mixes: aggregate admitted concurrency never
+    exceeds the fleet cap, no tenant exceeds its own cap, and every
+    queued (non-shed) ticket is eventually admitted as the fleet drains
+    — the no-starvation guarantee the aging term provides."""
+    now = _ScriptClock()
+    fleet_max = 3
+    quota = TenantQuota(max_concurrent=2, max_queued=100)
+    gate = FleetGate(fleet_max=fleet_max, now_fn=now, default_quota=quota)
+
+    def check_caps():
+        st_ = gate.stats()
+        running = sum(v["running"] for v in st_.values())
+        assert running <= fleet_max
+        for v in st_.values():
+            assert v["running"] <= quota.max_concurrent
+
+    tickets = []
+    for tenant_ix, predicted in arrivals:
+        tickets.append(gate.submit(f"t{tenant_ix}", float(predicted)))
+        check_caps()
+        now.t += 1.0
+
+    # drain: complete one admitted ticket per step until all are done
+    pending = list(tickets)
+    steps = 0
+    while pending and steps < 10 * len(tickets) + 10:
+        steps += 1
+        now.t += 1.0
+        admitted = [t for t in pending if t.state == "admitted"]
+        if not admitted:
+            gate.pump()                        # aging advanced; re-rank
+            admitted = [t for t in pending if t.state == "admitted"]
+        assert admitted, "queued tickets with free capacity must admit"
+        gate.complete(admitted[0])
+        pending.remove(admitted[0])
+        check_caps()
+    assert all(t.state == "done" for t in tickets), \
+        "every non-shed ticket must eventually dispatch"
+
+
+# ------------------------------------------------------------------- pools
+
+def test_prewarm_converges_and_pool_is_capped(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    pools = WarmPools(cluster, default=PoolPolicy(min=0, warm=2, max=2))
+    spec = FunctionSpec("pw-fn", lambda d, inv: d, provision_s=0.1,
+                        startup_s=0.05, exec_s=0.01)
+    cluster.platform.register(spec)
+    pools.configure(spec)
+    started = pools.prewarm(spec, 2)
+    assert started == 2
+    # repeated calls count warm + in-flight: nothing stacks past target
+    assert pools.prewarm(spec, 2) == 0
+    deadline = fast_clock.now() + 5.0
+    while (len(cluster.platform.warm_instances("pw-fn")) < 2
+           and fast_clock.now() < deadline):
+        time.sleep(0.005)
+    assert len(cluster.platform.warm_instances("pw-fn")) == 2
+    assert pools.prewarm(spec, 2) == 0
+
+
+def test_adopt_hands_inflight_provision_to_live_request(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    pools = WarmPools(cluster, default=PoolPolicy(warm=1, max=2))
+    spec = FunctionSpec("adopt-fn", lambda d, inv: d or b"y",
+                        provision_s=0.6, startup_s=0.1, exec_s=0.01)
+    cluster.platform.register(spec)
+    pools.configure(spec)
+    pools.prewarm(spec, 1)
+    out, rec = cluster.platform.invoke(
+        Request(fn="adopt-fn", payload=b"hi", source_node="edge-0"))
+    assert rec.prewarmed, "checkout miss must adopt the in-flight provision"
+    assert rec.cold, "adoption still waited — honest cold accounting"
+    assert cluster.platform.stats["adoptions"] == 1
+    # the adopted instance is checked back in afterwards: next call is warm
+    out, rec2 = cluster.platform.invoke(
+        Request(fn="adopt-fn", payload=b"hi", source_node="edge-0"))
+    assert rec2.warm_hit and rec2.prewarmed and not rec2.cold
+
+
+def test_prewarmed_bus_event_fires(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    pools = WarmPools(cluster, default=PoolPolicy(warm=1, max=2))
+    spec = FunctionSpec("ev-fn", lambda d, inv: d, provision_s=0.05,
+                        startup_s=0.02, exec_s=0.01)
+    cluster.platform.register(spec)
+    pools.configure(spec)
+    pools.prewarm(spec, 1)
+    deadline = fast_clock.now() + 5.0
+    while (not cluster.bus.history("fleet.prewarmed")
+           and fast_clock.now() < deadline):
+        time.sleep(0.005)
+    evs = cluster.bus.history("fleet.prewarmed")
+    assert evs and evs[0]["function"] == "ev-fn"
+
+
+# ---------------------------------------------------------------- sharing
+
+def test_ledger_conservation_and_cross_tenant_saving():
+    led = TenantLedger()
+    led.on_residency("added", "n1", "d1", 100)
+    led.on_residency("added", "n2", "d1", 100)    # 2 replicas
+    led.on_residency("added", "n1", "d2", 50)
+    assert led.claim("a", "d1", 100) is False     # first claimant: no alias
+    assert led.claim("b", "d1", 100) is True      # cross-tenant alias
+    led.claim("a", "d2", 50)
+    # conservation: per-tenant charges partition the physical bytes
+    assert led.physical_bytes() == 2 * 100 + 50
+    assert abs(led.charged("a") + led.charged("b")
+               - led.physical_bytes()) < 1e-9
+    assert led.saved("b") == 100 and led.saved("a") == 0
+    # d1 is shared: never a private eviction victim; d2 is a-private
+    assert led.private_digests("a") == ["d2"]
+    assert led.private_digests("b") == []
+
+
+def test_sharing_isolation_salts_digests():
+    class _Digests:
+        def add_ledger(self, cb):
+            pass
+
+    class _Cluster:
+        digests = _Digests()
+
+    sh = CasSharing(_Cluster())
+    sh.register("open", TenantQuota(share_cas=True))
+    sh.register("sealed", TenantQuota(share_cas=False))
+    assert sh.salt_for("open") is None
+    assert sh.salt_for("sealed") == b"cas-ns:sealed:"
+    assert sh.salt_for(None) is None
+
+
+def test_quota_pressure_evicts_private_digests(fast_clock):
+    from repro.core.transfer import publish_content
+    cluster = Cluster(clock=fast_clock)
+    sh = CasSharing(cluster)
+    sh.register("a", TenantQuota(cas_bytes=150))
+    node = cluster.node_list[0]
+    blobs = [b"A" * 100, b"B" * 100]
+    from repro.core.buffer import content_digest
+    digests = [content_digest(b) for b in blobs]
+    for b, d in zip(blobs, digests):
+        publish_content(node, b, d)
+        sh.claim("a", d, len(b))
+    assert sh.ledger.charged("a") == 200
+    evicted = sh.pressure("a")
+    assert evicted >= 1
+    assert sh.ledger.charged("a") <= 150
+    # the oldest private digest left the node's buffer AND the registry
+    assert node.buffer.find_digest(digests[0]) is None
+    assert cluster.digests.nodes_for(digests[0]) == {}
+
+
+# ------------------------------------------------------------- end to end
+
+def test_fleet_end_to_end_multitenant(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    fleet = Fleet(cluster, fleet_max=2, ordering="predicted",
+                  pool_policy=PoolPolicy(warm=1, max=4))
+    fleet.register_tenant("acme", TenantQuota(max_concurrent=2))
+    fleet.register_tenant("globex", TenantQuota(max_concurrent=2))
+    runs = [fleet.submit("acme", _chain("a0"), b"p" * 512),
+            fleet.submit("globex", _chain("g0"), b"p" * 512),
+            fleet.submit("acme", _chain("a1"), b"p" * 512)]
+    traces = [r.result(timeout=120) for r in runs]
+    assert all(len(t.stages) == 3 for t in traces)
+    stats = fleet.stats()
+    assert stats["tenants"]["acme"]["completed"] == 2
+    assert stats["tenants"]["globex"]["completed"] == 1
+    # plan-aware pre-warming absorbed cold starts on next-wave stages
+    assert stats["tenants"]["acme"]["warm_hit_rate"] > 0
+    assert any(sr.record.warm_hit or sr.record.prewarmed
+               for t in traces for sr in t.stages.values())
+    # queue-to-run lifecycle events are on the bus
+    assert len(cluster.bus.history("fleet.admitted")) == 3
+    # identical cross-tenant content: resident once per node, and the
+    # later tenant's claim counts as saved bytes
+    assert stats["tenants"]["globex"]["cas_saved_bytes"] \
+        + stats["tenants"]["acme"]["cas_saved_bytes"] > 0
+
+
+def test_fleet_cross_tenant_bytes_resident_once_per_node(fast_clock):
+    """Two tenants seeding IDENTICAL content alias to one resident copy
+    per node (shared CAS), and the ledger's per-tenant charges conserve
+    the physical bytes."""
+    cluster = Cluster(clock=fast_clock)
+    fleet = Fleet(cluster, fleet_max=2, pools=False)
+    fleet.register_tenant("t1", TenantQuota())
+    fleet.register_tenant("t2", TenantQuota())
+    r1 = fleet.submit("t1", _chain("x1", n=2), b"same-bytes" * 64)
+    r1.result(timeout=120)
+    r2 = fleet.submit("t2", _chain("x2", n=2), b"same-bytes" * 64)
+    r2.result(timeout=120)
+    led = fleet.sharing.ledger
+    for node in cluster.node_list:
+        for digest in list(cluster.digests.holdings(node.name)):
+            # one buffer key per digest per node — never a second copy
+            assert node.buffer.find_digest(digest) is not None
+    assert abs(led.charged("t1") + led.charged("t2")
+               - led.physical_bytes()) < 1e-9
+    assert led.saved("t2") > 0, "t2's identical content must alias"
+
+
+def test_fleet_isolated_tenant_never_aliases(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    fleet = Fleet(cluster, fleet_max=2, pools=False)
+    fleet.register_tenant("open", TenantQuota())
+    fleet.register_tenant("sealed", TenantQuota(share_cas=False))
+    fleet.submit("open", _chain("o", n=2), b"zz" * 64).result(timeout=120)
+    fleet.submit("sealed", _chain("s", n=2), b"zz" * 64).result(timeout=120)
+    assert fleet.sharing.ledger.saved("sealed") == 0, \
+        "share_cas=False must prevent cross-tenant aliasing"
+    assert fleet.sharing.stats["shared_claims"] == 0
+
+
+def test_fleet_shed_surfaces_to_submitter(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    fleet = Fleet(cluster, fleet_max=1, pools=False,
+                  default_quota=TenantQuota(max_concurrent=1, max_queued=0))
+    slow = fleet.submit("a", _chain("slow", provision_s=2.0), b"x")
+    with pytest.raises(AdmissionRejected):
+        fleet.submit("a", _chain("shed2"), b"x")
+    slow.result(timeout=120)
+
+
+def test_fleet_stats_shape(fast_clock):
+    cluster = Cluster(clock=fast_clock)
+    fleet = Fleet(cluster, fleet_max=2)
+    fleet.register_tenant("a", TenantQuota())
+    fleet.submit("a", _chain("st", n=2), b"x" * 32).result(timeout=120)
+    stats = fleet.stats()
+    for key in ("queue_depth", "running", "shed", "completed",
+                "warm_hit_rate", "cas_saved_bytes", "cas_charged_bytes"):
+        assert key in stats["tenants"]["a"]
+    assert "pools" in stats and "platform" in stats and "sharing" in stats
+
+
+def test_gate_thread_safety_under_concurrent_submitters():
+    """Hammer the gate from many threads: caps hold, nothing deadlocks,
+    everything drains."""
+    gate = FleetGate(fleet_max=4,
+                     default_quota=TenantQuota(max_concurrent=2,
+                                               max_queued=100))
+    tickets, tlock = [], threading.Lock()
+
+    def submitter(tenant):
+        for i in range(10):
+            t = gate.submit(tenant, float(i % 5 + 1))
+            with tlock:
+                tickets.append(t)
+
+    threads = [threading.Thread(target=submitter, args=(f"t{i}",))
+               for i in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=10)
+    assert gate.running() <= 4
+    # drain
+    for _ in range(len(tickets) + 5):
+        admitted = [t for t in tickets if t.state == "admitted"]
+        if not admitted:
+            break
+        gate.complete(admitted[0])
+    assert all(t.state == "done" for t in tickets)

@@ -276,3 +276,58 @@ def test_eviction_prefers_anonymous_entries_over_sole_replicas():
 def fast_clock_obj():
     from repro.runtime.clock import Clock
     return Clock(scale=0.01)
+
+
+# ----------------------------------------------- 4. warm-pool cap and TTL
+def test_burst_does_not_inflate_warm_pool_past_cap(fast_clock):
+    """Six concurrent cold starts used to leave six warm instances forever
+    (unbounded append at check-in). With a pool limit, check-in discards
+    past ``max`` and counts the drop."""
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("pool-cap", lambda d, inv: d, provision_s=0.3,
+                        startup_s=0.05, exec_s=0.05)
+    cluster.platform.register(spec)
+    cluster.platform.set_pool_limit("pool-cap", 2)
+
+    def one(i):
+        cluster.platform.invoke(Request(fn="pool-cap", payload=b"x",
+                                        source_node="edge-0"))
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    pool = cluster.platform.warm_instances("pool-cap")
+    assert len(pool) <= 2
+    assert cluster.platform.stats["pool_drops"] >= 4
+    assert cluster.platform.stats["cold_starts"] == 6
+
+
+def test_idle_warm_instances_expire_by_ttl_down_to_min(fast_clock):
+    """Warm instances idle past ``idle_ttl_s`` (sim-seconds) are reaped,
+    but never below the configured ``min_instances`` floor."""
+    cluster = Cluster(clock=fast_clock)
+    spec = FunctionSpec("pool-ttl", lambda d, inv: d, provision_s=0.1,
+                        startup_s=0.02, exec_s=0.01)
+    cluster.platform.register(spec)
+    cluster.platform.set_pool_limit("pool-ttl", 4, idle_ttl_s=1.0)
+
+    cluster.platform.invoke(Request(fn="pool-ttl", payload=b"a",
+                                    source_node="edge-0"))
+    assert len(cluster.platform.warm_instances("pool-ttl")) == 1
+
+    time.sleep(0.05)                     # 5 sim-seconds at scale=0.01 > TTL
+    assert cluster.platform.reap_idle() == 1
+    assert cluster.platform.warm_instances("pool-ttl") == []
+    assert cluster.platform.stats["pool_expired"] == 1
+
+    # with a min floor the survivor is retained past its TTL
+    cluster.platform.set_pool_limit("pool-ttl", 4, idle_ttl_s=1.0,
+                                    min_instances=1)
+    cluster.platform.invoke(Request(fn="pool-ttl", payload=b"b",
+                                    source_node="edge-0"))
+    time.sleep(0.05)
+    assert cluster.platform.reap_idle() == 0
+    assert len(cluster.platform.warm_instances("pool-ttl")) == 1

@@ -42,6 +42,9 @@ SOAK_WAVES = max(50, int(os.environ.get("SOAK_WAVES", "55")))
 # mid-run are deliberately violent (CAS loss, link teardown) and the
 # recovery machinery has its own unit tier (test_node_faults.py)
 NODE_FAULTS = os.environ.get("SOAK_NODE_FAULTS", "") not in ("", "0")
+# multi-tenant serving soak (SOAK_TENANTS=8 on the nightly job): N tenants
+# flood the fleet gate concurrently; the unit tier lives in test_fleet.py
+SOAK_TENANTS = int(os.environ.get("SOAK_TENANTS", "0") or 0)
 
 
 # ------------------------------------------------------------------ helpers
@@ -249,6 +252,53 @@ def test_soak_node_churn_crash_restart_no_leaks():
         if sr.attempts == 1 and sr.record.predicted_s)
     assert ratios, "no prediction-stamped stages"
     assert 0 < ratios[len(ratios) // 2] < 10.0, ratios[len(ratios) // 2]
+    _assert_drained(cluster, base_threads)
+
+
+@pytest.mark.skipif(not SOAK_TENANTS, reason="set SOAK_TENANTS=N")
+def test_soak_multitenant_fleet_drains_and_conserves():
+    """N tenants flood one fleet with identical chains. Every submission
+    must eventually admit and complete (aging: no starvation), identical
+    cross-tenant content aliases (ledger bytes conserved), warm pools stay
+    capped, and the cluster drains back to baseline."""
+    from repro.runtime.fleet import Fleet, TenantQuota
+
+    base_threads = threading.active_count()
+    cluster = Cluster(clock=Clock(0.004))
+    fleet = Fleet(cluster, fleet_max=4, ordering="predicted")
+    runs = []
+    for i in range(SOAK_TENANTS):
+        tenant = f"t{i}"
+        fleet.register_tenant(tenant, TenantQuota(
+            max_concurrent=2, max_queued=64, warm_slots=2))
+        # one wf per tenant, SHARED spec names + identical stage outputs:
+        # warm pools and the CAS both get cross-tenant reuse pressure
+        wf = _soak_chain("mt", 8, 128 * 1024,
+                         DataPolicy(stream=False, dedup=True))
+        for _ in range(3):
+            runs.append(fleet.submit(tenant, wf, b"go",
+                                     source_node="edge-0"))
+
+    for run in runs:
+        tr = run.result(timeout=180)
+        assert len(tr.stages) == 8
+
+    stats = fleet.stats()
+    for i in range(SOAK_TENANTS):
+        st = stats["tenants"][f"t{i}"]
+        assert st["completed"] == 3 and st["shed"] == 0
+        assert st["running"] == 0 and st["queue_depth"] == 0
+    assert fleet.gate.queue_depth() == 0 and fleet.gate.running() == 0
+    # ledger conservation: charged shares sum exactly to resident bytes
+    ledger = fleet.sharing.ledger
+    charged = sum(ledger.charged(f"t{i}") for i in range(SOAK_TENANTS))
+    assert abs(charged - ledger.physical_bytes()) < 1e-6
+    if SOAK_TENANTS > 1:
+        saved = sum(ledger.saved(f"t{i}") for i in range(SOAK_TENANTS))
+        assert saved > 0                           # aliasing actually hit
+    for i in range(8):
+        assert len(cluster.platform._warm[f"soak-mt-{i}"]) \
+            <= cluster.platform.pool_limit(f"soak-mt-{i}")[0]
     _assert_drained(cluster, base_threads)
 
 
