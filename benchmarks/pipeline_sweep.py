@@ -1,0 +1,218 @@
+"""Function-to-function direct streaming sweep (the CSP at its limit).
+
+An N-stage data-intensive chain where every stage transforms its input
+chunk-by-chunk (identical total compute γ per stage in every mode):
+
+  blob    the seed behavior: each producer's output LANDS WHOLE — the
+          downstream trigger fires at producer completion, the transfer
+          ships after it, and the chain makespan is ~Σ(stage). Cold
+          starts overlap only their own in-edge transfer.
+  piped   ``DataPolicy(pipeline=True)``: every consumer's lightweight
+          trigger fires at CHAIN-HEAD dispatch (its whole cold start
+          overlaps upstream execution) and producer chunks flow through
+          ``Invocation.put_stream`` into the consumer's in-flight buffer
+          entry mid-execution. The chain behaves as a tandem of stations
+          and the makespan approaches max(stage) + fill ε (Eq. 4
+          overlap extension, ``model.pipelined_chain_time``).
+
+The analytic floor is computed from ground-truth parameters (link
+bandwidth/RTT read off the cluster fabric, per-stage γ, measured cold
+starts) through the same recurrence the planner uses, which keeps the
+"how close to ideal" and "how honest is the prediction" checks separate:
+the planner's ``predicted_total`` only sees EdgeProfiles + tier
+estimates.
+
+Emits (benchmarks/common.emit CSV + the BENCH_truffle.json registry):
+  pipeline.chain.<n>x<size>mb.blob       whole-blob chain makespan
+  pipeline.chain.<n>x<size>mb.piped      pipelined chain makespan
+  pipeline.chain.<n>x<size>mb.reduction  piped/blob ratio (asserted
+                                         ≤ 0.6), gap to the analytic
+                                         floor (asserted ≤ 15%), and
+                                         Eq. 4 chain prediction error
+                                         (asserted ≤ 10%)
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import MB, SCALE, emit
+from repro.core.model import pipelined_chain_time
+from repro.runtime.clock import Clock
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import DEFAULT_CHUNK_BYTES, FABRIC_CHUNK_OVERHEAD_S
+from repro.runtime.planner import (AdaptivePlanner, DEFAULT_SCHEDULING_S,
+                                   DEFAULT_TRIGGER_S, EdgeProfile)
+from repro.runtime.policy import DataPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
+
+SIZE = 128 * MB
+N_STAGES = 4                  # head + 2 relays + sink
+EXEC_S = 2.0                  # γ per stage (per-chunk compute sums to this)
+COLD = {"provision_s": 0.5, "startup_s": 0.1}
+
+#: chunk shipping is real per-chunk work (memcpy + locks + fabric grants);
+#: below these clock scales the host CPU outweighs the modeled time — the
+#: full-size chain moves 3×128 chunks, so it needs real time
+MIN_SCALE = 0.2
+MIN_SCALE_FULL = 1.0
+
+
+def _head(size: int):
+    n = max(size // DEFAULT_CHUNK_BYTES, 1)
+
+    def handler(_d, inv):
+        pacer = inv.cluster.clock.pacer()
+
+        def gen():
+            for _ in range(n):
+                pacer.sleep(EXEC_S / n)    # produce as you compute
+                yield bytes(DEFAULT_CHUNK_BYTES)
+        return inv.put_stream(gen())
+    return handler
+
+
+def _relay(size: int):
+    rate = EXEC_S / size
+
+    def handler(_d, inv):
+        pacer = inv.cluster.clock.pacer()
+
+        def gen():
+            for chunk in inv.get_input_stream(timeout=600):
+                pacer.sleep(len(chunk) * rate)    # transform chunk-by-chunk
+                yield chunk
+        return inv.put_stream(gen())
+    return handler
+
+
+def _sink(size: int):
+    rate = EXEC_S / size
+
+    def handler(_d, inv):
+        pacer = inv.cluster.clock.pacer()
+        total = 0
+        for chunk in inv.get_input_stream(timeout=600):
+            pacer.sleep(len(chunk) * rate)
+            total += len(chunk)
+        return total.to_bytes(8, "big")
+    return handler
+
+
+def _stage_names(n: int):
+    return [f"s{i}" for i in range(n)]
+
+
+def _node(i: int) -> str:
+    return f"edge-{i}"
+
+
+def build_workflow(tag: str, size: int, *, pipeline: bool):
+    names = _stage_names(N_STAGES)
+    pol = (DataPolicy(strategy="direct", stream=True, pipeline=True)
+           if pipeline else DataPolicy(strategy="direct"))
+    b = WorkflowBuilder(f"pipe{tag}")
+    b.stage(names[0], FunctionSpec(f"pl-{names[0]}{tag}", _head(size),
+                                   exec_s=EXEC_S, streaming=True,
+                                   streaming_output=True,
+                                   affinity=_node(0), **COLD))
+    for i, name in enumerate(names[1:-1], start=1):
+        b.stage(name, FunctionSpec(f"pl-{name}{tag}", _relay(size),
+                                   exec_s=EXEC_S, streaming=True,
+                                   streaming_output=True,
+                                   affinity=_node(i), **COLD)
+                ).after(names[i - 1]).policy(pol)
+    b.stage(names[-1], FunctionSpec(f"pl-{names[-1]}{tag}", _sink(size),
+                                    exec_s=EXEC_S, streaming=True,
+                                    affinity=_node(N_STAGES - 1), **COLD)
+            ).after(names[-2]).policy(pol)
+    return b.build()
+
+
+def _profiles(size: int):
+    names = _stage_names(N_STAGES)
+    prof = {(None, names[0]): EdgeProfile(size=64, src_node=_node(0),
+                                          dst_node=_node(0))}
+    for i in range(1, N_STAGES):
+        prof[(names[i - 1], names[i])] = EdgeProfile(
+            size=size, src_node=_node(i - 1), dst_node=_node(i))
+    return prof
+
+
+def _cluster(scale: float) -> Cluster:
+    return Cluster(node_specs=[(_node(i), "edge") for i in range(N_STAGES)],
+                   clock=Clock(scale))
+
+
+def _run(tag: str, size: int, scale: float, *, pipeline: bool) -> dict:
+    cluster = _cluster(scale)
+    clock = cluster.clock
+    wf = build_workflow(tag, size, pipeline=pipeline)
+    plan = AdaptivePlanner(cluster).compile(wf, profiles=_profiles(size))
+    runner = WorkflowRunner(cluster, use_truffle=True, plan=plan)
+    tr = runner.run(wf, b"trigger", source_node=_node(0))
+    names = _stage_names(N_STAGES)
+    assert tr.stages[names[-1]].output == size.to_bytes(8, "big")
+    return {"total": clock.elapsed_sim(tr.total),
+            "predicted": plan.predicted_total,
+            "pipelined_stages": sum(1 for sr in tr.stages.values()
+                                    if sr.record.pipelined)}
+
+
+def _floor(cluster: Cluster, size: int) -> float:
+    """Ground-truth tandem floor: same recurrence the planner uses, fed
+    the cluster's actual fabric numbers instead of profiled estimates."""
+    n_chunks = max(size // DEFAULT_CHUNK_BYTES, 1)
+    ready = (DEFAULT_SCHEDULING_S + DEFAULT_TRIGGER_S
+             + COLD["provision_s"] + COLD["startup_s"])
+    edges = []
+    for i in range(1, N_STAGES):
+        ch = cluster.network.channel(cluster.node(_node(i - 1)),
+                                     cluster.node(_node(i)))
+        wire = (size / ch.bandwidth + ch.latency
+                + n_chunks * FABRIC_CHUNK_OVERHEAD_S)
+        edges.append((ready, wire, EXEC_S))
+    return pipelined_chain_time(ready, EXEC_S, edges, n_chunks=n_chunks)
+
+
+def run(scale: float = SCALE, size: int = None):
+    if size is None:
+        size = 32 * MB if os.environ.get("BENCH_FAST") == "1" else SIZE
+    scale = max(scale, MIN_SCALE if size <= 32 * MB else MIN_SCALE_FULL)
+    mb = size >> 20
+    key = f"pipeline.chain.{N_STAGES}x{mb}mb"
+
+    blob = _run(f"-blob-{mb}", size, scale, pipeline=False)
+    piped = _run(f"-piped-{mb}", size, scale, pipeline=True)
+    floor = _floor(_cluster(scale), size)
+
+    ratio = piped["total"] / blob["total"]
+    floor_gap = piped["total"] / floor - 1.0
+    err = (abs(piped["predicted"] - piped["total"]) / piped["total"]
+           if piped["predicted"] is not None else float("nan"))
+
+    emit([
+        (f"{key}.blob", blob["total"],
+         f"total={blob['total']:.3f}s predicted={blob['predicted']:.3f}s"),
+        (f"{key}.piped", piped["total"],
+         f"total={piped['total']:.3f}s predicted={piped['predicted']:.3f}s "
+         f"pipelined_stages={piped['pipelined_stages']}"),
+        (f"{key}.reduction", ratio,
+         f"ratio={ratio:.2f}x floor={floor:.3f}s floor_gap={floor_gap:.1%} "
+         f"eq4_err={err:.1%} le_0.6x={ratio <= 0.6} "
+         f"floor_within_15pct={floor_gap <= 0.15} "
+         f"eq4_within_10pct={err <= 0.10}"),
+    ])
+
+    # acceptance: mid-execution chunk flow collapses the chain makespan to
+    # near the bottleneck stage, and the planner's Eq. 4 overlap term
+    # predicts it honestly
+    assert piped["pipelined_stages"] == N_STAGES - 1, piped
+    assert ratio <= 0.6, (piped["total"], blob["total"])
+    assert floor_gap <= 0.15, (piped["total"], floor)
+    assert err <= 0.10, (piped["predicted"], piped["total"])
+    return ratio
+
+
+if __name__ == "__main__":
+    run()

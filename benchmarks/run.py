@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig11       added-cold-start-delay sweep
   eq4         analytic-model validation (+ pipelined-transfer extension)
   stream.*    chunked-streaming sweep: blob vs stream vs dedup fan-out
+  pipeline.*  function-to-function direct streaming: whole-blob chain vs
+              mid-execution chunk flow (tandem floor + Eq. 4 error)
   locality.*  load-only vs digest-aware placement (fan-out + video)
   policy.*    per-edge DataPolicy plans: mixed vs best global knob;
               multi-input fan-in hints vs joined-blob hashing
@@ -55,8 +57,9 @@ def main() -> None:
     from benchmarks import (adaptive_sweep, chained_sweep, chained_total,
                             coldstart_sweep, fault_sweep, lifecycle,
                             locality_sweep, model_validation,
-                            multitenant_sweep, policy_sweep, replan_sweep,
-                            roofline, streaming_sweep, video_analytics)
+                            multitenant_sweep, pipeline_sweep, policy_sweep,
+                            replan_sweep, roofline, streaming_sweep,
+                            video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -72,6 +75,9 @@ def main() -> None:
     streaming_sweep.run(sizes=(32,) if fast else (32, 128),
                         tiers=("edge-edge",) if fast
                         else ("edge-edge", "edge-cloud"))
+
+    print("# --- function-to-function direct streaming (pipelined chain) ---")
+    pipeline_sweep.run()
 
     print("# --- locality-aware placement ---")
     locality_sweep.run()

@@ -60,6 +60,12 @@ class BufferEntry:
     complete: bool = True
     aborted: bool = False
     size: int = 0
+    #: backpressure high-water mark: with a bound set, ``append_chunk``
+    #: blocks while unconsumed in-flight bytes (size - consumed) would
+    #: exceed it. None = unbounded (the pre-pipelining behavior).
+    highwater: Optional[int] = None
+    #: bytes consumed by the furthest reader (releases backpressure)
+    consumed: int = 0
     _joined: Optional[bytes] = None     # cached join of chunks
 
     @property
@@ -86,6 +92,7 @@ class BufferReader:
         self._timeout = timeout
         self._entry: Optional[BufferEntry] = None
         self._idx = 0
+        self._consumed = 0          # bytes this reader has taken
 
     def __iter__(self) -> "BufferReader":
         return self
@@ -107,6 +114,12 @@ class BufferReader:
                     if self._idx < len(e.chunks):
                         chunk = e.chunks[self._idx]
                         self._idx += 1
+                        self._consumed += len(chunk)
+                        if self._consumed > e.consumed:
+                            # furthest reader advanced: release backpressure
+                            e.consumed = self._consumed
+                            if e.highwater is not None:
+                                buf._cond.notify_all()
                         return chunk
                     if e.complete:
                         raise StopIteration
@@ -131,7 +144,8 @@ class Buffer:
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self.stats = {"puts": 0, "gets": 0, "waits": 0, "evictions": 0,
-                      "dedup_hits": 0, "streams": 0}
+                      "dedup_hits": 0, "streams": 0, "bp_waits": 0,
+                      "alias_promotions": 0}
         #: residency listener: (digest, size, resident) — see module docstring
         self.on_residency: Optional[Callable[[str, int, bool], None]] = None
         #: residency-aware eviction oracle: ``digest -> True`` when the
@@ -277,6 +291,12 @@ class Buffer:
                         self._touch_locked(e)
                     data = e.data
                     break
+                if e is not None and e.highwater is not None:
+                    # a whole-blob waiter cannot drain mid-stream: lift the
+                    # backpressure bound or the writer and this waiter
+                    # deadlock (writer blocked at highwater, us at complete)
+                    e.highwater = None
+                    self._cond.notify_all()
                 remaining = None if deadline is None else deadline - time.monotonic()
                 if remaining is not None and remaining <= 0:
                     return None
@@ -300,14 +320,19 @@ class Buffer:
         return True
 
     # ------------------------------------------------------------- streaming
-    def open_stream(self, key: str, pinned: bool = False) -> None:
+    def open_stream(self, key: str, pinned: bool = False,
+                    highwater: Optional[int] = None) -> None:
         """Create an in-flight entry; chunks land via ``append_chunk``.
-        Incomplete streams are invisible to get/wait_for and never evicted."""
+        Incomplete streams are invisible to get/wait_for and never evicted.
+        With ``highwater`` set, appends block once unconsumed in-flight
+        bytes reach the mark until a reader drains (pipelined edges bound
+        their buffering this way)."""
         with self._cond:
             self._check_online_locked()
             self._drop_locked(key)
             e = BufferEntry(key, time.monotonic(), pinned,
-                            chunks=[], complete=False, size=0)
+                            chunks=[], complete=False, size=0,
+                            highwater=highwater)
             self._insert_locked(e)
             self.stats["streams"] += 1
             self._cond.notify_all()
@@ -322,13 +347,23 @@ class Buffer:
             self._cond.notify_all()
 
     def _append_entry_locked(self, e: BufferEntry, chunk: bytes) -> None:
-        self._check_online_locked()
-        if e.aborted or e.complete:
-            raise IOError(f"{self.name}: stream {e.key!r} no longer open")
+        while True:
+            self._check_online_locked()
+            if e.aborted or e.complete:
+                raise IOError(f"{self.name}: stream {e.key!r} no longer open")
+            if self._entries.get(e.key) is not e:
+                # displaced by a same-key open/set: fail the zombie writer
+                # NOW instead of letting it grow e.size uncharged until close
+                e.aborted = True
+                raise IOError(f"{self.name}: stream {e.key!r} displaced")
+            if (e.highwater is None or not e.chunks
+                    or e.size - e.consumed < e.highwater):
+                break                     # room (first chunk always admitted)
+            self.stats["bp_waits"] += 1
+            self._cond.wait()             # reader drain / abort / offline wake
         e.chunks.append(chunk)
         e.size += len(chunk)
-        if self._entries.get(e.key) is e:
-            self._size += len(chunk)
+        self._size += len(chunk)
 
     def abort_stream(self, key: str) -> None:
         """Drop an in-flight entry (writer failed mid-stream). Without this
@@ -359,18 +394,22 @@ class Buffer:
             self._cond.notify_all()
         self._flush_residency()
 
-    def ingest(self, key: str, chunks, digest: Optional[str] = None) -> int:
+    def ingest(self, key: str, chunks, digest: Optional[str] = None,
+               highwater: Optional[int] = None) -> int:
         """Stream an iterable of chunks into a new entry: open → append as
         each chunk arrives → close. Writer-safe under same-key races: this
         writer holds its own entry, so if another open/set displaces it the
-        writer fails (IOError) instead of interleaving chunks into the
-        successor. On any failure the entry is aborted (readers wake with
-        IOError) and the error re-raised. Returns the bytes ingested."""
+        writer fails (IOError) immediately instead of interleaving chunks
+        into the successor. With ``highwater`` set, appends block while
+        unconsumed in-flight bytes exceed the mark (backpressure against
+        the producer). On any failure the entry is aborted (readers wake
+        with IOError) and the error re-raised. Returns the bytes ingested."""
         with self._cond:
             self._check_online_locked()
             self._drop_locked(key)
             e = BufferEntry(key, time.monotonic(), False,
-                            chunks=[], complete=False, size=0)
+                            chunks=[], complete=False, size=0,
+                            highwater=highwater)
             self._insert_locked(e)
             self.stats["streams"] += 1
             self._cond.notify_all()
@@ -431,9 +470,10 @@ class Buffer:
         copying or re-shipping bytes. Returns True if the digest was found.
 
         Aliases share the source's chunk list, so they are charged size 0
-        against capacity (the bytes are counted once, on the source entry;
-        if the source is evicted first the aliases keep the chunks alive
-        uncharged — an accepted undercount, cheaper than refcounting)."""
+        against capacity (the bytes are counted once, on the owning entry).
+        If the owner is evicted or dropped while aliases survive, one alias
+        is PROMOTED to owner — it inherits the byte charge and the digest
+        mapping — so shared chunks are never resident-but-uncharged."""
         if digest is None:
             return False
         with self._cond:
@@ -486,9 +526,32 @@ class Buffer:
             e.aborted = True
         self._size -= e.size
         self._lru.pop(key, None)
-        if e.digest is not None and self._digests.get(e.digest) == key:
+        self._retire_owner_locked(e)
+
+    def _retire_owner_locked(self, e: BufferEntry) -> None:
+        """``e`` (already uncharged and popped) is leaving. If it owned its
+        digest's bytes and an alias sharing its chunk list survives, promote
+        that alias to owner: re-charge the real size against capacity and
+        repoint the digest mapping, so shared chunks are never resident but
+        uncharged. Otherwise withdraw the digest (residency goodbye)."""
+        if e.digest is None or self._digests.get(e.digest) != e.key:
+            return
+        heir = None
+        if e.size > 0:                     # only byte owners need an heir
+            for other in self._entries.values():
+                if (other is not e and other.complete and not other.aborted
+                        and other.chunks is e.chunks):
+                    heir = other
+                    break
+        if heir is None:
             del self._digests[e.digest]
             self._queue_residency_locked(e.digest, e.size, False)
+        else:
+            self._digests[e.digest] = heir.key
+            self._size += e.size - heir.size
+            heir.size = e.size
+            self.stats["alias_promotions"] += 1
+            # bytes stay resident under the heir: no residency withdrawal
 
     def _touch_locked(self, e: BufferEntry) -> None:
         self._entries.move_to_end(e.key)
@@ -515,9 +578,7 @@ class Buffer:
             del self._lru[key]
             e = self._entries.pop(key)
             self._size -= e.size
-            if e.digest is not None and self._digests.get(e.digest) == key:
-                del self._digests[e.digest]
-                self._queue_residency_locked(e.digest, e.size, False)
+            self._retire_owner_locked(e)
             self.stats["evictions"] += 1
 
     def _pick_victim_locked(self, exempt: Optional[str]) -> Optional[str]:

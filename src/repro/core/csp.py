@@ -46,6 +46,19 @@ class CSP:
         self.truffle = truffle
         self.join_timeout_s = join_timeout_s
 
+    def open_pipe(self, target_fn: str, *,
+                  policy: Optional[DataPolicy] = None,
+                  size_hint: int = 0,
+                  avoid: Optional[str] = None,
+                  pipes=None) -> "Pipe":
+        """Open a pipelined producer→consumer edge (fires the consumer's
+        lightweight trigger NOW — before the producer has even started
+        executing). ``pipes`` are the consumer's OWN downstream pipes,
+        riding its request meta so a whole chain cascades from one
+        dispatch. See :class:`Pipe`."""
+        return Pipe(self, target_fn, policy=policy, size_hint=size_hint,
+                    avoid=avoid, pipes=pipes)
+
     def pass_data(self, target_fn: str, data: bytes,
                   exec_after: Optional[float] = None, *,
                   policy: Optional[DataPolicy] = None,
@@ -54,11 +67,15 @@ class CSP:
                   digest: Optional[str] = None,
                   stream: bool = False, dedup: bool = False,
                   chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                  pipes=None,
                   ) -> Tuple[bytes, LifecycleRecord]:
         """Algorithm 2 from the source node's Truffle. Returns the target's
         result + lifecycle record. ``digest``, when the caller already knows
         the payload's content address (the runner seeds stage outputs),
-        skips the re-hash on the dispatch path."""
+        skips the re-hash on the dispatch path. ``pipes`` (open
+        :class:`Pipe` handles for the target's pipelined consumers) ride
+        the request meta so the target's ``Invocation.put_stream`` can
+        write into them mid-execution."""
         if policy is None:     # legacy kwargs -> uniform policy (shim)
             policy = DataPolicy(stream=stream, dedup=dedup)
         stream, dedup = policy.stream, policy.dedup
@@ -86,7 +103,9 @@ class CSP:
                       content_ref=ContentRef("truffle", buf_key,
                                              size=len(data), digest=digest,
                                              inputs=inputs),
-                      source_node=t.node.name, meta={"invocation": inv_id})
+                      source_node=t.node.name,
+                      meta={"invocation": inv_id,
+                            "pipes": list(pipes) if pipes else []})
         hint = PlacementHint.from_policy(policy, digest, len(data),
                                          inputs, avoid)
         rec = LifecycleRecord(fn=target_fn, mode="truffle")
@@ -150,4 +169,206 @@ class CSP:
         if errbox:
             raise errbox[0]
         return result, rec
+
+
+class Pipe:
+    """One pipelined producer→consumer edge, opened at PRODUCER dispatch
+    (function-to-function direct streaming — the CSP taken to its limit).
+
+    Construction fires the consumer's lightweight trigger immediately, so
+    its cold start (α+ν+η) overlaps the producer's ENTIRE execution — not
+    just the output transfer — and starts resolving its placement on a
+    background thread. The producer's ``Invocation.put_stream`` then
+    writes output chunks here while it is still executing: the first
+    write opens an in-flight entry in the consumer node's buffer, bounded
+    by the edge's high-water mark (``DataPolicy.pipeline_highwater``,
+    default 4× the edge chunk size) — a consumer that falls behind blocks
+    the producer's writes instead of growing the entry unboundedly — and
+    each chunk pays its fabric grant (chained deadlines, same channel
+    model as every other transfer) before landing.
+
+    ``close`` seals the consumer's entry; ``abort`` poisons it so a
+    blocked consumer wakes with the error NOW (composing with the
+    runner's retry machinery: the consumer falls back to the whole-blob
+    dispatch path against the producer's retried output); ``flush`` is
+    the whole-output fallback for producers that never streamed (handler
+    without ``streaming_output``, or a retry attempt that ran without the
+    pipe) — the consumer still gets its input through the normal
+    relay/dedup ship, just without mid-execution overlap. ``result``
+    joins the consumer's invocation."""
+
+    def __init__(self, csp: CSP, target_fn: str, *,
+                 policy: Optional[DataPolicy] = None,
+                 size_hint: int = 0,
+                 avoid: Optional[str] = None,
+                 pipes=None):
+        self.csp = csp
+        t = csp.truffle
+        self.cluster = t.cluster
+        clock = self.cluster.clock
+        self.policy = policy if policy is not None else DataPolicy()
+        self.chunk_bytes = self.policy.chunk_bytes or DEFAULT_CHUNK_BYTES
+        self.highwater = self.policy.pipeline_highwater or 4 * self.chunk_bytes
+        self.target_fn = target_fn
+        self.inv_id = uuid.uuid4().hex
+        self.buf_key = f"truffle/{target_fn}/{self.inv_id[:8]}"
+        self._lock = threading.Lock()
+        self._placed = threading.Event()
+        self._cancel = threading.Event()
+        self._errbox = []
+        self._target = None             # consumer Node once placement resolves
+        self._src = None                # producer Node once bound
+        self._channel = None
+        self._deadline = None           # chained per-chunk grant deadline
+        self._closed = False
+        self._aborted: Optional[BaseException] = None
+        self.used = False               # producer streamed ≥ 1 chunk
+
+        fwd = Request(fn=target_fn,
+                      content_ref=ContentRef("truffle", self.buf_key,
+                                             size=size_hint),
+                      source_node=t.node.name,
+                      meta={"invocation": self.inv_id,
+                            "pipes": list(pipes) if pipes else []})
+        hint = PlacementHint.from_policy(self.policy, None, size_hint,
+                                         None, avoid)
+        rec = LifecycleRecord(fn=target_fn, mode="truffle")
+        rec.streamed = True
+        rec.pipelined = True
+        rec.t_request = clock.now()
+        # (2) reference-key trigger NOW — at producer dispatch
+        self.future, self.record = self.cluster.platform.invoke_async(
+            fwd, lightweight_trigger=True, record=rec, hint=hint)
+        # a trigger that fails before placement would otherwise leave the
+        # producer's first write parked on _await_target — cancel the
+        # placement wait so writes fail over to the whole-blob path NOW
+        self.future.add_done_callback(
+            lambda f: self._cancel.set() if f.exception() is not None
+            else None)
+        # (2a) listen for the consumer's host on the side, so the first
+        # produced chunk ships the moment both ends are known
+        threading.Thread(target=self._resolve, daemon=True,
+                         name=f"pipe-{target_fn}-{self.inv_id[:6]}").start()
+
+    # ------------------------------------------------------------ placement
+    def _resolve(self) -> None:
+        t = self.csp.truffle
+        try:
+            placed = t.watcher.resolve_placement_cancellable(
+                self.target_fn, self.inv_id, self._cancel)
+            if placed is not None:
+                self._target = self.cluster.node(placed["node"])
+        except BaseException as e:  # noqa: BLE001 — surfaced via _await_target
+            self._errbox.append(e)
+        finally:
+            self._placed.set()
+
+    def _await_target(self, timeout: float = 120.0):
+        if not self._placed.wait(timeout):
+            raise TimeoutError(f"pipe to {self.target_fn}: placement never "
+                               f"resolved within {timeout}s")
+        if self._target is None:
+            if self._errbox:
+                raise self._errbox[0]
+            raise IOError(f"pipe to {self.target_fn}: trigger failed before "
+                          f"placement")
+        return self._target
+
+    # ----------------------------------------------------------- write path
+    def bind_source(self, node) -> None:
+        """Stamp the producer's node (known only once IT is placed)."""
+        self._src = node
+
+    def write(self, chunk: bytes) -> None:
+        """Ship one producer output chunk into the consumer's in-flight
+        buffer entry. Blocks while the entry sits at its high-water mark
+        (backpressure propagates to the producer). A DELIVERY failure —
+        consumer node crashed, link dark, entry poisoned/displaced — never
+        fails the producer (its output is still valid; the consumer's own
+        retry machinery recovers): the pipe self-aborts, poisons the
+        consumer's input so it wakes NOW, and every later write no-ops."""
+        with self._lock:
+            if self._aborted is not None or self._closed:
+                return                  # dead pipe: producer carries on
+        try:
+            if self._src is None:
+                raise IOError(f"pipe to {self.target_fn}: source node "
+                              f"not bound")
+            target = self._await_target()
+            if not self.used:
+                self.record.t_transfer_start = self.cluster.clock.now()
+                target.buffer.open_stream(self.buf_key,
+                                          highwater=self.highwater)
+                self._channel = self.cluster.network.channel(self._src,
+                                                             target)
+                self.used = True
+            self._deadline = self._channel.transfer_chunk(
+                len(chunk), pay_latency=self._deadline is None,
+                after=self._deadline)
+            target.buffer.append_chunk(self.buf_key, chunk)
+        except Exception as e:  # noqa: BLE001 — delivery fault, not ours
+            self.abort(e)
+
+    def close(self, digest: Optional[str] = None) -> None:
+        """Seal the consumer's entry (its reader drains and completes). A
+        pipe that never streamed stays open for the runner's whole-output
+        ``flush`` fallback; a seal failure (consumer died after the last
+        chunk) aborts the pipe instead of failing the producer."""
+        if not self.used:
+            return
+        with self._lock:
+            if self._closed or self._aborted is not None:
+                return
+            self._closed = True
+        try:
+            self._target.buffer.close_stream(self.buf_key, digest=digest)
+        except Exception as e:  # noqa: BLE001
+            with self._lock:
+                self._closed = False    # reopen so abort() can poison
+            self.abort(e)
+            return
+        self.record.t_transfer_end = self.cluster.clock.now()
+
+    def flush(self, src_node, data: bytes,
+              digest: Optional[str] = None) -> None:
+        """Whole-output fallback: producer finished without streaming
+        (non-``streaming_output`` handler, or the streaming attempt failed
+        and a retry produced the output whole). Ships through the normal
+        relay/dedup machinery — the pipe still bought the early trigger."""
+        with self._lock:
+            if self._closed or self._aborted is not None or self.used:
+                return
+            self._closed = True
+        target = self._await_target()
+        rec = self.record
+        rec.t_transfer_start = self.cluster.clock.now()
+        ship_payload(self.cluster, src_node, target, self.buf_key, data,
+                     stream=self.policy.stream, digest=digest,
+                     chunk_bytes=self.chunk_bytes,
+                     codec=resolve_codec(self.policy.compression),
+                     record=rec)
+        rec.t_transfer_end = self.cluster.clock.now()
+
+    def abort(self, exc: BaseException) -> None:
+        """Producer died mid-stream (or its attempt failed before binding):
+        poison the consumer's input so its blocked reader wakes with the
+        error immediately — the consumer-side waiter then falls back to
+        the whole-blob path against the producer's retried output."""
+        with self._lock:
+            if self._closed or self._aborted is not None:
+                return
+            self._aborted = exc
+        self._cancel.set()              # release the placement wait, if any
+        target = self._target
+        if target is not None:
+            try:
+                target.buffer.poison(self.buf_key,
+                                     reason=f"pipe aborted: {exc}")
+            except DATA_PLANE_FAULTS:
+                pass                    # consumer node may be dead too
+
+    # ---------------------------------------------------------- result path
+    def result(self, timeout: Optional[float] = None) -> bytes:
+        """Join the consumer's invocation (its trigger future)."""
+        return self.future.result(timeout)
 

@@ -70,6 +70,62 @@ def streamed_improvement(p: PhaseEstimate, exec_overlap: float = 0.0) -> float:
     return truffle_time(p) - streamed_time(p, exec_overlap)
 
 
+# --------------------------------------------- pipelined-chain (tandem) terms
+# Function-to-function direct streaming extends the overlap past ONE edge:
+# every pipelined consumer's lightweight trigger fires when the CHAIN HEAD
+# dispatches (cold starts all overlap the head's execution), and producer
+# output chunks flow to the consumer mid-execution. The chain then behaves
+# like a tandem queue: each stage contributes a wire station (its input
+# edge) and an execute station, each serving K chunks FIFO, and the chain
+# makespan is the last chunk's departure from the last station — which
+# approaches max(stage)+ε instead of Eq. 5's Σ(stage) as K grows.
+
+def pipelined_chain_finish_times(head_ready_s: float, head_exec_s: float,
+                                 edges: Iterable[tuple],
+                                 n_chunks: int = 32) -> List[float]:
+    """Per-stage completion times of a pipelined chain, from chain start.
+
+    ``head_ready_s`` is everything before the head stage's execution can
+    begin (α + max(β, δ_in) for its own, non-pipelined input edge);
+    ``head_exec_s`` is its γ. Each downstream element of ``edges`` is a
+    ``(ready_s, wire_s, exec_s)`` triple for one pipelined consumer:
+    ``ready_s`` = α + β from *chain start* (its trigger fires when the
+    head dispatches), ``wire_s`` = the edge's total transfer time (δ·r +
+    overhead), ``exec_s`` = its γ. Chunk k of stage i starts executing
+    once it is off the wire AND chunk k−1 finished AND the stage is
+    ready — the classic tandem recurrence
+    ``D(i,k) = max(D(i−1,k), D(i,k−1)) + s_i`` with per-station ready
+    offsets. Returns ``[finish_head, finish_1, …]``."""
+    k = max(int(n_chunks), 1)
+    finishes: List[float] = []
+    # Head produces its output chunk-by-chunk while executing.
+    prev = [head_ready_s + head_exec_s * (i + 1) / k for i in range(k)]
+    finishes.append(prev[-1])
+    for ready_s, wire_s, exec_s in edges:
+        s_w = wire_s / k
+        s_e = exec_s / k
+        wire_free = 0.0
+        exec_free = ready_s
+        out: List[float] = []
+        for i in range(k):
+            wire_free = max(prev[i], wire_free) + s_w
+            exec_free = max(wire_free, exec_free) + s_e
+            out.append(exec_free)
+        finishes.append(out[-1])
+        prev = out
+    return finishes
+
+
+def pipelined_chain_time(head_ready_s: float, head_exec_s: float,
+                         edges: Iterable[tuple],
+                         n_chunks: int = 32) -> float:
+    """Chain makespan under direct streaming — the last chunk's departure
+    from the last stage (see ``pipelined_chain_finish_times``). Compare
+    against Eq. 5's Σ(edge_time) to size the pipelining gain."""
+    return pipelined_chain_finish_times(head_ready_s, head_exec_s, edges,
+                                        n_chunks)[-1]
+
+
 # --------------------------------------------------- locality-aware terms
 # Digest-aware placement extension of Eq. 4: when a fraction f of the input
 # is already resident on the chosen node, only (1−f)·δ crosses the fabric.

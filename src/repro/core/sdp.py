@@ -97,7 +97,10 @@ class SDP:
                       content_ref=ContentRef("truffle", buf_key, size=size,
                                              digest=digest, inputs=inputs),
                       source_node=t.node.name,
-                      meta={"invocation": inv_id})
+                      # pipelined downstream edges ride through: the target's
+                      # put_stream writes into its consumers' pipes
+                      meta={"invocation": inv_id,
+                            "pipes": (request.meta or {}).get("pipes") or []})
         # storage-backed inputs fetch via the Data Engine too — it follows
         # the cluster RelayTable, so a prefetch relay kicked at placement
         # time makes the engine's storage read a follower (single transfer)

@@ -43,14 +43,18 @@ class TruffleInstance:
 
     # ------------------------------------------------------------------ CSP
     def pass_data(self, target_fn: str, data: bytes, policy=None,
-                  input_hints=None, avoid=None, digest=None,
+                  input_hints=None, avoid=None, digest=None, pipes=None,
                   **data_plane) -> Tuple[bytes, LifecycleRecord]:
         if self.cluster.platform.warm_instances(target_fn):
+            # warm target: no cold start to overlap, but its pipelined
+            # consumers' pipes still ride the request meta so put_stream
+            # reaches them mid-execution
+            meta = {"pipes": list(pipes)} if pipes else {}
             return self.proxy(Request(fn=target_fn, payload=data,
-                                      source_node=self.node.name))
+                                      source_node=self.node.name, meta=meta))
         return self.csp.pass_data(target_fn, data, policy=policy,
                                   input_hints=input_hints, avoid=avoid,
-                                  digest=digest, **data_plane)
+                                  digest=digest, pipes=pipes, **data_plane)
 
     # ---------------------------------------------------------------- proxy
     def proxy(self, request: Request) -> Tuple[bytes, LifecycleRecord]:

@@ -53,6 +53,10 @@ class FunctionSpec:
     affinity: Optional[str] = None
     extra_cold_start_s: float = 0.0  # Fig. 11 sweep: added cold-start delay
     streaming: bool = False       # handler consumes input via get_input_stream
+    streaming_output: bool = False  # handler emits output via put_stream, so
+    #                                 downstream pipelined edges get chunks
+    #                                 mid-execution (planner pipeline="auto"
+    #                                 requires this on the producer)
     retry: Optional[object] = None  # RetryPolicy: crash-restart recovery
     #                                 (edge DataPolicy.retry overrides)
 
@@ -74,6 +78,9 @@ class LifecycleRecord:
     t_exec_start: float = 0.0
     t_exec_end: float = 0.0
     streamed: bool = False        # input arrived chunk-pipelined
+    pipelined: bool = False       # input flowed from the producer MID-execution
+    #                               (function-to-function direct streaming:
+    #                               trigger fired at producer dispatch)
     dedup_hit: bool = False       # input served from the content-addressed cache
     locality_hit: bool = False    # placed on a node already holding the input
     relay_shared: bool = False    # transfer piggybacked on an in-flight relay
@@ -171,6 +178,35 @@ class Invocation:
         else:
             it = self.cluster.storage[ref.storage_type].get_stream(ref.key)
         return self._timed(it)
+
+    def put_stream(self, chunks) -> bytes:
+        """Producer chunk egress (function-to-function direct streaming):
+        emit output chunk-by-chunk so any pipelined downstream edges (the
+        ``pipes`` the runner attached to this invocation) carry each chunk
+        to the consumer's in-flight buffer entry WHILE this function is
+        still executing. Writes block when a consumer's in-flight bytes hit
+        its high-water mark (backpressure propagates to the producer); a
+        mid-stream failure aborts every pipe (consumers wake with the
+        error) and re-raises. Returns the joined bytes — the handler's
+        return value, so the whole-blob paths (retries, non-pipelined
+        consumers, output seeding) see the same output as ever."""
+        pipes = tuple((self.request.meta or {}).get("pipes") or ())
+        for p in pipes:
+            p.bind_source(self.node)
+        parts = []
+        try:
+            for chunk in chunks:
+                chunk = bytes(chunk)
+                parts.append(chunk)
+                for p in pipes:
+                    p.write(chunk)
+            for p in pipes:
+                p.close()
+        except BaseException as exc:
+            for p in pipes:
+                p.abort(exc)
+            raise
+        return b"".join(parts)
 
     def _timed(self, it: Iterator[bytes]) -> Iterator[bytes]:
         clock = self.cluster.clock

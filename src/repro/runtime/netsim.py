@@ -346,6 +346,30 @@ class Channel:
         self.clock.sleep_until(deadline)
         return deadline
 
+    def transfer_chunk_timed(self, nbytes: int, *, pay_latency: bool = False,
+                             after: float = None) -> Tuple[float, float]:
+        """Like :meth:`transfer_chunk`, but also returns the chunk's
+        CHANNEL-DERIVED simulated seconds: queue wait (grant contention)
+        + service time + per-grant overhead + the latency if paid. Chained
+        per-chunk elapsed sums to the stream's true wall time — unlike a
+        hand-summed ``Σ nbytes/bandwidth``, which ignores contention. At
+        clock scale 0 deadlines carry no wall information, so the modeled
+        uncontended service time is reported instead."""
+        self._check_up()
+        t = 0.0
+        if pay_latency:
+            _, lat = self._link_params()
+            self.clock.sleep(lat)
+            t += lat
+        floor = time.monotonic() if after is None else after
+        deadline, bw = self._grant(nbytes, after=after)
+        if self.clock.scale:
+            t += max(0.0, deadline - floor) / self.clock.scale
+        else:
+            t += nbytes / bw + self.chunk_overhead_s
+        self.clock.sleep_until(deadline)
+        return deadline, t
+
     def stream(self, payload: bytes,
                chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                wire_ratio: float = 1.0,

@@ -65,7 +65,8 @@ from types import MappingProxyType
 from typing import Mapping, Optional, Tuple
 
 from repro.core.errors import PlanError, WorkflowCycleError  # noqa: F401
-from repro.core.model import PhaseEstimate, edge_time
+from repro.core.model import (PhaseEstimate, edge_time,
+                              pipelined_chain_finish_times)
 from repro.runtime.netsim import (DEFAULT_CHUNK_BYTES,
                                   FABRIC_CHUNK_OVERHEAD_S)
 from repro.runtime.policy import DataPolicy, RetryPolicy
@@ -274,7 +275,9 @@ class Planner:
             edge_srcs = deps if deps else (None,)
             in_edges = tuple(
                 self._finalize_edge(src, name, edge_pol(src, name),
-                                    profiles.get((src, name)), st.spec)
+                                    profiles.get((src, name)), st.spec,
+                                    src_spec=(wf.stages[src].spec
+                                              if src is not None else None))
                 for src in edge_srcs)
             preds = [e.predicted_s for e in in_edges]
             transport = self._merge(name, in_edges)
@@ -303,8 +306,84 @@ class Planner:
             if any(e.policy.dedup for e in consumers):
                 stages[name] = dataclasses.replace(stages[name],
                                                    seed_output=True)
+        # third pass: fold the pipelined-chain overlap term into the
+        # predictions, so predicted_s/predicted_total stay honest for
+        # stages whose input flows mid-execution (Eq. 5 would double-count
+        # the overlapped transfer+execution)
+        self._overlap_predictions(wf, order, stages, profiles)
         return ExecutionPlan(workflow=wf.name, order=order, stages=stages,
                              default=wf_default, profiles=profiles)
+
+    def _overlap_predictions(self, wf, order, stages, profiles) -> None:
+        """Replace each pipelined consumer's ``predicted_s`` with its
+        MARGINAL completion time in the chain's tandem-queue model
+        (:func:`repro.core.model.pipelined_chain_finish_times`): the sum
+        over the chain then telescopes to the chain makespan instead of
+        Eq. 5's Σ(stage). A chain is followed head-down while every hop is
+        predictable (profiled + telemetry link) and dispatchable as a pipe
+        at runtime (single-dep consumer, no speculation armed — the runner
+        applies the same gate); it stops at the first hop that is not."""
+        piped = {}              # producer -> pipelined single-dep consumers
+        for name in order:
+            sp = stages[name]
+            if len(sp.deps) == 1 and sp.in_edges[0].policy.pipeline is True:
+                piped.setdefault(sp.deps[0], []).append(name)
+
+        def walk(head: str) -> None:
+            head_sp = stages[head]
+            if head_sp.predicted_s is None:
+                return
+            gamma0 = wf.stages[head].spec.exec_s
+            head_ready = max(head_sp.predicted_s - gamma0, 0.0)
+            for first in piped.get(head, ()):    # fan-out: branch per pipe
+                edges = []
+                chain = []
+                n_chunks = None
+                cur = first
+                while cur is not None:
+                    sp = stages[cur]
+                    if sp.speculation_budget_s is not None:
+                        break               # runner won't pipe this hop
+                    e = sp.in_edges[0]
+                    prof = profiles.get((e.src, cur))
+                    link = self._link_estimate(prof) if prof else None
+                    if link is None:
+                        break               # unpredictable hop: stop here
+                    spec = wf.stages[cur].spec
+                    size = max(prof.size, 0)
+                    chunk = e.policy.chunk_bytes or DEFAULT_CHUNK_BYTES
+                    n = max(1, math.ceil(size / chunk))
+                    n_chunks = n if n_chunks is None else min(n_chunks, n)
+                    wire = (size / link.bandwidth + link.rtt
+                            + n * self.chunk_overhead_s)
+                    ready = (self.scheduling_s + self.trigger_s
+                             + spec.provision_s + spec.extra_cold_start_s
+                             + spec.startup_s)
+                    edges.append((ready, wire, spec.exec_s))
+                    chain.append(cur)
+                    nxt = piped.get(cur, ())
+                    cur = nxt[0] if len(nxt) == 1 else None
+                if not edges:
+                    continue
+                finishes = pipelined_chain_finish_times(
+                    head_ready, gamma0, edges, n_chunks=n_chunks)
+                for i, cname in enumerate(chain):
+                    marginal = finishes[i + 1] - finishes[i]
+                    stages[cname] = dataclasses.replace(
+                        stages[cname], predicted_s=marginal,
+                        in_edges=(dataclasses.replace(
+                            stages[cname].in_edges[0],
+                            predicted_s=marginal),))
+
+        for name in order:
+            # heads: stages with pipelined consumers that are not
+            # themselves pipelined consumers (chain interiors are covered
+            # by their head's walk)
+            sp = stages[name]
+            is_piped_consumer = (len(sp.deps) == 1 and
+                                 sp.in_edges[0].policy.pipeline is True)
+            if not is_piped_consumer and name in piped:
+                walk(name)
 
     # --------------------------------------------------- adaptive selection
     def _link_estimate(self, profile: EdgeProfile):
@@ -378,9 +457,14 @@ class Planner:
                        SPECULATION_MAX_FACTOR / (1.0 + cv)))
 
     def _finalize_edge(self, src: Optional[str], dst: str, pol: DataPolicy,
-                       profile: Optional[EdgeProfile], spec) -> EdgePlan:
+                       profile: Optional[EdgeProfile], spec,
+                       src_spec=None) -> EdgePlan:
         """Resolve an ``auto`` policy (argmin over the candidate grid) and
-        attach the Eq. 4 prediction for any profiled edge."""
+        attach the Eq. 4 prediction for any profiled edge. ``src_spec`` is
+        the producer's FunctionSpec (None for ingress edges) — a
+        ``pipeline="auto"`` edge turns direct streaming on iff the producer
+        can emit chunks mid-execution (``streaming_output``) and the
+        consumer can eat them (``streaming``) over a direct-strategy hop."""
         link = self._link_estimate(profile) if profile is not None else None
         if pol.speculation == "auto":
             pol = pol.but(speculation=self._auto_speculation(link))
@@ -401,6 +485,13 @@ class Planner:
                 stream, comp, chunk = best
                 pol = pol.but(strategy="direct", stream=stream,
                               compression=comp, chunk_bytes=chunk)
+        if pol.pipeline == "auto":
+            enable = (src_spec is not None
+                      and getattr(src_spec, "streaming_output", False)
+                      and getattr(spec, "streaming", False)
+                      and pol.strategy == "direct")
+            # a pipelined edge is chunked by definition
+            pol = pol.but(pipeline=enable, stream=pol.stream or enable)
         predicted = None
         if link is not None and pol.strategy == "direct":
             predicted = self._candidate_time(
@@ -526,6 +617,11 @@ class Planner:
                 max_attempts=max(r.max_attempts for r in retries),
                 backoff_s=max(r.backoff_s for r in retries),
                 timeout_s=min(timeouts) if timeouts else None)
+        # pipeline: informational on the merged transport (pipelining is
+        # enacted per EDGE by the runner — only single-dep consumers have
+        # a pipe); the tightest declared high-water mark wins
+        highwaters = [p.pipeline_highwater for p in pols
+                      if p.pipeline_highwater is not None]
         merged = DataPolicy(
             strategy=strategies[0],
             stream=any(p.stream for p in pols),
@@ -534,7 +630,9 @@ class Planner:
             locality_weight=weight,
             speculation=max(p.speculation for p in pols),
             chunk_bytes=min(chunks) if chunks else None,
-            retry=retry)
+            retry=retry,
+            pipeline=any(p.pipeline is True for p in pols),
+            pipeline_highwater=min(highwaters) if highwaters else None)
         if any(p.prefetch for p in pols):
             # after the merge: prefetch requires dedup (DataPolicy enforces
             # it per edge, so the OR-ed transport has dedup=True here)

@@ -129,6 +129,25 @@ class DataPolicy:
         :class:`RetryPolicy`). None = single attempt. When several
         in-edges of one stage disagree, the planner merges toward the
         most resilient (max attempts, max backoff, tightest timeout).
+    pipeline:
+        Function-to-function direct streaming: the producer's output
+        chunks flow to the consumer WHILE the producer is still
+        executing. The runner fires the consumer's lightweight trigger
+        at *producer dispatch* (its cold start overlaps producer
+        execution — CSP taken to its limit), and the producer's
+        ``Invocation.put_stream`` chunks relay into the consumer's
+        in-flight buffer entry with bounded in-flight bytes
+        (``pipeline_highwater``; the producer blocks past the mark
+        until the consumer drains). ``True`` forces it, ``False``
+        forbids it, ``"auto"`` (with ``strategy="auto"``) lets the
+        planner enable it per edge when both producer and consumer are
+        streaming-capable. Requires ``stream=True`` when forced (chunks
+        are the transport unit). A mid-stream producer crash poisons
+        the consumer's input, composing with ``retry``.
+    pipeline_highwater:
+        Backpressure bound for a pipelined edge: maximum unconsumed
+        in-flight bytes buffered at the consumer before the producer's
+        ``put_stream`` blocks (None = 4 x the edge's chunk size).
     """
 
     strategy: str = "direct"
@@ -140,6 +159,8 @@ class DataPolicy:
     speculation: float = 0.0
     chunk_bytes: Optional[int] = None
     retry: Optional[RetryPolicy] = None
+    pipeline: object = False
+    pipeline_highwater: Optional[int] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -171,6 +192,22 @@ class DataPolicy:
                                                      RetryPolicy):
             raise ValueError(f"retry must be a RetryPolicy or None, "
                              f"got {self.retry!r}")
+        if isinstance(self.pipeline, str):
+            if self.pipeline != "auto":
+                raise ValueError(f"pipeline must be True, False or 'auto', "
+                                 f"got {self.pipeline!r}")
+        elif not isinstance(self.pipeline, bool):
+            raise ValueError(f"pipeline must be True, False or 'auto', "
+                             f"got {self.pipeline!r}")
+        if self.pipeline is True and not self.stream:
+            raise ValueError(
+                "pipeline=True streams producer chunks mid-execution, so "
+                "the edge must be chunked: set stream=True (or use "
+                "strategy='auto' with pipeline='auto')")
+        if self.pipeline_highwater is not None \
+                and self.pipeline_highwater <= 0:
+            raise ValueError(f"pipeline_highwater must be positive bytes or "
+                             f"None, got {self.pipeline_highwater!r}")
 
     def but(self, **changes) -> "DataPolicy":
         """A copy with ``changes`` applied — derive an edge policy from a

@@ -387,7 +387,27 @@ class WorkflowRunner:
         results = rs.results
         wave = [0]                          # completed-stage counter
 
-        def run_stage(name: str, current: ExecutionPlan):
+        def finish_stage(name: str, sr: StageResult,
+                         current: ExecutionPlan) -> None:
+            sr.record.replan_count = current.generation
+            self._seed_output(current.stages[name], sr)
+            self._report_stage(sr, rs)
+            with lock:
+                wave[0] += 1
+                k = wave[0]
+            # published BEFORE the completion is recorded: a fault
+            # timeline keyed on this wave acts (and returns) before the
+            # dispatcher can wake and start the next wave — so between
+            # "stage N done" and "stage N+1 dispatched" there is a
+            # well-defined point where faults land and replans decide
+            cluster.bus.publish("workflow.stage_done", {
+                "workflow": wf.name, "stage": name, "wave": k,
+                "node": sr.record.node, "t": cluster.clock.now()})
+            with done_cv:
+                results[name] = sr
+                done_cv.notify_all()
+
+        def run_stage(name: str, current: ExecutionPlan, pipes=()):
             # ``current`` is the plan in force when the DISPATCHER started
             # this thread — passed in rather than read here, so a replan
             # landing between Thread.start() and the first statement can
@@ -396,30 +416,78 @@ class WorkflowRunner:
                 sp = current.stages[name]
                 data, src, hints = self._stage_input(sp, rs)
                 sr = self._dispatch(name, wf.stages[name].spec,
-                                    sp, data, src, hints, rs)
-                sr.record.replan_count = current.generation
-                self._seed_output(sp, sr)
-                self._report_stage(sr, rs)
-                with lock:
-                    wave[0] += 1
-                    k = wave[0]
-                # published BEFORE the completion is recorded: a fault
-                # timeline keyed on this wave acts (and returns) before the
-                # dispatcher can wake and start the next wave — so between
-                # "stage N done" and "stage N+1 dispatched" there is a
-                # well-defined point where faults land and replans decide
-                cluster.bus.publish("workflow.stage_done", {
-                    "workflow": wf.name, "stage": name, "wave": k,
-                    "node": sr.record.node, "t": cluster.clock.now()})
-                with done_cv:
-                    results[name] = sr
-                    done_cv.notify_all()
+                                    sp, data, src, hints, rs, pipes=pipes)
+                # pipes the handler never streamed into get the whole
+                # output shipped now (the pipe still bought the consumer
+                # its early trigger)
+                self._settle_pipes(pipes, sr)
+                finish_stage(name, sr, current)
             except BaseException as e:  # noqa: BLE001
+                for p in pipes:        # wake pipelined consumers NOW; they
+                    p.abort(e)         # fall back against the errbox/retry
                 e = self._wrap_failure(name, wf.stages[name].spec, e,
                                        wf_name=wf.name)
                 with done_cv:
                     errbox.append(e)
                     done_cv.notify_all()
+
+        def wait_pipelined(name: str, pipe, child_pipes,
+                           current: ExecutionPlan):
+            """Consumer side of a pipelined edge: its invocation is already
+            in flight (the pipe's trigger fired at producer dispatch) — only
+            the join differs from run_stage. Any failure on the fast path
+            falls back to the robust whole-blob dispatch against the
+            producer's completed output, composing with the retry layer."""
+            sp = current.stages[name]
+            try:
+                out = pipe.result()
+                rec = pipe.record
+                rec.predicted_s = sp.predicted_s
+                sr = StageResult(name=name, output=out, record=rec)
+                self._settle_pipes(child_pipes, sr)
+                finish_stage(name, sr, current)
+            except BaseException:  # noqa: BLE001 — fast path down, fall back
+                dep = sp.deps[0]
+                with done_cv:
+                    while dep not in results and not errbox:
+                        if not done_cv.wait(timeout=300):
+                            break
+                    ok = dep in results
+                if not ok:             # producer failed for good: its error
+                    return             # (already in errbox) ends the run
+                run_stage(name, current, pipes=child_pipes)
+
+        def open_pipes(producer: str, current: ExecutionPlan):
+            """Open a Pipe per pipelined single-dep consumer of ``producer``
+            — firing each consumer's lightweight trigger NOW, at producer
+            dispatch — and recurse so a whole chain cascades from one
+            dispatch (a consumer's own pipes ride its trigger request).
+            Consumers claimed here are marked ``started``; a waiter thread
+            joins each one. Runs on the dispatcher thread (single-threaded
+            ``started`` mutation, same as normal dispatch)."""
+            if not self.use_truffle:
+                return ()
+            pipes = []
+            for cname in order:
+                cp = current.stages[cname]
+                if (cname in started or cp.deps != (producer,)
+                        or cp.in_edges[0].policy.pipeline is not True
+                        or cp.speculation_budget_s is not None):
+                    continue
+                child = open_pipes(cname, current)
+                prof = current.profiles.get((producer, cname))
+                node = cluster.node(rs.source_node)
+                pipe = node.truffle.csp.open_pipe(
+                    wf.stages[cname].spec.name,
+                    policy=cp.in_edges[0].policy,
+                    size_hint=(prof.size if prof is not None else 0),
+                    pipes=child)
+                started.add(cname)
+                threading.Thread(target=wait_pipelined,
+                                 args=(cname, pipe, child, current),
+                                 daemon=True).start()
+                pipes.append(pipe)
+            return tuple(pipes)
 
         order = plan.order
         started = set()
@@ -446,9 +514,15 @@ class WorkflowRunner:
                     continue
                 if all(d in results
                        for d in planbox["plan"].stages[name].deps):
+                    current = planbox["plan"]
                     started.add(name)
+                    # function-to-function direct streaming: fire the
+                    # pipelined consumers' triggers AT PRODUCER DISPATCH
+                    # (their cold starts overlap its whole execution) and
+                    # hand the producer the pipes its put_stream writes to
+                    pipes = open_pipes(name, current)
                     threading.Thread(target=run_stage,
-                                     args=(name, planbox["plan"]),
+                                     args=(name, current, pipes),
                                      daemon=True).start()
             # plan-aware pre-warming: a stage whose deps are ALL dispatched
             # triggers next wave — the fleet pool provisions its sandboxes
@@ -614,10 +688,31 @@ class WorkflowRunner:
         return StageExecutionError(name, node=node, attempt=1, cause=e,
                                    record=getattr(e, "record", None))
 
+    def _settle_pipes(self, pipes, sr: StageResult) -> None:
+        """Whole-output fallback for pipes the producing handler never
+        streamed into (non-``streaming_output`` handler, or the streaming
+        attempt failed and a retry produced the output whole): ship the
+        completed output through each unused pipe from the node that
+        produced it. Used/aborted pipes no-op; a flush failure aborts that
+        pipe (its consumer falls back) without failing the producer."""
+        if not pipes:
+            return
+        node = self.cluster.nodes.get(sr.record.node)
+        for p in pipes:
+            try:
+                if node is None:
+                    raise NodeCrashError(sr.record.node or None,
+                                         "producer node unknown — cannot "
+                                         "flush pipe")
+                p.flush(node, sr.output)
+            except Exception as e:  # noqa: BLE001 — consumer-side fault
+                p.abort(e)
+
     # ------------------------------------------------------- stage dispatch
     def _dispatch(self, name: str, spec: FunctionSpec, sp: StagePlan,
                   data: bytes, source_node: str, input_hints: tuple,
-                  rs: Optional[_RunState] = None) -> StageResult:
+                  rs: Optional[_RunState] = None,
+                  pipes=()) -> StageResult:
         """Crash-restart recovery wrapper: without a RetryPolicy this is
         exactly one attempt (pre-retry behavior); with one, a failed or
         timed-out attempt is retried on a DIFFERENT node (``avoid`` steers
@@ -628,15 +723,22 @@ class WorkflowRunner:
                                                            None)
         if rp is None:
             return self._attempt_stage(name, spec, sp, data, source_node,
-                                       input_hints, rs)
+                                       input_hints, rs, pipes=pipes)
         clock = self.cluster.clock
         avoid = None
         attempt = 1
         while True:
             try:
+                # pipes ride only the FIRST attempt: a failed streaming
+                # attempt already aborted them (consumers fell back), and a
+                # retry writing into a consumed pipe would corrupt it — the
+                # post-dispatch _settle_pipes flush covers a retry that
+                # succeeds with pipes still unused
                 sr = self._attempt_with_timeout(name, spec, sp, data,
                                                 source_node, input_hints,
-                                                rs, avoid, rp)
+                                                rs, avoid, rp,
+                                                pipes=(pipes if attempt == 1
+                                                       else ()))
                 sr.attempts = attempt
                 sr.record.attempt = attempt
                 return sr
@@ -670,16 +772,18 @@ class WorkflowRunner:
                         name, sp, rs)
 
     def _attempt_with_timeout(self, name, spec, sp, data, source_node,
-                              input_hints, rs, avoid, rp) -> StageResult:
+                              input_hints, rs, avoid, rp,
+                              pipes=()) -> StageResult:
         """One attempt under the policy's per-attempt sim-second deadline
         (a wedged data path must not eat the whole run before the retry)."""
         if rp.timeout_s is None:
             return self._attempt_stage(name, spec, sp, data, source_node,
-                                       input_hints, rs, avoid)
+                                       input_hints, rs, avoid, pipes=pipes)
         pool = ThreadPoolExecutor(max_workers=1)
         try:
             fut = pool.submit(self._attempt_stage, name, spec, sp, data,
-                              source_node, input_hints, rs, avoid)
+                              source_node, input_hints, rs, avoid,
+                              pipes=pipes)
             try:
                 return fut.result(
                     timeout=rp.timeout_s * self.cluster.clock.scale)
@@ -693,12 +797,14 @@ class WorkflowRunner:
     def _attempt_stage(self, name: str, spec: FunctionSpec, sp: StagePlan,
                        data: bytes, source_node: str, input_hints: tuple,
                        rs: Optional[_RunState] = None,
-                       avoid: Optional[str] = None) -> StageResult:
+                       avoid: Optional[str] = None,
+                       pipes=()) -> StageResult:
         def attempt(backup_avoid: Optional[str] = None) -> StageResult:
             return self._invoke_once(name, spec, sp, data, source_node,
                                      input_hints,
                                      avoid=(backup_avoid if backup_avoid
-                                            is not None else avoid))
+                                            is not None else avoid),
+                                     pipes=pipes)
 
         est = self.estimates.get(name)
         budget_sim = None
@@ -709,6 +815,12 @@ class WorkflowRunner:
             # no caller estimate: the plan's own Eq. 4 prediction carries
             # the budget (speculation="auto" needs no user numbers)
             budget_sim = sp.speculation_budget_s
+        if budget_sim and pipes:
+            # pipelining and speculation compose badly: a backup attempt
+            # writing the same pipes would double-stream into the
+            # consumers' entries. Pipelining wins — the chain overlap it
+            # buys is the larger, surer gain
+            budget_sim = None
         if budget_sim:
             # mid-run calibration: scale the plan's budget by the measured
             # stage-time inflation so far (clamped — see calibrated_budget).
@@ -782,12 +894,16 @@ class WorkflowRunner:
 
     def _invoke_once(self, name: str, spec: FunctionSpec, sp: StagePlan,
                      data: bytes, source_node: str, input_hints: tuple,
-                     avoid: Optional[str] = None) -> StageResult:
+                     avoid: Optional[str] = None, pipes=()) -> StageResult:
         cluster = self.cluster
         fn = spec.name
         pol = sp.transport
         put_s = 0.0
         meta = {}
+        if pipes:
+            # downstream pipelined edges: the invocation's put_stream
+            # writes into these while the function executes
+            meta["pipes"] = list(pipes)
         # baseline paths have no policy plumbing — the hint directives ride
         # the request meta and PlacementHint.from_request picks them up
         if self.tenant is not None:
@@ -829,7 +945,8 @@ class WorkflowRunner:
                 out, rec = truffle.pass_data(
                     fn, data, policy=pol, input_hints=input_hints or None,
                     avoid=avoid,
-                    digest=self._known_digest(pol, data, input_hints))  # CSP
+                    digest=self._known_digest(pol, data, input_hints),
+                    pipes=pipes or None)  # CSP
             else:
                 req = Request(fn=fn, payload=data, source_node=source_node,
                               meta=meta)

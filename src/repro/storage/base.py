@@ -9,15 +9,20 @@ AWS S3): KVS reads fast / writes slower (paper Fig 9b: Truffle gains only
 Streaming (chunked data plane): ``get_stream``/``put_stream`` move the same
 bytes chunk-at-a-time over the service channels (default chunk:
 ``DEFAULT_CHUNK_BYTES``), so the Data Engine can pipeline storage-get ->
-relay -> buffer-append instead of waiting for the last byte. ``digest``
-returns (and caches) the content address of a stored object for
-content-addressed dedup downstream. The whole-blob ``get``/``put`` remain
-the non-streaming baseline."""
+relay -> buffer-append instead of waiting for the last byte. A
+``put_stream`` in progress is *tailable*: a concurrent ``get_stream`` on
+the same key attaches to the in-flight object and yields each chunk as the
+writer lands it (reader chases writer), raising ``IOError`` if the writer
+aborts mid-stream — so storage-strategy edges pipeline producer→consumer
+too. The whole-blob ``get``/``put`` (and ``exists``) still see an object
+only once its last chunk lands. ``digest`` returns (and caches) the
+content address of a stored object for content-addressed dedup
+downstream."""
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Iterator, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 from repro.core.buffer import content_digest
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
@@ -26,6 +31,17 @@ from repro.runtime.netsim import Channel, DEFAULT_CHUNK_BYTES, GBPS
 
 class StorageError(KeyError):
     pass
+
+
+class _InflightObject:
+    """A ``put_stream`` in progress: chunk list shared with tail readers."""
+
+    __slots__ = ("chunks", "complete", "aborted")
+
+    def __init__(self) -> None:
+        self.chunks: List[bytes] = []
+        self.complete = False
+        self.aborted = False
 
 
 @dataclass
@@ -40,7 +56,9 @@ class StorageService:
     def __post_init__(self) -> None:
         self._data: Dict[str, bytes] = {}
         self._digests: Dict[str, str] = {}
+        self._inflight: Dict[str, _InflightObject] = {}
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
         self._put_ch = Channel(f"{self.type_name}.put", self.put_bandwidth,
                                self.latency, self.clock)
         self._get_ch = Channel(f"{self.type_name}.get", self.get_bandwidth,
@@ -60,29 +78,101 @@ class StorageService:
 
     # ------------------------------------------------------------- streaming
     def get_stream(self, key: str,
-                   chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Iterator[bytes]:
+                   chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                   timeout: Optional[float] = 120.0) -> Iterator[bytes]:
         """Yield the object chunk-by-chunk as each chunk "arrives" off the
-        read channel (per-chunk bandwidth grants — fair-share)."""
-        data = self._require(key)
-        return self._get_ch.stream(data, chunk_bytes)
+        read channel (per-chunk bandwidth grants — fair-share). If a
+        ``put_stream`` for ``key`` is in flight, TAIL it instead: each
+        chunk is yielded as the writer lands it (chunks sized by the
+        writer), raising IOError if the writer aborts mid-stream and
+        TimeoutError if the next chunk never arrives within ``timeout``."""
+        with self._lock:
+            obj = self._inflight.get(key)
+        if obj is None:
+            data = self._require(key)
+            return self._get_ch.stream(data, chunk_bytes)
+        return self._tail_stream(key, obj, timeout)
 
-    def put_stream(self, key: str, chunks: Iterable[bytes]) -> float:
-        """Consume an incoming chunk iterator, paying write-channel time per
-        chunk; the object becomes visible once the last chunk lands."""
-        t = self.latency
+    def _tail_stream(self, key: str, obj: _InflightObject,
+                     timeout: Optional[float]) -> Iterator[bytes]:
+        """Chase an in-flight writer chunk-by-chunk. Channel time is paid
+        OUTSIDE the service lock (channels serialize their own grants)."""
+        idx = 0
         first = True
         deadline = None
-        parts = []
-        for chunk in chunks:
-            deadline = self._put_ch.transfer_chunk(len(chunk),
+        while True:
+            with self._cond:
+                while (idx >= len(obj.chunks) and not obj.complete
+                       and not obj.aborted):
+                    if not self._cond.wait(timeout):
+                        raise TimeoutError(
+                            f"{self.type_name}: tail of {key!r} stalled "
+                            f"at chunk {idx}")
+                if obj.aborted:
+                    raise IOError(f"{self.type_name}: in-flight object "
+                                  f"{key!r} aborted mid-stream")
+                if idx >= len(obj.chunks):      # complete and fully drained
+                    return
+                chunk = obj.chunks[idx]
+                idx += 1
+            deadline = self._get_ch.transfer_chunk(len(chunk),
                                                    pay_latency=first,
                                                    after=deadline)
             first = False
-            t += len(chunk) / self.put_bandwidth
-            parts.append(chunk)
-        with self._lock:
-            self._data[key] = b"".join(parts)   # joins bytes and memoryviews
-            self._digests.pop(key, None)
+            yield chunk
+
+    def put_stream(self, key: str, chunks: Iterable[bytes]) -> float:
+        """Consume an incoming chunk iterator, paying write-channel time per
+        chunk. Each chunk becomes tailable by concurrent ``get_stream``
+        readers the moment it lands; whole-blob ``get``/``exists`` see the
+        object once the last chunk lands. Returns the channel-derived
+        elapsed time (wall clock over the granted chunk deadlines, so
+        records agree with measured time under grant contention). If the
+        source iterator fails mid-stream the in-flight object is aborted
+        (tail readers wake with IOError) and the error re-raised."""
+        obj = _InflightObject()
+        with self._cond:
+            prev = self._inflight.get(key)
+            if prev is not None:         # displaced writer: fail its readers
+                prev.aborted = True
+            self._inflight[key] = obj
+            self._cond.notify_all()
+        first = True
+        deadline = None
+        t = 0.0
+        try:
+            for chunk in chunks:
+                chunk = bytes(chunk)     # memoryview-safe to share w/ readers
+                deadline, dt = self._put_ch.transfer_chunk_timed(
+                    len(chunk), pay_latency=first, after=deadline)
+                t += dt
+                first = False
+                with self._cond:
+                    if obj.aborted:
+                        raise IOError(f"{self.type_name}: put_stream "
+                                      f"{key!r} displaced")
+                    obj.chunks.append(chunk)
+                    self._cond.notify_all()
+            if first:                    # empty stream still pays the RTT
+                self.clock.sleep(self.latency)
+                t = self.latency
+            with self._cond:
+                if obj.aborted:
+                    raise IOError(f"{self.type_name}: put_stream "
+                                  f"{key!r} displaced")
+                obj.complete = True
+                self._data[key] = b"".join(obj.chunks)
+                self._digests.pop(key, None)
+                if self._inflight.get(key) is obj:
+                    del self._inflight[key]
+                self._cond.notify_all()
+        except BaseException:
+            with self._cond:
+                obj.aborted = True
+                if self._inflight.get(key) is obj:
+                    del self._inflight[key]
+                self._cond.notify_all()
+            raise
         return t
 
     def digest(self, key: str) -> str:
@@ -105,9 +195,13 @@ class StorageService:
             return key in self._data
 
     def delete(self, key: str) -> None:
-        with self._lock:
+        with self._cond:
             self._data.pop(key, None)
             self._digests.pop(key, None)
+            obj = self._inflight.pop(key, None)
+            if obj is not None:          # fail tail readers, not hang them
+                obj.aborted = True
+                self._cond.notify_all()
 
 
 def make_kvs(clock: Clock = DEFAULT_CLOCK) -> StorageService:

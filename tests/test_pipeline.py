@@ -1,0 +1,192 @@
+"""Function-to-function direct streaming (pipelined edges).
+
+The tentpole behavior under test: a ``DataPolicy(pipeline=True)`` edge
+fires the consumer's lightweight trigger at PRODUCER dispatch and flows
+``Invocation.put_stream`` chunks into the consumer's in-flight buffer
+entry while the producer is still executing — plus the failure modes
+that must degrade to the whole-blob path instead of wedging anything.
+"""
+import threading
+import time
+
+from repro.core.errors import StageExecutionError
+from repro.runtime.cluster import Cluster
+from repro.runtime.function import FunctionSpec
+from repro.runtime.planner import Planner
+from repro.runtime.policy import DataPolicy, RetryPolicy, WorkflowBuilder
+from repro.runtime.workflow import WorkflowRunner
+
+MB = 1 << 20
+CHUNK = 1 << 20
+N_CHUNKS = 4
+COLD = {"provision_s": 0.2, "startup_s": 0.05}
+PIPED = DataPolicy(strategy="direct", stream=True, pipeline=True)
+
+
+def _cluster(clock) -> Cluster:
+    return Cluster(node_specs=[("edge-0", "edge"), ("edge-1", "edge"),
+                               ("edge-2", "edge")], clock=clock)
+
+
+def _head(fail_first=False):
+    attempts = []
+
+    def handler(_d, inv):
+        def gen():
+            for i in range(N_CHUNKS):
+                if fail_first and not attempts and i == 1:
+                    attempts.append(1)
+                    raise RuntimeError("producer died mid-stream")
+                inv.cluster.clock.sleep(0.05)
+                yield bytes(CHUNK)
+        return inv.put_stream(gen())
+    return handler
+
+
+def _relay(_d, inv):
+    def gen():
+        for chunk in inv.get_input_stream(timeout=60):
+            yield chunk
+    return inv.put_stream(gen())
+
+
+def _sink(_d, inv):
+    total = 0
+    for chunk in inv.get_input_stream(timeout=60):
+        total += len(chunk)
+    return total.to_bytes(8, "big")
+
+
+def _chain(tag, *, head_handler=None, retry=None):
+    b = WorkflowBuilder(f"pipe{tag}")
+    b.stage("a", FunctionSpec(f"pt-a{tag}", head_handler or _head(),
+                              exec_s=0.2, streaming=True,
+                              streaming_output=True, affinity="edge-0",
+                              retry=retry, **COLD))
+    b.stage("b", FunctionSpec(f"pt-b{tag}", _relay, exec_s=0.1,
+                              streaming=True, streaming_output=True,
+                              affinity="edge-1", **COLD)
+            ).after("a").policy(PIPED)
+    b.stage("c", FunctionSpec(f"pt-c{tag}", _sink, exec_s=0.1,
+                              streaming=True, affinity="edge-2", **COLD)
+            ).after("b").policy(PIPED)
+    return b.build()
+
+
+def test_chain_streams_mid_execution(fast_clock):
+    """Chunks reach the consumer BEFORE the producer finishes executing,
+    and every pipelined consumer's record says so."""
+    cluster = _cluster(fast_clock)
+    wf = _chain("-e2e")
+    tr = WorkflowRunner(cluster, use_truffle=True).run(
+        wf, b"go", source_node="edge-0")
+    size = N_CHUNKS * CHUNK
+    assert tr.stages["c"].output == size.to_bytes(8, "big")
+    assert len(tr.stages["b"].output) == size
+    assert tr.stages["a"].record.pipelined is False
+    assert tr.stages["b"].record.pipelined is True
+    assert tr.stages["c"].record.pipelined is True
+    # the tentpole: b's input started landing while a was still executing
+    a, b = tr.stages["a"].record, tr.stages["b"].record
+    assert b.t_transfer_start < a.t_exec_end
+    # and the trigger overlap: b was placed before a finished, too
+    assert b.t_placed < a.t_exec_end
+
+
+def test_warm_consumers_still_pipeline(fast_clock):
+    """Second run of the same chain hits warm instances everywhere; the
+    pipes must ride the warm path (request meta) just the same."""
+    cluster = _cluster(fast_clock)
+    tr1 = WorkflowRunner(cluster, use_truffle=True).run(
+        _chain("-warm"), b"go", source_node="edge-0")
+    tr2 = WorkflowRunner(cluster, use_truffle=True).run(
+        _chain("-warm"), b"go", source_node="edge-0")
+    size = N_CHUNKS * CHUNK
+    for tr in (tr1, tr2):
+        assert tr.stages["c"].output == size.to_bytes(8, "big")
+        assert tr.stages["b"].record.pipelined is True
+    assert tr2.stages["b"].record.warm_hit is True
+
+
+def test_planner_auto_enables_pipeline_on_streaming_pairs():
+    """pipeline="auto" resolves True only for streaming_output → streaming
+    pairs on a direct edge; a blob-consuming stage keeps it off."""
+    auto = DataPolicy(strategy="direct", stream=True, pipeline="auto")
+    b = WorkflowBuilder("auto")
+    b.stage("p", FunctionSpec("au-p", lambda d, inv: d, exec_s=0.1,
+                              streaming=True, streaming_output=True))
+    b.stage("s", FunctionSpec("au-s", lambda d, inv: d, exec_s=0.1,
+                              streaming=True)).after("p").policy(auto)
+    b.stage("blob", FunctionSpec("au-b", lambda d, inv: d,
+                                 exec_s=0.1)).after("s").policy(auto)
+    plan = Planner().compile(b.build())
+    assert plan.stages["s"].in_edges[0].policy.pipeline is True
+    # "s" has no streaming_output: its consumer cannot be fed mid-execution
+    assert plan.stages["blob"].in_edges[0].policy.pipeline is False
+
+
+def test_producer_crash_falls_back_to_whole_blob_retry(fast_clock):
+    """Producer dies after streaming one chunk: the pipe poisons the
+    consumer's in-flight input (it fails NOW, no timeout burn), the retry
+    layer re-runs the producer, and the consumers fall back to the normal
+    whole-blob dispatch against the retried output."""
+    cluster = _cluster(fast_clock)
+    wf = _chain("-crash", head_handler=_head(fail_first=True),
+                retry=RetryPolicy(max_attempts=2, backoff_s=0.0))
+    tr = WorkflowRunner(cluster, use_truffle=True).run(
+        wf, b"go", source_node="edge-0")
+    size = N_CHUNKS * CHUNK
+    assert tr.stages["c"].output == size.to_bytes(8, "big")
+    assert tr.stages["a"].record.attempt == 2
+    # fallback consumers ran the robust path, not the (dead) pipes
+    assert tr.stages["b"].record.pipelined is False
+    assert tr.stages["c"].record.pipelined is False
+
+
+def test_producer_crash_without_retry_fails_the_run(fast_clock):
+    cluster = _cluster(fast_clock)
+    wf = _chain("-fatal", head_handler=_head(fail_first=True))
+    try:
+        WorkflowRunner(cluster, use_truffle=True).run(
+            wf, b"go", source_node="edge-0")
+        raise AssertionError("expected the producer failure to surface")
+    except StageExecutionError as e:
+        assert e.stage == "a"
+
+
+def test_trigger_failure_never_wedges_the_producer(fast_clock):
+    """A pipe whose consumer trigger fails outright (unregistered target)
+    must self-abort: writes no-op instead of parking on a placement that
+    will never resolve."""
+    cluster = _cluster(fast_clock)
+    pipe = cluster.node("edge-0").truffle.csp.open_pipe(
+        "pt-not-registered", policy=PIPED)
+    pipe.bind_source(cluster.node("edge-0"))
+    done = []
+
+    def writer():
+        pipe.write(b"x" * 1024)      # must return promptly, not raise
+        pipe.close()
+        done.append(True)
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    th.join(timeout=10)
+    assert done, "producer write wedged on a dead trigger"
+    assert not pipe.used             # nothing ever shipped
+
+
+def test_pipe_threads_wind_down(fast_clock):
+    """No pipe/invoke machinery thread outlives the run."""
+    cluster = _cluster(fast_clock)
+    WorkflowRunner(cluster, use_truffle=True).run(
+        _chain("-leak"), b"go", source_node="edge-0")
+    deadline = time.monotonic() + 5.0
+    alive = []
+    while time.monotonic() < deadline:
+        alive = [t.name for t in threading.enumerate()
+                 if t.name.startswith("pipe-")]
+        if not alive:
+            break
+        time.sleep(0.05)
+    assert not alive, alive

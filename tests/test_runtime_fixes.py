@@ -9,6 +9,13 @@
   3. ``Buffer.wait_for`` must return the data observed under the lock hold
      that saw completion — not re-acquire the lock where a racing eviction
      or displacement can turn a successful wait into ``None``.
+
+Later sections cover the CAS/stream accounting fixes that rode the
+pipelined-edge work: alias promotion when a digest's owning entry leaves
+(bytes stay charged), displaced in-flight writers failing immediately,
+high-water-mark backpressure on in-flight entries, and blocked readers
+waking with an error on node crash or stream abort instead of burning
+their timeout.
 """
 import itertools
 import threading
@@ -331,3 +338,156 @@ def test_idle_warm_instances_expire_by_ttl_down_to_min(fast_clock):
     time.sleep(0.05)
     assert cluster.platform.reap_idle() == 0
     assert len(cluster.platform.warm_instances("pool-ttl")) == 1
+
+
+# ------------------------------------- 5. CAS alias/stream accounting
+def test_owner_drop_promotes_surviving_alias():
+    """Dropping the digest's owning entry while an alias shares its chunk
+    list must promote the alias — bytes stay readable AND charged (the
+    old path withdrew the digest and left the chunks resident-but-free)."""
+    from repro.core.buffer import content_digest
+
+    b = Buffer()
+    data = _filled(b"d")
+    d = content_digest(data)
+    b.set("owner", data, digest=d)
+    assert b.alias("al", d)
+    assert b.size == MB                    # alias itself charged 0
+    assert b.drop("owner")
+    assert b.get("al") == data             # promoted heir serves the bytes
+    assert b.size == MB                    # ... and still pays for them
+    assert b.find_digest(d) == "al"
+    assert b.stats["alias_promotions"] == 1
+
+
+def test_owner_eviction_promotes_pinned_alias_and_keeps_charge():
+    """Same promotion under LRU pressure: the evicted owner's byte charge
+    moves to the surviving pinned alias instead of vanishing."""
+    from repro.core.buffer import content_digest
+
+    b = Buffer(capacity_bytes=3 * MB)
+    data = _filled(b"o")
+    d = content_digest(data)
+    b.set("owner", data, digest=d)
+    b.alias("keep", d, pinned=True)        # pinned: immune to eviction
+    b.set("fill", _filled(b"f", 3 * MB))   # pressure: owner is the victim
+    assert "owner" not in b
+    assert b.get("keep") == data
+    # 3 MB fill + 1 MB promoted alias: the undercount bug reported 3 MB
+    assert b.size == 4 * MB
+    assert b.find_digest(d) == "keep"
+
+
+def test_displaced_ingest_writer_fails_immediately():
+    """A same-key re-open displaces an in-flight ingest: its next append
+    must raise NOW (the zombie used to keep growing entry size uncharged
+    until close, drifting the capacity ledger)."""
+    import pytest
+
+    b = Buffer()
+
+    def chunks():
+        yield b"one"
+        b.open_stream("k")                 # displace the ingest's entry
+        yield b"two"
+
+    with pytest.raises(IOError):
+        b.ingest("k", chunks())
+    # the successor stream is untouched by the zombie writer
+    b.append_chunk("k", b"fresh")
+    b.close_stream("k")
+    assert b.get("k") == b"fresh"
+    assert b.size == len(b"fresh")
+
+
+# --------------------------------- 6. pipelined-edge backpressure + wakeups
+def test_append_blocks_at_highwater_until_reader_drains():
+    """Past the high-water mark the writer parks (bp_waits counts it) and
+    a reader taking one chunk releases exactly one more append."""
+    b = Buffer()
+    b.open_stream("k", highwater=2)
+    b.append_chunk("k", b"x")              # first chunk always admitted
+    b.append_chunk("k", b"y")              # 2 unconsumed = at the mark
+    landed = []
+
+    def writer():
+        b.append_chunk("k", b"z")          # must block until a drain
+        landed.append(True)
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    time.sleep(0.1)
+    assert not landed                      # parked at the mark
+    assert b.stats["bp_waits"] >= 1
+
+    r = b.open_reader("k", timeout=5)
+    assert next(r) == b"x"                 # drain 1 byte -> room for "z"
+    th.join(timeout=5)
+    assert landed
+    b.close_stream("k")
+    assert list(r) == [b"y", b"z"]
+
+
+def test_wait_for_lifts_highwater_for_whole_blob_waiters():
+    """A wait_for consumer never drains chunk-wise; waiting must lift the
+    mark so the writer can finish instead of deadlocking against it."""
+    b = Buffer()
+    b.open_stream("k", highwater=2)
+
+    def writer():
+        for _ in range(5):
+            b.append_chunk("k", b"c")
+        b.close_stream("k")
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    assert b.wait_for("k", timeout=5) == b"c" * 5
+    th.join(timeout=5)
+
+
+def test_blocked_reader_raises_on_node_crash_mid_stream(fast_clock):
+    """A reader parked on an in-flight stream must wake with an error when
+    the node dies mid-stream — not burn its timeout."""
+    cluster = Cluster(clock=fast_clock)
+    buf = cluster.node("edge-0").buffer
+    buf.open_stream("k")
+    buf.append_chunk("k", b"c1")
+    r = buf.open_reader("k", timeout=30)
+    assert next(r) == b"c1"
+    outcome = []
+
+    def read_next():
+        t0 = time.monotonic()
+        try:
+            next(r)
+            outcome.append(("chunk", time.monotonic() - t0))
+        except Exception as e:  # noqa: BLE001
+            outcome.append((type(e).__name__, time.monotonic() - t0))
+
+    th = threading.Thread(target=read_next, daemon=True)
+    th.start()
+    time.sleep(0.05)
+    cluster.kill_node("edge-0")
+    th.join(timeout=5)
+    assert outcome and outcome[0][0] in ("BufferOfflineError", "OSError")
+    assert outcome[0][1] < 5.0             # woke NOW, not at the timeout
+
+
+def test_blocked_reader_raises_on_stream_abort():
+    b = Buffer()
+    b.open_stream("k")
+    r = b.open_reader("k", timeout=30)
+    outcome = []
+
+    def read_next():
+        try:
+            next(r)
+        except Exception as e:  # noqa: BLE001
+            outcome.append(type(e).__name__)
+
+    th = threading.Thread(target=read_next, daemon=True)
+    th.start()
+    time.sleep(0.05)
+    b.abort_stream("k")                    # writer died before any chunk
+    th.join(timeout=5)
+    assert outcome == ["OSError"]
