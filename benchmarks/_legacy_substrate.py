@@ -1,0 +1,201 @@
+"""FROZEN pre-refactor substrate hot paths — the honest baseline for
+``substrate_bench.py``.
+
+These are faithful copies of the runtime substrate as it stood BEFORE the
+event-driven rework (commit history: global-lock EventBus with an
+unbounded log, lock-per-placement scheduling dispatched on a fresh OS
+thread per request, per-chunk bandwidth grants, and a payload-copying
+digest). They exist so the benchmark's ">=Nx" claims compare against the
+code that actually shipped, not against a strawman — do NOT "improve"
+this module; it is a measurement artifact, frozen on purpose.
+
+Nothing in the live runtime imports this file.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+# --------------------------------------------------------------- event bus
+class LegacyEventBus:
+    """Pre-refactor bus: ONE lock + ONE condition + ONE unbounded log.
+
+    Every publish appends to the global log under the global lock and
+    wakes every waiter on every topic; ``history``/``wait_for`` scan the
+    whole log linearly. Memory grows without bound for the lifetime of
+    the cluster."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._subs: Dict[str, List[Callable[[dict], None]]] = \
+            defaultdict(list)
+        self._log: List[tuple] = []
+
+    def publish(self, topic: str, event: dict) -> None:
+        with self._cond:
+            self._log.append((topic, event))
+            subs = list(self._subs.get(topic, ()))
+            self._cond.notify_all()
+        for cb in subs:
+            cb(event)
+
+    def subscribe(self, topic: str, callback: Callable[[dict], None]) -> None:
+        with self._lock:
+            self._subs[topic].append(callback)
+
+    def wait_for(self, topic: str, predicate: Callable[[dict], bool],
+                 timeout: Optional[float] = None,
+                 include_history: bool = True) -> Optional[dict]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            idx = 0 if include_history else len(self._log)
+            while True:
+                while idx < len(self._log):
+                    t, e = self._log[idx]
+                    idx += 1
+                    if t == topic and predicate(e):
+                        return e
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                self._cond.wait(remaining)
+
+    def history(self, topic: str) -> List[dict]:
+        with self._lock:
+            return [e for t, e in self._log if t == topic]
+
+
+# ------------------------------------------------------------------ digest
+def legacy_content_digest(data) -> str:
+    """Pre-refactor content address: the ``bytes(data)`` materializes a
+    full copy of the payload before hashing (memoryviews, bytearrays)."""
+    return hashlib.blake2b(bytes(data), digest_size=16).hexdigest()
+
+
+def legacy_stream_digest(chunks) -> str:
+    """Pre-refactor streaming digest: no incremental hasher existed, so a
+    streamed entry's digest meant joining every chunk into one blob and
+    hashing (plus the ``bytes()`` copy above) — O(total) extra memory and
+    a full re-walk of bytes already appended."""
+    return legacy_content_digest(b"".join(bytes(c) for c in chunks))
+
+
+# --------------------------------------------------------------- scheduler
+class LegacyScheduler:
+    """Pre-refactor placement hot path: every request takes the scheduler
+    lock TWICE (once inside ``_pick`` to score, once to charge the load
+    credit and bump stats) and publishes through the global-lock bus.
+    Faithful to the shipped control flow with the scoring inputs the
+    benchmark exercises (no hints/health — identical on both sides)."""
+
+    def __init__(self, node_names: List[str], bus: LegacyEventBus,
+                 scheduling_s: float = 0.0):
+        self.node_names = node_names
+        self.bus = bus
+        self.scheduling_s = scheduling_s
+        self._lock = threading.Lock()
+        self._load: Dict[str, int] = {}
+        self.stats = {"placements": 0}
+
+    def _pick(self) -> str:
+        with self._lock:
+            return min(self.node_names,
+                       key=lambda n: self._load.get(n, 0))
+
+    def schedule(self, fn: str, invocation_id: str) -> str:
+        if self.scheduling_s:
+            time.sleep(self.scheduling_s)
+        node = self._pick()
+        with self._lock:
+            self._load[node] = self._load.get(node, 0) + 1
+            self.stats["placements"] += 1
+        self.bus.publish("scheduling.placed", {
+            "function": fn, "node": node, "invocation": invocation_id,
+            "t": time.monotonic(),
+        })
+        return node
+
+    def release(self, node: str) -> None:
+        with self._lock:
+            self._load[node] = max(0, self._load.get(node, 0) - 1)
+
+
+def legacy_dispatch(target, args=()) -> threading.Thread:
+    """Pre-refactor dispatch: one freshly spawned OS thread per request
+    (``threading.Thread(target=run).start()`` in platform/csp/sdp/
+    transfer/workflow) — the thread-per-transfer substrate."""
+    th = threading.Thread(target=target, args=args, daemon=True)
+    th.start()
+    return th
+
+
+# ----------------------------------------------------------------- channel
+class LegacyTelemetry:
+    """Pre-refactor telemetry: faithful copy of the shipped
+    ``observe_transfer`` — one lock acquisition AND one full EWMA
+    mean+variance fold into BOTH the link and tier tables per
+    observation (per chunk, for a stream)."""
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._links: Dict[Tuple[str, str], list] = {}
+        self._tiers: Dict[Tuple[str, str], list] = {}
+        self.stats = {"observations": 0}
+
+    def _fold(self, table: dict, key, bandwidth, rtt) -> None:
+        ent = table.get(key)
+        if ent is None:
+            ent = table[key] = [bandwidth or 0.0, rtt or 0.0, 0, 0.0, 0.0]
+        a = self.alpha
+        if bandwidth is not None:
+            diff = bandwidth - ent[0]
+            ent[0] += a * diff
+            ent[3] = (1 - a) * (ent[3] + a * diff * diff)
+        if rtt is not None:
+            diff = rtt - ent[1]
+            ent[1] += a * diff
+            ent[4] = (1 - a) * (ent[4] + a * diff * diff)
+        ent[2] += 1
+
+    def observe_transfer(self, link_key, tier_key, nbytes: int,
+                         seconds: float, rtt=None) -> None:
+        if nbytes <= 0 or seconds <= 0:
+            return
+        bw = nbytes / seconds
+        with self._lock:
+            if link_key is not None:
+                self._fold(self._links, link_key, bw, rtt)
+            if tier_key is not None:
+                self._fold(self._tiers, tier_key, bw, rtt)
+            self.stats["observations"] += 1
+
+
+class LegacyChannel:
+    """Pre-refactor grant path: the bandwidth lock is taken once per
+    chunk (N chunks = N lock acquisitions); faithful copy of the shipped
+    ``_grant``."""
+
+    def __init__(self, bandwidth: float, scale: float = 0.0,
+                 chunk_overhead_s: float = 0.0):
+        self.bandwidth = bandwidth
+        self.scale = scale
+        self.chunk_overhead_s = chunk_overhead_s
+        self._lock = threading.Lock()
+        self._busy_until = 0.0
+
+    def _grant(self, nbytes: int, after=None) -> Tuple[float, float]:
+        with self._lock:
+            bw = self.bandwidth
+            wall = (nbytes / bw + self.chunk_overhead_s) * self.scale
+            floor = time.monotonic() if after is None else after
+            start = max(floor, self._busy_until)
+            self._busy_until = start + wall
+            return self._busy_until, bw

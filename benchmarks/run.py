@@ -22,6 +22,9 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
               surviving CAS replicas) vs naive restart + full rerun
   mt.*        multi-tenant serving fleet: Eq. 5 SJF admission + plan-aware
               pre-warm + shared CAS vs a FIFO no-pool baseline
+  sub.*       runtime-substrate microbenches vs the frozen pre-refactor
+              hot paths (placements/sec, chunk grants/sec, bus publish +
+              late-joiner reads, streamed digest MB/s)
   train.*     SDP overlap on a real-compile training cold start
   serve.*     CSP overlap on a prefill->decode KV handoff
   roofline.*  three-term roofline per dry-run cell (reads experiments/)
@@ -59,7 +62,7 @@ def main() -> None:
                             locality_sweep, model_validation,
                             multitenant_sweep, pipeline_sweep, policy_sweep,
                             replan_sweep, roofline, streaming_sweep,
-                            video_analytics)
+                            substrate_bench, video_analytics)
 
     print("# --- paper figures ---")
     lifecycle.run(size_mb=32 if fast else 128)
@@ -96,6 +99,9 @@ def main() -> None:
 
     print("# --- multi-tenant serving fleet (SJF+pools+sharing vs FIFO) ---")
     multitenant_sweep.run()
+
+    print("# --- runtime substrate (vs frozen pre-refactor hot paths) ---")
+    substrate_bench.run(fast=fast)
 
     if "ml" not in skip:
         print("# --- ML-framework integration (real XLA compile) ---")

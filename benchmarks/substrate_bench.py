@@ -1,0 +1,320 @@
+"""Runtime-substrate microbenchmarks: the raw-speed floor of the fleet.
+
+Measures the substrate hot paths at 1k/10k concurrent operations, each
+against its FROZEN pre-refactor implementation
+(``benchmarks/_legacy_substrate.py``). The workloads deliberately include
+the control-plane load a real invocation carries — a completion watcher
+per invocation, data-plane progress events, telemetry folds — because
+that is where the old substrate collapsed: every watcher wakeup re-scanned
+ONE unbounded global event log from index 0 under ONE global lock, every
+request ran on a freshly spawned OS thread, and every chunk grant took the
+bandwidth lock and paid a full telemetry fold individually.
+
+  sub.place.*   invocations/sec for the placement control-plane slice
+                (dispatch + schedule + 2 progress publishes + a completion
+                watcher): worker-pool dispatch + flat-combining batched
+                scheduler + per-topic bus vs thread-per-request dispatch +
+                lock-per-placement scheduler + global-log bus
+  sub.grant.*   chunk grants/sec (grant + telemetry fold machinery, 8
+                contending streams): batched ``grant_chunks`` reservations
+                + closed-form folded telemetry vs one bandwidth lock and
+                one full fold per chunk
+  sub.digest    streamed-digest MB/s — incremental per-chunk BLAKE2b fold
+                vs join-the-blob + ``bytes()`` copy + rehash
+  sub.bus.*     publish + late-joiner ``wait_for`` reads across 8 topics:
+                per-topic retained window vs unbounded global log scans
+
+Both sides run the SAME semantic workload on minimal symmetric fixtures
+(same nodes, same scoring inputs, same event payloads) so the measured
+delta is the substrate — locking, dispatch, and log structure — not
+incidental feature weight. All timing is wall-clock at clock scale 0
+(modeled sleeps are no-ops; what remains IS the substrate cost).
+
+``--check`` exits non-zero unless the 1k-concurrency placement and grant
+speedups hold the >=5x floor — the CI perf gate.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+from collections import deque
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import _legacy_substrate as legacy        # noqa: E402
+from benchmarks.common import MB, emit                    # noqa: E402
+from repro.core.buffer import IncrementalDigest           # noqa: E402
+from repro.runtime.clock import Clock                     # noqa: E402
+from repro.runtime.events import EventBus                 # noqa: E402
+from repro.runtime.executor import EXECUTOR               # noqa: E402
+from repro.runtime.function import FunctionSpec           # noqa: E402
+from repro.runtime.netsim import (Channel, LinkTelemetry,  # noqa: E402
+                                  STREAM_GRANT_BATCH)
+from repro.runtime.scheduler import Scheduler             # noqa: E402
+
+#: max in-flight invocations (worker+watcher pairs) on EITHER substrate —
+#: the same admission window the real fleet applies upstream (FleetGate);
+#: identical on both sides so the comparison is substrate-only. It also
+#: keeps the legacy 10k level from parking 20k simultaneous OS threads on
+#: the benchmark host — a kindness the pre-refactor substrate did not have.
+INFLIGHT = 32
+
+#: untimed invocations run on each substrate before measuring: the fleet
+#: under test is a LONG-LIVED one, so both sides are measured at steady
+#: state — pool at its working set on the new side, and the event log at
+#: its standing length on the legacy side (its unbounded global log is a
+#: cost that compounds with uptime; a fresh bus would be the kindest
+#: possible — and least representative — state to measure it in)
+WARM = 512
+
+NODE_NAMES = ["edge-0", "edge-1", "edge-2", "cloud-0"]
+
+
+class _BenchNode:
+    """Scoring-only node: what ``Scheduler._pick_locked`` reads."""
+    __slots__ = ("name", "alive")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.alive = True
+
+
+class _BenchCluster:
+    """Minimal symmetric fixture for the new scheduler: clock + bus +
+    nodes, nothing else (no registry/health/prefetcher), so both sides
+    score placements on identical inputs."""
+
+    def __init__(self):
+        self.clock = Clock(0.0)
+        self.bus = EventBus()
+        self.node_list = [_BenchNode(n) for n in NODE_NAMES]
+
+
+# ---------------------------------------------------------------- placements
+def _bench_place_new(n: int) -> float:
+    cluster = _BenchCluster()
+    sched = Scheduler(cluster, scheduling_s=0.0)
+    bus = cluster.bus
+    spec = FunctionSpec("sub-place", lambda d, inv: d)
+
+    def worker(i: int) -> None:
+        node = sched.schedule(spec, f"inv-{i}")
+        bus.publish("transfer.progress", {"invocation": i, "pct": 100})
+        bus.publish(f"invocation.done.{i}", {"invocation": i})
+        sched.release(node.name)
+
+    def watcher(i: int) -> None:
+        bus.wait_for(f"invocation.done.{i}", lambda e: True, timeout=120.0)
+
+    def drive(ids) -> None:
+        # sliding admission window: at most INFLIGHT invocation pairs
+        # outstanding (the fleet's upstream gate), harvest oldest-first
+        window: deque = deque()
+        for j in ids:
+            window.append(EXECUTOR.submit(worker, args=(j,),
+                                          name=f"bench-place-{j}"))
+            window.append(EXECUTOR.submit(watcher, args=(j,),
+                                          name=f"bench-watch-{j}"))
+            while len(window) > 2 * INFLIGHT:
+                window.popleft().result(timeout=300.0)
+        while window:
+            window.popleft().result(timeout=300.0)
+
+    drive(range(min(n, WARM)))   # steady state (see WARM)
+    t0 = time.perf_counter()
+    drive(range(n, 2 * n))       # disjoint from the warm wave's id space
+    return time.perf_counter() - t0
+
+
+def _bench_place_legacy(n: int) -> float:
+    bus = legacy.LegacyEventBus()
+    sched = legacy.LegacyScheduler(NODE_NAMES, bus)
+
+    def worker(i: int) -> None:
+        node = sched.schedule("sub-place", f"inv-{i}")
+        bus.publish("transfer.progress", {"invocation": i, "pct": 100})
+        bus.publish(f"invocation.done.{i}", {"invocation": i})
+        sched.release(node)
+
+    def watcher(i: int) -> None:
+        bus.wait_for(f"invocation.done.{i}", lambda e: True, timeout=120.0)
+
+    def drive(ids) -> None:
+        window: deque = deque()
+        for i in ids:
+            window.append(legacy.legacy_dispatch(worker, args=(i,)))
+            window.append(legacy.legacy_dispatch(watcher, args=(i,)))
+            while len(window) > 2 * INFLIGHT:
+                window.popleft().join(timeout=300.0)
+        while window:
+            window.popleft().join(timeout=300.0)
+
+    drive(range(min(n, WARM)))   # steady state (see WARM)
+    t0 = time.perf_counter()
+    drive(range(n, 2 * n))
+    return time.perf_counter() - t0
+
+
+# -------------------------------------------------------------------- grants
+def _bench_grant_new(n_chunks: int, streams: int = 8) -> float:
+    tel = LinkTelemetry()
+    ch = Channel("bench", bandwidth=1e12, latency=0.0, clock=Clock(0.0),
+                 link_key=("a", "b"), tier_key=("edge", "edge"),
+                 telemetry=tel)
+    per = n_chunks // streams
+    batch = STREAM_GRANT_BATCH
+    sizes = [4096] * batch
+
+    def one() -> None:
+        after = None
+        for _ in range(per // batch):
+            deadlines, bw = ch.grant_chunks(sizes, after=after)
+            after = deadlines[-1]
+            ch._observe_n(4096, 4096 / bw, batch)
+
+    drivers = [threading.Thread(target=one) for _ in range(streams)]
+    t0 = time.perf_counter()
+    for th in drivers:
+        th.start()
+    for th in drivers:
+        th.join(timeout=300.0)
+    return time.perf_counter() - t0
+
+
+def _bench_grant_legacy(n_chunks: int, streams: int = 8) -> float:
+    tel = legacy.LegacyTelemetry()
+    ch = legacy.LegacyChannel(bandwidth=1e12, scale=0.0)
+    per = n_chunks // streams
+
+    def one() -> None:
+        after = None
+        for _ in range(per):
+            after, bw = ch._grant(4096, after=after)
+            tel.observe_transfer(("a", "b"), ("edge", "edge"),
+                                 4096, 4096 / bw)
+
+    drivers = [threading.Thread(target=one) for _ in range(streams)]
+    t0 = time.perf_counter()
+    for th in drivers:
+        th.start()
+    for th in drivers:
+        th.join(timeout=300.0)
+    return time.perf_counter() - t0
+
+
+# -------------------------------------------------------------------- digest
+def _bench_digest(total_mb: int = 64, chunk_kb: int = 256):
+    chunk = bytes(chunk_kb << 10)
+    n = (total_mb * MB) // len(chunk)
+    chunks = [chunk] * n
+
+    t0 = time.perf_counter()
+    h = IncrementalDigest()
+    for c in chunks:
+        h.update(c)
+    new_d = h.hexdigest()
+    t_new = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    legacy_d = legacy.legacy_stream_digest(chunks)
+    t_legacy = time.perf_counter() - t0
+    assert new_d == legacy_d, "incremental digest must equal joined-blob hash"
+    return t_new, t_legacy, total_mb
+
+
+# ----------------------------------------------------------------------- bus
+def _bus_workload(bus, n: int, topics: int = 8, read_every: int = 20) -> None:
+    """Identical on both buses: publish across ``topics``, with a
+    late-joiner ``wait_for`` (include_history — scans back) every
+    ``read_every`` publishes and a ``history`` read per topic at the end."""
+    names = [f"bench.topic{i}" for i in range(topics)]
+    for nm in names:
+        bus.subscribe(nm, lambda e: None)
+    for i in range(n):
+        t = names[i % topics]
+        bus.publish(t, {"i": i})
+        if i % read_every == 0:
+            bus.wait_for(t, lambda e, want=i: e.get("i") == want,
+                         timeout=5.0)
+    for nm in names:
+        bus.history(nm)
+
+
+def _bench_bus_new(n: int) -> float:
+    bus = EventBus()
+    t0 = time.perf_counter()
+    _bus_workload(bus, n)
+    return time.perf_counter() - t0
+
+
+def _bench_bus_legacy(n: int) -> float:
+    bus = legacy.LegacyEventBus()
+    t0 = time.perf_counter()
+    _bus_workload(bus, n)
+    return time.perf_counter() - t0
+
+
+# -------------------------------------------------------------------- driver
+def run(fast: bool = False) -> dict:
+    """Run every substrate bench; returns {row_name: speedup} for gating."""
+    levels = (1000,) if fast else (1000, 10000)
+    speedups: dict = {}
+    rows = []
+    for n in levels:
+        tag = f"{n // 1000}k"
+
+        t_new = _bench_place_new(n)
+        t_old = _bench_place_legacy(n)
+        s = t_old / t_new
+        speedups[f"place.{tag}"] = s
+        rows.append((f"sub.place.{tag}", t_new / n,
+                     f"rate={n / t_new:.0f}/s legacy={n / t_old:.0f}/s "
+                     f"speedup={s:.1f}x"))
+
+        t_new = _bench_grant_new(n * 8)
+        t_old = _bench_grant_legacy(n * 8)
+        s = t_old / t_new
+        speedups[f"grant.{tag}"] = s
+        rows.append((f"sub.grant.{tag}", t_new / (n * 8),
+                     f"rate={n * 8 / t_new:.0f}/s "
+                     f"legacy={n * 8 / t_old:.0f}/s speedup={s:.1f}x"))
+
+        t_new = _bench_bus_new(n)
+        t_old = _bench_bus_legacy(n)
+        s = t_old / t_new
+        speedups[f"bus.{tag}"] = s
+        rows.append((f"sub.bus.{tag}", t_new / n,
+                     f"rate={n / t_new:.0f}/s legacy={n / t_old:.0f}/s "
+                     f"speedup={s:.1f}x"))
+
+    t_new, t_old, total_mb = _bench_digest(16 if fast else 64)
+    s = t_old / t_new
+    speedups["digest"] = s
+    rows.append(("sub.digest", t_new / total_mb,
+                 f"mbps={total_mb / t_new:.0f} "
+                 f"legacy_mbps={total_mb / t_old:.0f} speedup={s:.1f}x"))
+
+    emit(rows)
+    return speedups
+
+
+def _check(speedups: dict) -> None:
+    """CI perf gate: the tentpole's acceptance floors at 1k concurrency."""
+    floors = {"place.1k": 5.0, "grant.1k": 5.0}
+    failures = [f"{k}: {speedups.get(k, 0.0):.1f}x < {v:.0f}x"
+                for k, v in floors.items()
+                if speedups.get(k, 0.0) < v]
+    if failures:
+        sys.exit("substrate perf regression:\n  " + "\n  ".join(failures))
+    print("# perf gate OK: " + " ".join(
+        f"{k}={speedups[k]:.1f}x" for k in sorted(speedups)))
+
+
+if __name__ == "__main__":
+    fast = os.environ.get("BENCH_FAST") == "1" or "--fast" in sys.argv[1:]
+    result = run(fast=fast)
+    if "--check" in sys.argv[1:]:
+        _check(result)

@@ -46,8 +46,35 @@ from repro.core.errors import BufferOfflineError
 
 
 def content_digest(data) -> str:
-    """Content address of a payload (BLAKE2b-128: fast, ample for dedup)."""
-    return hashlib.blake2b(bytes(data), digest_size=16).hexdigest()
+    """Content address of a payload (BLAKE2b-128: fast, ample for dedup).
+
+    Hashes the buffer protocol directly — bytes, bytearray, and memoryview
+    inputs are digested with ZERO copies (the old ``bytes(data)`` duplicated
+    a 128 MB payload just to hash it)."""
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+class IncrementalDigest:
+    """Streaming content address: fold chunks as they land. BLAKE2b is
+    sequential, so ``hexdigest()`` after N ``update`` calls equals
+    :func:`content_digest` of the joined blob — streaming entries get
+    content-addressed without ever joining (or re-reading) their chunks.
+    ``seed`` prefixes namespace salt bytes (tenant-isolated CAS)."""
+
+    __slots__ = ("_h", "n_bytes")
+
+    def __init__(self, seed: bytes = b"") -> None:
+        self._h = hashlib.blake2b(digest_size=16)
+        self.n_bytes = 0
+        if seed:
+            self._h.update(seed)
+
+    def update(self, chunk) -> None:
+        self._h.update(chunk)
+        self.n_bytes += len(chunk)
+
+    def hexdigest(self) -> str:
+        return self._h.hexdigest()
 
 
 @dataclass
@@ -66,6 +93,9 @@ class BufferEntry:
     highwater: Optional[int] = None
     #: bytes consumed by the furthest reader (releases backpressure)
     consumed: int = 0
+    #: incremental per-chunk hash (``open_stream(track_digest=True)``):
+    #: folded on every append so close never re-hashes the joined blob
+    hasher: Optional[IncrementalDigest] = None
     _joined: Optional[bytes] = None     # cached join of chunks
 
     @property
@@ -321,18 +351,24 @@ class Buffer:
 
     # ------------------------------------------------------------- streaming
     def open_stream(self, key: str, pinned: bool = False,
-                    highwater: Optional[int] = None) -> None:
+                    highwater: Optional[int] = None,
+                    track_digest: bool = False) -> None:
         """Create an in-flight entry; chunks land via ``append_chunk``.
         Incomplete streams are invisible to get/wait_for and never evicted.
         With ``highwater`` set, appends block once unconsumed in-flight
         bytes reach the mark until a reader drains (pipelined edges bound
-        their buffering this way)."""
+        their buffering this way). ``track_digest`` folds an incremental
+        BLAKE2b over the chunks as they land, so ``close_stream`` can seal
+        the entry content-addressed without re-hashing the joined blob
+        (``stream_digest`` reads the running value)."""
         with self._cond:
             self._check_online_locked()
             self._drop_locked(key)
             e = BufferEntry(key, time.monotonic(), pinned,
                             chunks=[], complete=False, size=0,
-                            highwater=highwater)
+                            highwater=highwater,
+                            hasher=IncrementalDigest() if track_digest
+                            else None)
             self._insert_locked(e)
             self.stats["streams"] += 1
             self._cond.notify_all()
@@ -362,6 +398,8 @@ class Buffer:
             self.stats["bp_waits"] += 1
             self._cond.wait()             # reader drain / abort / offline wake
         e.chunks.append(chunk)
+        if e.hasher is not None:
+            e.hasher.update(chunk)
         e.size += len(chunk)
         self._size += len(chunk)
 
@@ -382,6 +420,10 @@ class Buffer:
             e = self._entries.get(key)
             if e is None or e.complete:
                 raise KeyError(f"{self.name}: no open stream {key!r}")
+            if digest is None and e.hasher is not None:
+                # tracked stream: seal content-addressed from the running
+                # per-chunk hash — the joined blob is never re-hashed
+                digest = e.hasher.hexdigest()
             e.complete = True
             e.digest = digest
             if digest is not None:
@@ -451,6 +493,16 @@ class Buffer:
         """Chunk-granular reader; works on in-flight streams and complete
         entries alike (a ``set`` blob reads as one chunk)."""
         return BufferReader(self, key, timeout)
+
+    def stream_digest(self, key: str) -> Optional[str]:
+        """Running (or final) incremental digest of a ``track_digest``
+        stream — the content address of every chunk landed so far. None
+        for untracked or unknown keys."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or e.hasher is None:
+                return None
+            return e.hasher.hexdigest()
 
     # ------------------------------------------------- content addressing
     def find_digest(self, digest: Optional[str]) -> Optional[str]:

@@ -35,6 +35,7 @@ from repro.core.buffer import content_digest
 from repro.core.errors import DATA_PLANE_FAULTS, NodeCrashError
 from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
                                  seed_content, ship_payload)
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 from repro.runtime.policy import DataPolicy
@@ -153,9 +154,8 @@ class CSP:
                         pass            # target may be dead too — the
                         #                 original error in errbox wins
 
-        th = threading.Thread(target=transfer_path, daemon=True,
-                              name=f"csp-{target_fn}-{inv_id[:6]}")
-        th.start()
+        th = EXECUTOR.submit(transfer_path,
+                             name=f"csp-{target_fn}-{inv_id[:6]}")
         try:
             result = fut.result()
         except BaseException:
@@ -247,8 +247,8 @@ class Pipe:
             else None)
         # (2a) listen for the consumer's host on the side, so the first
         # produced chunk ships the moment both ends are known
-        threading.Thread(target=self._resolve, daemon=True,
-                         name=f"pipe-{target_fn}-{self.inv_id[:6]}").start()
+        EXECUTOR.submit(self._resolve,
+                        name=f"pipe-{target_fn}-{self.inv_id[:6]}")
 
     # ------------------------------------------------------------ placement
     def _resolve(self) -> None:

@@ -38,6 +38,7 @@ from repro.core.buffer import content_digest
 from repro.core.errors import DATA_PLANE_FAULTS, NodeCrashError
 from repro.core.transfer import (RELAY_WAIT_S, join_or_stall, resolve_codec,
                                  seed_content, ship_payload)
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.function import ContentRef, LifecycleRecord, Request
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 from repro.runtime.policy import DataPolicy
@@ -164,9 +165,8 @@ class SDP:
                         pass            # target may be dead too — the
                         #                 original error in errbox wins
 
-        th = threading.Thread(target=data_path, daemon=True,
-                              name=f"sdp-{request.fn}-{inv_id[:6]}")
-        th.start()
+        th = EXECUTOR.submit(data_path,
+                             name=f"sdp-{request.fn}-{inv_id[:6]}")
         try:
             result = fut.result()   # (5)-(7): function reads from the buffer
         except BaseException:

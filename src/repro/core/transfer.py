@@ -18,6 +18,7 @@ import threading
 from typing import Dict, Optional, Tuple
 
 from repro.core.errors import TransferStallError
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.function import LifecycleRecord
 from repro.runtime.netsim import DEFAULT_CHUNK_BYTES
 
@@ -269,9 +270,8 @@ class Prefetcher:
             self._bump("skipped")             # a relay is already in flight
             return False
         self._bump("kicks")
-        threading.Thread(target=self._relay,
-                         args=(digest, src, target, compression),
-                         daemon=True, name=f"prefetch-{digest[:8]}").start()
+        EXECUTOR.submit(self._relay, args=(digest, src, target, compression),
+                        name=f"prefetch-{digest[:8]}")
         return True
 
     def _relay(self, digest: str, src, target, compression: str) -> None:
@@ -294,10 +294,11 @@ class Prefetcher:
             self.cluster.relays.finish(digest, target.name)
 
 
-def join_or_stall(th: threading.Thread, record: LifecycleRecord,
+def join_or_stall(th, record: LifecycleRecord,
                   timeout_s: float, what: str) -> None:
-    """Join the data-path thread; a thread outliving its budget is recorded
-    on the lifecycle record and raised instead of silently leaked."""
+    """Join the data-path task (a pool :class:`~repro.runtime.executor.Task`
+    or a bare Thread); one outliving its budget is recorded on the
+    lifecycle record and raised instead of silently leaked."""
     th.join(timeout=timeout_s)
     if th.is_alive():
         record.transfer_stalled = True

@@ -55,11 +55,22 @@ class ChunkCodec:
     floor: float = 0.05
     compress_bps: float = 1.0e8           # bytes/sec, single core
     sample_bytes: int = 64 * 1024
+    #: compressibility probe: "deflate" (measure: zlib level 1 on the
+    #: window — the default, what the pinned benchmark numbers were taken
+    #: with) or "entropy" (estimate: the jax byte-histogram kernel in
+    #: ``repro.kernels.ops`` — vectorizable/offloadable, but order-0 only:
+    #: blind to match structure, so strictly an opt-in)
+    estimator: str = "deflate"
 
     def ratio(self, data) -> float:
         view = bytes(memoryview(data)[:self.sample_bytes])
         if not view:
             return 1.0
+        if self.estimator == "entropy":
+            # lazy: the runtime data plane must not pay the ML-stack
+            # import unless a plan actually selects the entropy codec
+            from repro.kernels.ops import entropy_wire_ratio
+            return entropy_wire_ratio(view, floor=self.floor)
         compressed = zlib.compress(view, self.level)
         return min(1.0, max(self.floor, len(compressed) / len(view)))
 
@@ -68,7 +79,10 @@ class ChunkCodec:
 
 
 LZ4_LIKE = ChunkCodec("lz4-like")
-_CHUNK_CODECS = {"lz4-like": LZ4_LIKE}
+#: same codec model, entropy-probed: the ratio estimate comes from the
+#: jit'd byte-histogram kernel instead of deflating the sample window
+LZ4_ENTROPY = ChunkCodec("lz4-entropy", estimator="entropy")
+_CHUNK_CODECS = {"lz4-like": LZ4_LIKE, "lz4-entropy": LZ4_ENTROPY}
 
 
 def chunk_codec(name: Optional[str]) -> Optional[ChunkCodec]:

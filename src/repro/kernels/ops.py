@@ -60,3 +60,31 @@ def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = False):
     out = rmsnorm_2d(x.reshape(-1, shape[-1]), scale, eps=eps,
                      interpret=interpret)
     return out.reshape(shape)
+
+
+# -------------------------------------------------- data-plane codec kernel
+@jax.jit
+def _byte_entropy_bits(x):
+    """Order-0 Shannon entropy (bits/byte) of a uint8 sample window — the
+    chunk codec's compressibility probe as one vectorized histogram +
+    reduction instead of a Python-level deflate of the window."""
+    counts = jnp.bincount(x, length=256).astype(jnp.float32)
+    p = counts / jnp.maximum(x.shape[0], 1)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(p), 0.0))
+
+
+def entropy_wire_ratio(data, floor: float = 0.05) -> float:
+    """Estimated wire/payload byte ratio from the window's byte entropy.
+
+    Order-0 entropy lower-bounds what ANY byte-level codec can keep, and
+    ignores match/repeat structure — so this is a cheap, vectorizable
+    estimator, not a replacement for measuring the codec: highly
+    repetitive but byte-diverse payloads (e.g. a repeated 256-byte
+    pattern) estimate near 1.0 where deflate would crush them. Use where
+    estimator throughput matters more than estimator fidelity."""
+    import numpy as np
+    buf = np.frombuffer(memoryview(data), dtype=np.uint8)
+    if buf.size == 0:
+        return 1.0
+    bits = float(_byte_entropy_bits(jnp.asarray(buf)))
+    return min(1.0, max(floor, bits / 8.0))

@@ -19,6 +19,7 @@ from repro.core.buffer import Buffer
 from repro.core.errors import DATA_PLANE_FAULTS
 from repro.runtime.clock import Clock, DEFAULT_CLOCK
 from repro.runtime.events import EventBus
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.health import DEGRADED, DEAD, NodeHealthMonitor
 from repro.runtime.netsim import LinkTelemetry, NetworkFabric
 from repro.runtime.registry import DigestRegistry
@@ -219,8 +220,8 @@ class Cluster:
         """Health-triggered evacuation runs off-thread: the monitor fires
         this from inside a bus publish / stage report — evacuating inline
         would ship bytes (and take buffer locks) under the caller."""
-        threading.Thread(target=self.evacuate_node, args=(name,),
-                         daemon=True, name=f"evac-{name}").start()
+        EXECUTOR.submit(self.evacuate_node, args=(name,),
+                        name=f"evac-{name}")
 
     def tier_of(self, node_name: str) -> str:
         return self.nodes[node_name].tier

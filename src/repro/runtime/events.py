@@ -1,54 +1,123 @@
 """In-process event bus — the Kubernetes API / etcd watch-stream analogue.
 
 The Truffle Watcher subscribes here exactly as the paper's Watcher subscribes
-to Kube pod events (DESIGN §2: assumption change — no external etcd)."""
+to Kube pod events (DESIGN §2: assumption change — no external etcd).
+
+Sharded per topic: each topic owns its lock, its subscriber list, and a
+BOUNDED retained-event window (``retain`` events, default
+:data:`DEFAULT_RETAIN`, env ``TRUFFLE_BUS_RETAIN``). Publishing on one
+topic never contends with waiters or publishers on another, ``wait_for``
+scans only its own topic's window from a sequence cursor (no full-log
+rescans), and ``history`` is a copy of the per-topic window — O(window),
+not O(total events ever published). Late-joiner semantics hold over the
+retained window: a waiter that arrives after an event was published still
+sees it as long as it hasn't aged out; soak runs publishing millions of
+events stay at bounded memory (``stats()["dropped"]`` counts the aged-out
+events). Topic locks are leaves — nothing is called, and no other lock is
+taken, while one is held (subscriber callbacks fire after release)."""
 from __future__ import annotations
 
+import os
 import threading
-from collections import defaultdict
-from typing import Any, Callable, Dict, List, Optional
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+#: retained events per topic (the late-joiner replay window)
+DEFAULT_RETAIN = int(os.environ.get("TRUFFLE_BUS_RETAIN", "4096"))
+
+
+class _Topic:
+    """One topic's bounded window + waiters + subscribers, behind its own
+    lock. Sequence numbers are absolute: ``_base`` is the seq of the oldest
+    retained event, ``_next`` the seq the next publish gets, so cursors
+    survive trims (a cursor behind ``_base`` simply skips what aged out)."""
+
+    __slots__ = ("_lock", "_cond", "_events", "_base", "_next",
+                 "_subs", "_retain", "_dropped")
+
+    def __init__(self, retain: int) -> None:
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._events: Deque[dict] = deque()
+        self._base = 0              # seq of _events[0]
+        self._next = 0              # seq of the next publish
+        self._subs: List[Callable[[dict], None]] = []
+        self._retain = retain
+        self._dropped = 0           # events aged out of the window
 
 
 class EventBus:
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._cond = threading.Condition(self._lock)
-        self._subs: Dict[str, List[Callable[[dict], None]]] = defaultdict(list)
-        self._log: List[tuple] = []  # (topic, event) history for late joiners
+    def __init__(self, retain: int = DEFAULT_RETAIN) -> None:
+        self._retain = retain
+        self._topics: Dict[str, _Topic] = {}
+
+    def _topic(self, topic: str) -> "_Topic":
+        t = self._topics.get(topic)
+        if t is None:
+            # setdefault is atomic: concurrent first-publishers converge
+            # on one _Topic without a bus-wide lock
+            t = self._topics.setdefault(topic, _Topic(self._retain))
+        return t
 
     def publish(self, topic: str, event: dict) -> None:
-        with self._cond:
-            self._log.append((topic, event))
-            subs = list(self._subs.get(topic, ()))
-            self._cond.notify_all()
+        t = self._topic(topic)
+        with t._cond:
+            t._events.append(event)
+            t._next += 1
+            if len(t._events) > t._retain:
+                t._events.popleft()
+                t._base += 1
+                t._dropped += 1
+            subs = list(t._subs) if t._subs else ()
+            t._cond.notify_all()
         for cb in subs:
             cb(event)
 
     def subscribe(self, topic: str, callback: Callable[[dict], None]) -> None:
-        with self._lock:
-            self._subs[topic].append(callback)
+        t = self._topic(topic)
+        with t._lock:
+            t._subs.append(callback)
 
     def wait_for(self, topic: str, predicate: Callable[[dict], bool],
                  timeout: Optional[float] = None,
                  include_history: bool = True) -> Optional[dict]:
-        """Block until an event on ``topic`` satisfies ``predicate``."""
-        import time as _t
-        deadline = None if timeout is None else _t.monotonic() + timeout
-        with self._cond:
-            idx = 0 if include_history else len(self._log)
+        """Block until an event on ``topic`` satisfies ``predicate``.
+        ``include_history`` replays the retained window first; the cursor
+        then follows live publishes (jumping past anything that ages out
+        while this waiter sleeps)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        t = self._topic(topic)
+        with t._cond:
+            seq = t._base if include_history else t._next
             while True:
-                while idx < len(self._log):
-                    t, e = self._log[idx]
-                    idx += 1
-                    if t == topic and predicate(e):
+                if seq < t._base:
+                    seq = t._base       # aged out while we slept
+                while seq < t._next:
+                    e = t._events[seq - t._base]
+                    seq += 1
+                    if predicate(e):
                         return e
                 remaining = None
                 if deadline is not None:
-                    remaining = deadline - _t.monotonic()
+                    remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         return None
-                self._cond.wait(remaining)
+                t._cond.wait(remaining)
 
     def history(self, topic: str) -> List[dict]:
-        with self._lock:
-            return [e for t, e in self._log if t == topic]
+        """The retained window for ``topic``, oldest first."""
+        t = self._topics.get(topic)
+        if t is None:
+            return []
+        with t._lock:
+            return list(t._events)
+
+    def stats(self) -> Dict[str, int]:
+        """Bus-wide occupancy: topic count, retained events, aged-out
+        events. Counters are read racily (sum of per-topic snapshots) —
+        good enough for soak assertions and dashboards."""
+        topics = list(self._topics.values())
+        return {"topics": len(topics),
+                "retained": sum(len(t._events) for t in topics),
+                "dropped": sum(t._dropped for t in topics)}

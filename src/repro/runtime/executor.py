@@ -1,0 +1,155 @@
+"""Shared worker pool — the runtime's thread substrate.
+
+The pre-refactor runtime spawned a fresh OS thread for every invocation,
+CSP transfer path, pipe placement wait, SDP data path, and prefetch relay
+(~60 µs + a stack each, nothing amortized). At fleet scale that is tens of
+thousands of thread creations per wave, and thread churn — not the
+network — dominates the control plane. The pool reuses idle workers:
+``submit`` hands the task to a parked worker (LIFO, warm stacks first) or
+spawns one when none is idle.
+
+Deliberately UNCAPPED: runtime tasks block on each other (an invocation
+waits on a transfer that waits on a placement that waits on a provision),
+so a bounded pool deadlocks under load — concurrency is bounded upstream
+by admission control (FleetGate), not here. Idle workers expire after
+``idle_ttl_s`` (:data:`IDLE_TTL_S`, env ``TRUFFLE_POOL_IDLE_S``), so soak
+runs drain back to the baseline thread count.
+
+Workers take their task's ``name`` while running and restore the pool
+name when parked — thread-name-based diagnostics (and wind-down
+assertions) see exactly what they saw with dedicated threads. A task that
+raises records the error on its :class:`Task` handle, counts it in
+``stats["errors"]``, and prints the traceback (same visibility as a
+dedicated thread's excepthook) — errors never vanish silently.
+"""
+from __future__ import annotations
+
+import _thread
+import os
+import threading
+import traceback
+from queue import Empty, SimpleQueue
+from typing import Callable, List, Optional, Tuple
+
+#: seconds an idle worker waits for its next task before exiting
+IDLE_TTL_S = float(os.environ.get("TRUFFLE_POOL_IDLE_S", "5.0"))
+
+
+class Task:
+    """Handle for a pool-run task. Thread-shaped (``join``/``is_alive``)
+    so call sites that kept their ``Thread`` object keep working, plus a
+    result box (``result`` re-raises the task's error)."""
+
+    __slots__ = ("name", "_done", "_result", "_error")
+
+    def __init__(self, name: Optional[str]) -> None:
+        self.name = name
+        self._done = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._done.wait(timeout)
+
+    def is_alive(self) -> bool:
+        return not self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"task {self.name or '<unnamed>'} "
+                               f"still running")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class _Worker:
+    """One pooled thread: tasks arrive through its private handoff box,
+    so a submit wakes exactly the worker it reserved (no thundering
+    herd on a shared queue)."""
+
+    __slots__ = ("box",)
+
+    def __init__(self) -> None:
+        self.box: "SimpleQueue[Tuple[Task, Callable, tuple]]" = SimpleQueue()
+
+
+class WorkerPool:
+    def __init__(self, idle_ttl_s: float = IDLE_TTL_S,
+                 name: str = "truffle-worker") -> None:
+        self._idle_ttl_s = idle_ttl_s
+        self._name = name
+        self._lock = threading.Lock()
+        self._idle: List[_Worker] = []      # parked workers, LIFO
+        self._seq = 0
+        self.stats = {"spawned": 0, "reused": 0, "active": 0, "errors": 0}
+
+    def submit(self, fn: Callable, args: tuple = (),
+               name: Optional[str] = None) -> Task:
+        """Run ``fn(*args)`` on a pooled worker; returns its :class:`Task`.
+        Reuses a parked worker when one exists, else spawns."""
+        task = Task(name)
+        item = (task, fn, tuple(args))
+        with self._lock:
+            self.stats["active"] += 1
+            w = self._idle.pop() if self._idle else None
+            if w is not None:
+                self.stats["reused"] += 1
+            else:
+                self.stats["spawned"] += 1
+                self._seq += 1
+                seq = self._seq
+        if w is None:
+            w = _Worker()
+            w.box.put(item)
+            # raw spawn, no bootstrap handshake: Thread.start() parks the
+            # submitter until the new thread has bootstrapped and taken
+            # the GIL (milliseconds under load), which serializes pool
+            # growth behind the very burst that demanded it
+            _thread.start_new_thread(self._run, (w, f"{self._name}-{seq}"))
+        else:
+            w.box.put(item)
+        return task
+
+    def _run(self, w: _Worker, idle_name: Optional[str] = None) -> None:
+        me = threading.current_thread()
+        if idle_name is not None:
+            me.name = idle_name      # raw-spawned: adopt the pool name
+        else:
+            idle_name = me.name
+        while True:
+            try:
+                item = w.box.get(timeout=self._idle_ttl_s)
+            except Empty:
+                with self._lock:
+                    if w in self._idle:
+                        self._idle.remove(w)
+                        return          # expired: deregistered, exit
+                # a racing submit reserved us (popped from _idle) but its
+                # handoff hadn't landed yet — it is in flight NOW
+                item = w.box.get()
+            task, fn, args = item
+            if task.name:
+                me.name = task.name
+            try:
+                task._result = fn(*args)
+            except BaseException as e:  # noqa: BLE001 — recorded + printed
+                task._error = e
+                with self._lock:
+                    self.stats["errors"] += 1
+                traceback.print_exc()
+            finally:
+                me.name = idle_name
+                with self._lock:
+                    self.stats["active"] -= 1
+                    self._idle.append(w)
+            task._done.set()
+
+    def idle_workers(self) -> int:
+        with self._lock:
+            return len(self._idle)
+
+
+#: process-wide pool shared by every cluster (threads are a process
+#: resource; per-cluster pools would defeat reuse across test/bench runs)
+EXECUTOR = WorkerPool()

@@ -25,6 +25,7 @@ import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.function import (FunctionInstance, FunctionSpec,
                                     LifecycleRecord)
 
@@ -109,9 +110,8 @@ class WarmPools:
                 started.append(pw)
             self.stats["prewarms_started"] += len(started)
         for pw in started:
-            threading.Thread(target=self._provision_one, args=(spec, pw),
-                             daemon=True,
-                             name=f"prewarm-{spec.name}").start()
+            EXECUTOR.submit(self._provision_one, args=(spec, pw),
+                            name=f"prewarm-{spec.name}")
         return len(started)
 
     def prewarm_next_wave(self, wf, plan, started) -> int:

@@ -25,6 +25,7 @@ import threading
 from concurrent.futures import Future
 from typing import Dict, Optional
 
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.fleet.admission import FleetGate, TenantQuota, Ticket
 from repro.runtime.fleet.pools import PoolPolicy, WarmPools
 from repro.runtime.fleet.sharing import CasSharing
@@ -122,11 +123,10 @@ class Fleet:
                                   tag=wf.name)
         run = FleetRun(ticket)
         run.submitted_s = self.now()
-        threading.Thread(target=self._drive,
-                         args=(run, runner, wf, plan, input_data,
-                               source_node),
-                         daemon=True,
-                         name=f"fleet-{tenant}-{wf.name}").start()
+        EXECUTOR.submit(self._drive,
+                        args=(run, runner, wf, plan, input_data,
+                              source_node),
+                        name=f"fleet-{tenant}-{wf.name}")
         return run
 
     def _drive(self, run: FleetRun, runner: WorkflowRunner, wf, plan,

@@ -17,6 +17,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
+from repro.core.buffer import IncrementalDigest
 from repro.core.errors import NodeCrashError
 
 
@@ -101,6 +102,11 @@ class LifecycleRecord:
     #                               compile; N = dispatched after N replans)
     speculation_budget_s: Optional[float] = None  # straggler budget (sim s)
     #                               this dispatch armed, None = no speculation
+    output_digest: Optional[str] = None  # content address folded chunk-by-
+    #                               chunk during put_stream (unsalted) — the
+    #                               runner's output seeding reuses it instead
+    #                               of re-hashing the joined blob
+    output_digest_bytes: int = 0  # bytes the fold covered (staleness guard)
     calibrated_budget_s: Optional[float] = None  # budget actually armed after
     #                               mid-run inflation calibration (sim s);
     #                               None = no calibration applied
@@ -194,10 +200,12 @@ class Invocation:
         for p in pipes:
             p.bind_source(self.node)
         parts = []
+        hasher = IncrementalDigest()
         try:
             for chunk in chunks:
                 chunk = bytes(chunk)
                 parts.append(chunk)
+                hasher.update(chunk)
                 for p in pipes:
                     p.write(chunk)
             for p in pipes:
@@ -206,6 +214,10 @@ class Invocation:
             for p in pipes:
                 p.abort(exc)
             raise
+        # content address folded per chunk above: downstream output seeding
+        # reuses it instead of re-hashing the joined blob
+        self.record.output_digest = hasher.hexdigest()
+        self.record.output_digest_bytes = hasher.n_bytes
         return b"".join(parts)
 
     def _timed(self, it: Iterator[bytes]) -> Iterator[bytes]:

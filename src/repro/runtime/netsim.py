@@ -41,6 +41,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
+from itertools import accumulate
 from typing import Dict, Iterator, Optional, Tuple
 
 from repro.core.errors import LinkDownError
@@ -56,6 +57,13 @@ DEFAULT_CHUNK_BYTES = 1 << 20
 #: buffer handling); individual ``Channel``s default to 0 so raw-channel
 #: math stays exact unless a fabric opts in.
 FABRIC_CHUNK_OVERHEAD_S = 2e-4
+
+#: How many chunk grants a stream reserves per bandwidth-lock hold.
+#: Total modeled time is unchanged (grants are back-to-back either way);
+#: what changes is lock traffic (÷16) and the granularity at which a racing
+#: reconfigure or a competing stream can slot in (16 chunks, not 1 — small
+#: enough that fair-sharing and mid-stream fault injection still work).
+STREAM_GRANT_BATCH = 16
 
 
 @dataclass(frozen=True)
@@ -165,6 +173,55 @@ class LinkTelemetry:
                 self._fold(self._tiers, tier_key, bw, rtt)
             self.stats["observations"] += 1
 
+    def _fold_n(self, table: dict, key, bandwidth: float,
+                count: int) -> None:
+        """Fold ``count`` IDENTICAL bandwidth observations in O(1) via the
+        EWMA recursion's closed form. With e_{i+1} = e_i + a(bw - e_i) and
+        v_{i+1} = (1-a)(v_i + a d_i^2), identical observations give
+        d_i = r^i d_0 (r = 1-a), hence e_k = bw - r^k d_0 and
+        v_k = r^k v_0 + d_0^2 r^k (1 - r^k) — equal to the sequential fold
+        to float epsilon (verified against the recursion), sample count
+        exact."""
+        ent = table.get(key)
+        if ent is None:
+            # fresh entry adopts the evidence (same as _fold's seeding:
+            # every fold of bw into a mean already AT bw is a no-op)
+            table[key] = [bandwidth, 0.0, count, 0.0, 0.0]
+            return
+        r = 1.0 - self.alpha
+        rk = r ** count
+        d0 = bandwidth - ent[0]
+        ent[0] = bandwidth - rk * d0
+        ent[3] = rk * ent[3] + d0 * d0 * rk * (1.0 - rk)
+        ent[2] += count
+
+    def observe_transfer_n(self, link_key: Optional[Tuple[str, str]],
+                           tier_key: Optional[Tuple[str, str]],
+                           nbytes: int, seconds: float, count: int,
+                           rtt: Optional[float] = None) -> None:
+        """Fold ``count`` identical grants in ONE lock hold (a batch of
+        same-size stream chunks). With no ``rtt`` the whole batch collapses
+        through the closed-form :meth:`_fold_n`; when the batch carries the
+        stream's once-per-transfer ``rtt`` the first observation folds
+        normally and the remaining ``count - 1`` collapse. Counts stay
+        exact; means/variances match the sequential fold to float
+        epsilon."""
+        if nbytes <= 0 or seconds <= 0 or count <= 0:
+            return
+        bw = nbytes / seconds
+        with self._lock:
+            for table, key in ((self._links, link_key),
+                               (self._tiers, tier_key)):
+                if key is None:
+                    continue
+                if rtt is None:
+                    self._fold_n(table, key, bw, count)
+                else:
+                    self._fold(table, key, bw, rtt)
+                    if count > 1:
+                        self._fold_n(table, key, bw, count - 1)
+            self.stats["observations"] += count
+
     def observe_codec(self, name: str, ratio: float) -> None:
         """Observed wire/payload ratio of one codec engagement."""
         with self._lock:
@@ -270,6 +327,13 @@ class Channel:
             self.telemetry.observe_transfer(self.link_key, self.tier_key,
                                             nbytes, seconds, rtt=rtt)
 
+    def _observe_n(self, nbytes: int, seconds: float, count: int,
+                   rtt: Optional[float] = None) -> None:
+        if self.telemetry is not None:
+            self.telemetry.observe_transfer_n(self.link_key, self.tier_key,
+                                              nbytes, seconds, count,
+                                              rtt=rtt)
+
     def _grant(self, nbytes: int, after: float = None,
                bw: Optional[float] = None) -> Tuple[float, float]:
         """Reserve serialized link time for ``nbytes`` (+ the per-grant
@@ -297,6 +361,41 @@ class Channel:
             start = max(floor, self._busy_until)
             self._busy_until = start + wall
             return self._busy_until, bw
+
+    def grant_chunks(self, sizes, after: float = None
+                     ) -> Tuple[list, float]:
+        """Reserve serialized link time for a RUN of chunks in ONE lock
+        hold: returns ``(deadlines, bandwidth)`` — one wall deadline per
+        chunk, back-to-back from ``after`` (or now), all priced at the
+        configuration current when the batch was reserved. N chunks cost
+        one lock acquisition instead of N; the trade is that a racing
+        :meth:`reconfigure` applies from the NEXT batch instead of the
+        next chunk (streams bound batches to ``STREAM_GRANT_BATCH`` so a
+        fault is still felt within a handful of chunks)."""
+        with self._lock:
+            bw = self.bandwidth
+            if not sizes:
+                return [], bw
+            floor = time.monotonic() if after is None else after
+            start = max(floor, self._busy_until)
+            oh = self.chunk_overhead_s
+            scale = self.clock.scale
+            n0 = sizes[0]
+            if sizes.count(n0) == len(sizes):
+                # equal-size run (every batch but a stream's tail): one
+                # per-chunk wall, C-speed cumulative sum — float-identical
+                # to the sequential loop (same adds, same order)
+                per = (n0 / bw + oh) * scale
+                deadlines = list(accumulate([per] * len(sizes),
+                                            initial=start))[1:]
+                start = deadlines[-1]
+            else:
+                deadlines = []
+                for n in sizes:
+                    start += (n / bw + oh) * scale
+                    deadlines.append(start)
+            self._busy_until = start
+            return deadlines, bw
 
     def transfer(self, payload: bytes, wire_ratio: float = 1.0,
                  pace_bps: Optional[float] = None) -> float:
@@ -393,28 +492,43 @@ class Channel:
         deadline = None
         pace_wall = time.monotonic() if pace_bps else None
         first = True
-        for off in range(0, len(payload), chunk_bytes):
+        offsets = range(0, len(payload), chunk_bytes)
+        for base in range(0, len(offsets), STREAM_GRANT_BATCH):
             # a node crash mid-stream fails the remaining chunks fast
             # instead of pricing bytes against a dead endpoint
             self._check_up()
-            chunk = view[off:off + chunk_bytes]
-            wire = self.wire_bytes(len(chunk), wire_ratio)
-            # per-chunk grant: unlike transfer(), a mid-stream reconfigure
-            # (fault injection) DOES apply from the next chunk on — the
-            # stream feels the fault — and each observation reports the
-            # bandwidth ITS OWN grant was priced at (no torn estimates;
-            # the once-per-stream RTT was genuinely slept at stream start)
-            deadline, bw = self._grant(wire, after=deadline)
-            self.clock.sleep_until(deadline)
-            if pace_wall is not None:
-                # codec finishes chunk k at start + Σ chunk/pace (absolute)
-                pace_wall += (len(chunk) / pace_bps) * self.clock.scale
-                self.clock.sleep_until(pace_wall)
-            # pure wire seconds — see transfer(): overhead is the planner's
-            # own additive term, not part of the bandwidth estimate
-            self._observe(wire, wire / bw, rtt=lat if first else None)
-            first = False
-            yield chunk
+            chunks = [view[off:off + chunk_bytes]
+                      for off in offsets[base:base + STREAM_GRANT_BATCH]]
+            wires = [self.wire_bytes(len(c), wire_ratio) for c in chunks]
+            # batched grants: one lock hold reserves the whole run of
+            # chunks. Unlike transfer(), a mid-stream reconfigure (fault
+            # injection) DOES still apply — from the next batch on — and
+            # each observation reports the bandwidth ITS OWN batch was
+            # priced at (no torn estimates; the once-per-stream RTT was
+            # genuinely slept at stream start).
+            deadlines, bw = self.grant_chunks(wires, after=deadline)
+            deadline = deadlines[-1]
+            # fold the batch's telemetry in one lock hold per run of
+            # equal-size chunks (at most two runs: full chunks + the tail).
+            # Pure wire seconds — see transfer(): overhead is the planner's
+            # own additive term, not part of the bandwidth estimate.
+            run_start = 0
+            for i in range(1, len(wires) + 1):
+                if i == len(wires) or wires[i] != wires[run_start]:
+                    w = wires[run_start]
+                    self._observe_n(w, w / bw, i - run_start,
+                                    rtt=lat if first else None)
+                    first = False
+                    run_start = i
+            for chunk, dl in zip(chunks, deadlines):
+                self._check_up()
+                self.clock.sleep_until(dl)
+                if pace_wall is not None:
+                    # codec finishes chunk k at start + Σ chunk/pace
+                    # (absolute)
+                    pace_wall += (len(chunk) / pace_bps) * self.clock.scale
+                    self.clock.sleep_until(pace_wall)
+                yield chunk
         if deadline is None:                  # empty payload: one empty chunk
             yield b""
 

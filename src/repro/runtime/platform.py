@@ -11,6 +11,7 @@ import uuid
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Tuple
 
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.function import (FunctionInstance, FunctionSpec,
                                     LifecycleRecord, Request)
 from repro.runtime.scheduler import PlacementHint
@@ -111,8 +112,7 @@ class Platform:
             except BaseException as e:  # noqa: BLE001
                 fut.set_exception(e)
 
-        threading.Thread(target=run, daemon=True,
-                         name=f"invoke-{request.fn}-{inv_id[:6]}").start()
+        EXECUTOR.submit(run, name=f"invoke-{request.fn}-{inv_id[:6]}")
         return fut, rec
 
     def invoke(self, request: Request, **kw) -> Tuple[bytes, LifecycleRecord]:

@@ -34,7 +34,10 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.errors import WorkflowCycleError
 
 STRATEGIES = ("direct", "kvs", "s3", "auto")
-COMPRESSIONS = ("none", "lz4-like")
+# "lz4-entropy" is the same codec model with the jax byte-histogram
+# compressibility probe (repro.kernels.ops) instead of a deflate sample —
+# opt-in per edge; the planner's auto search stays on the measured probe
+COMPRESSIONS = ("none", "lz4-like", "lz4-entropy")
 
 
 @dataclass(frozen=True)

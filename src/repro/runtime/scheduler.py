@@ -27,10 +27,52 @@ locality and recovers pure least-loaded placement).
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from repro.core.errors import NodeCrashError
 from repro.runtime.function import FunctionSpec, Request
+
+
+class _PlacementReq:
+    """One enqueued placement decision (the combining queue's unit).
+
+    ``holders`` is the caller's registry snapshot — taken BEFORE the
+    request enters the queue so the batch leader never reads the registry
+    under the scheduler lock."""
+
+    __slots__ = ("spec", "inv_id", "hint", "record", "holders",
+                 "node", "error", "locality_hit", "resident",
+                 "speculative", "done")
+
+    def __init__(self, spec, inv_id, hint, record, holders, done=None):
+        self.spec = spec
+        self.inv_id = inv_id
+        self.hint = hint
+        self.record = record
+        self.holders = holders
+        self.node = None
+        self.error: Optional[BaseException] = None
+        self.locality_hit = False
+        self.resident = 0
+        self.speculative = False
+        # the uncontended inline path passes a no-op ``done`` — nobody
+        # parks on a request its own thread is about to decide
+        self.done = done if done is not None else threading.Event()
+
+
+class _NoopDone:
+    """Stand-in for ``threading.Event`` on the inline placement path:
+    allocating a real Event (a Condition + two locks) costs more than the
+    placement decision itself, and no other thread ever waits on it."""
+    __slots__ = ()
+
+    def set(self) -> None:
+        pass
+
+
+_NOOP_DONE = _NoopDone()
 
 
 @dataclass(frozen=True)
@@ -108,6 +150,9 @@ class Scheduler:
     #: load penalty for a hint's ``avoid`` node — large enough that any
     #: other node wins, finite so a single-node cluster still places
     AVOID_PENALTY = 1e6
+    #: max placements decided per scheduler-lock hold by a batch leader —
+    #: bounds how long waiters park while one leader drains the queue
+    MAX_BATCH = 128
 
     def __init__(self, cluster, scheduling_s: float = 0.15,
                  locality_weight: float = 2.0):
@@ -116,8 +161,15 @@ class Scheduler:
         self.locality_weight = locality_weight
         self._lock = threading.Lock()
         self._load: Dict[str, int] = {}
+        # flat-combining placement queue: callers enqueue a _PlacementReq,
+        # then ONE of them (whoever wins ``_combine``) becomes the batch
+        # leader and decides everybody's placement in a single ``_lock``
+        # hold — N concurrent schedules cost one lock acquisition, not N
+        self._pending: deque = deque()
+        self._combine = threading.Lock()
         self.stats = {"placements": 0, "locality_hits": 0,
-                      "prefetch_kicks": 0, "speculative_placements": 0}
+                      "prefetch_kicks": 0, "speculative_placements": 0,
+                      "placement_batches": 0}
 
     def schedule(self, spec: FunctionSpec, invocation_id: str,
                  hint: Optional[PlacementHint] = None, record=None):
@@ -126,51 +178,134 @@ class Scheduler:
         ``hint`` enables digest-aware scoring (plus weight/avoid/prefetch
         directives from the execution plan); ``record`` (a
         LifecycleRecord) gets ``locality_hit``/``prefetched`` stamped.
-        """
+
+        Concurrent callers combine: each enqueues its request, then either
+        becomes the batch leader (drains the whole queue under one lock
+        hold) or parks until a leader has decided its placement. The
+        uncontended path places INLINE — leader-of-a-batch-of-one with no
+        queue traffic and no Event allocation — so a quiet scheduler costs
+        what the old lock-per-placement code did."""
         clock = self.cluster.clock
         clock.sleep(self.scheduling_s)
         holders = self._holders(hint)
-        node = self._pick(spec, hint, holders)
-        # report from the SAME snapshot the decision scored — a second
-        # registry read here could disagree with the placement it describes
-        resident = sum(holders.get(d, {}).get(node.name, 0)
-                       for d, _ in (hint.input_hints() if hint else ()))
-        # a hit means locality scoring PLACED us on the data — coincidental
-        # residency under an affinity pin or with locality disabled is not
-        # one (keeps the load-only control runs honest)
-        scored = (hint is not None and hint.input_hints()
-                  and not spec.affinity and self._weight(hint) > 0)
-        locality_hit = bool(scored and resident > 0)
-        # ``avoid`` is only ever set by a speculative backup dispatch
-        # (failure independence): count it, and mark the event, so tests
-        # and benchmarks can assert WHERE auto-speculation actually fired
-        speculative = bool(hint is not None and hint.avoid is not None)
+        if not self._pending and self._combine.acquire(blocking=False):
+            req = _PlacementReq(spec, invocation_id, hint, record,
+                                holders, done=_NOOP_DONE)
+            try:
+                self._place_batch([req])
+            finally:
+                self._combine.release()
+            self._drain_pending()     # anything enqueued while we led
+            if req.error is not None:
+                raise req.error
+            return req.node
+        req = _PlacementReq(spec, invocation_id, hint, record, holders)
+        self._pending.append(req)
+        self._drain_pending()
+        while not req.done.wait(timeout=0.05):
+            # a leader can check-empty-and-release in the gap between our
+            # append and our acquire attempt — retry until someone (likely
+            # us, now that the lock is free) places the request
+            self._drain_pending()
+        if req.error is not None:
+            raise req.error
+        return req.node
+
+    def _drain_pending(self) -> None:
+        """Become the batch leader if nobody else is: drain the placement
+        queue in MAX_BATCH bites until it is empty. Non-leaders return
+        immediately and park on their request's event.
+
+        The outer loop closes the classic flat-combining race: a request
+        appended between the leader's final empty-check and its release
+        would otherwise sit until a park timeout — so after releasing we
+        re-check the queue and re-elect if anything slipped in."""
+        while self._pending:
+            if not self._combine.acquire(blocking=False):
+                return
+            try:
+                while True:
+                    batch: List[_PlacementReq] = []
+                    while len(batch) < self.MAX_BATCH:
+                        try:
+                            batch.append(self._pending.popleft())
+                        except IndexError:
+                            break
+                    if not batch:
+                        break
+                    self._place_batch(batch)
+            finally:
+                self._combine.release()
+
+    def _place_batch(self, batch: List[_PlacementReq]) -> None:
+        """Decide a whole batch under ONE scheduler-lock hold, then do the
+        slow per-request tail (prefetch kicks, bus publishes, record
+        stamps) outside it, in decision order."""
         with self._lock:
-            self._load[node.name] = self._load.get(node.name, 0) + 1
-            self.stats["placements"] += 1
-            if locality_hit:
-                self.stats["locality_hits"] += 1
-            if speculative:
-                self.stats["speculative_placements"] += 1
-        if record is not None:
-            record.locality_hit = locality_hit
-        # registry-driven prefetch: placing OFF (part of) the data under
-        # load skew kicks the relay NOW, at the placement decision, instead
-        # of when the data path reacts to the trigger. Kicked before the
-        # event publishes so the prefetch leads the relay table and the
-        # CSP/SDP ship becomes its follower (bytes cross the fabric once).
-        prefetched = False
-        if hint is not None and hint.prefetch:
-            prefetched = self._kick_prefetch(hint, node.name, holders)
-        if record is not None:
-            record.prefetched = prefetched
-        self.cluster.bus.publish("scheduling.placed", {
-            "function": spec.name, "node": node.name,
-            "invocation": invocation_id, "t": clock.now(),
-            "locality_hit": locality_hit, "resident_bytes": resident,
-            "prefetched": prefetched, "speculative": speculative,
-        })
-        return node
+            self.stats["placement_batches"] += 1
+            for req in batch:
+                try:
+                    node = self._pick_locked(req.spec, req.hint,
+                                             req.holders)
+                except BaseException as e:  # noqa: BLE001 — per-request
+                    # failure (dead affinity node, empty cluster) must not
+                    # sink the rest of the batch; re-raised on the
+                    # requester's own thread from schedule()
+                    req.error = e
+                    continue
+                req.node = node
+                hint = req.hint
+                # report from the SAME snapshot the decision scored — a
+                # second registry read could disagree with the placement
+                req.resident = sum(
+                    req.holders.get(d, {}).get(node.name, 0)
+                    for d, _ in (hint.input_hints() if hint else ()))
+                # a hit means locality scoring PLACED us on the data —
+                # coincidental residency under an affinity pin or with
+                # locality disabled is not one (keeps load-only runs honest)
+                scored = (hint is not None and hint.input_hints()
+                          and not req.spec.affinity
+                          and self._weight(hint) > 0)
+                req.locality_hit = bool(scored and req.resident > 0)
+                # ``avoid`` is only ever set by a speculative backup
+                # dispatch (failure independence): count it, and mark the
+                # event, so tests and benchmarks can assert WHERE
+                # auto-speculation actually fired
+                req.speculative = bool(hint is not None
+                                       and hint.avoid is not None)
+                self._load[node.name] = self._load.get(node.name, 0) + 1
+                self.stats["placements"] += 1
+                if req.locality_hit:
+                    self.stats["locality_hits"] += 1
+                if req.speculative:
+                    self.stats["speculative_placements"] += 1
+        clock = self.cluster.clock
+        for req in batch:
+            if req.error is not None:
+                req.done.set()
+                continue
+            if req.record is not None:
+                req.record.locality_hit = req.locality_hit
+            # registry-driven prefetch: placing OFF (part of) the data
+            # under load skew kicks the relay NOW, at the placement
+            # decision, instead of when the data path reacts to the
+            # trigger. Kicked before the event publishes so the prefetch
+            # leads the relay table and the CSP/SDP ship becomes its
+            # follower (bytes cross the fabric once).
+            prefetched = False
+            if req.hint is not None and req.hint.prefetch:
+                prefetched = self._kick_prefetch(req.hint, req.node.name,
+                                                 req.holders)
+            if req.record is not None:
+                req.record.prefetched = prefetched
+            self.cluster.bus.publish("scheduling.placed", {
+                "function": req.spec.name, "node": req.node.name,
+                "invocation": req.inv_id, "t": clock.now(),
+                "locality_hit": req.locality_hit,
+                "resident_bytes": req.resident,
+                "prefetched": prefetched, "speculative": req.speculative,
+            })
+            req.done.set()
 
     def pick_node(self, spec: FunctionSpec,
                   hint: Optional[PlacementHint] = None):
@@ -217,7 +352,17 @@ class Scheduler:
     def _pick(self, spec: FunctionSpec,
               hint: Optional[PlacementHint] = None,
               holders: Optional[Dict[str, Dict[str, int]]] = None):
-        from repro.core.errors import NodeCrashError
+        """Standalone pick: registry snapshot OUTSIDE the lock, then one
+        lock hold for the scoring pass (the batch leader skips this wrapper
+        and calls ``_pick_locked`` for the whole batch under one hold)."""
+        if holders is None:
+            holders = self._holders(hint)
+        with self._lock:
+            return self._pick_locked(spec, hint, holders)
+
+    def _pick_locked(self, spec: FunctionSpec,
+                     hint: Optional[PlacementHint],
+                     holders: Dict[str, Dict[str, int]]):
         nodes = self.cluster.node_list
         live = [n for n in nodes if getattr(n, "alive", True)]
         if not live:
@@ -231,28 +376,26 @@ class Scheduler:
                                     f"{n.name} crashed")
                     return n
             raise KeyError(f"affinity node {spec.affinity!r} not in cluster")
-        if holders is None:
-            holders = self._holders(hint)
         health = getattr(self.cluster, "health", None)
-        with self._lock:
-            def score(n) -> float:
-                load = float(self._load.get(n.name, 0))
-                if hint is not None:
-                    w = self._weight(hint)
-                    if w > 0:
-                        load -= w * self._resident_fraction(n.name, hint,
-                                                            holders)
-                    if hint.avoid == n.name:
-                        load += self.AVOID_PENALTY
-                if health is not None:
-                    # suspect nodes compete at a handicap; degraded ones
-                    # effectively never win (finite, so a fully sick
-                    # cluster still places rather than wedging)
-                    load += health.penalty(n.name)
-                return load
-            # min() is stable: ties keep the node_list order, so behavior
-            # without hints is exactly the old least-loaded placement
-            return min(live, key=score)
+
+        def score(n) -> float:
+            load = float(self._load.get(n.name, 0))
+            if hint is not None:
+                w = self._weight(hint)
+                if w > 0:
+                    load -= w * self._resident_fraction(n.name, hint,
+                                                        holders)
+                if hint.avoid == n.name:
+                    load += self.AVOID_PENALTY
+            if health is not None:
+                # suspect nodes compete at a handicap; degraded ones
+                # effectively never win (finite, so a fully sick
+                # cluster still places rather than wedging)
+                load += health.penalty(n.name)
+            return load
+        # min() is stable: ties keep the node_list order, so behavior
+        # without hints is exactly the old least-loaded placement
+        return min(live, key=score)
 
     def _kick_prefetch(self, hint: PlacementHint, node_name: str,
                        holders: Dict[str, Dict[str, int]]) -> bool:

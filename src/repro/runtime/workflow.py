@@ -63,6 +63,7 @@ from repro.core.model import (PhaseEstimate, baseline_time, calibrated_budget,
                               drift, fold_inflation, should_replan,
                               stage_inflation, truffle_time)
 from repro.core.transfer import publish_content
+from repro.runtime.executor import EXECUTOR
 from repro.runtime.function import ContentRef, FunctionSpec, LifecycleRecord, Request
 from repro.runtime.planner import ExecutionPlan, Planner, StagePlan
 from repro.runtime.policy import DataPolicy, ReplanPolicy
@@ -483,9 +484,9 @@ class WorkflowRunner:
                     size_hint=(prof.size if prof is not None else 0),
                     pipes=child)
                 started.add(cname)
-                threading.Thread(target=wait_pipelined,
-                                 args=(cname, pipe, child, current),
-                                 daemon=True).start()
+                EXECUTOR.submit(wait_pipelined,
+                                args=(cname, pipe, child, current),
+                                name=f"pipe-wait-{cname}")
                 pipes.append(pipe)
             return tuple(pipes)
 
@@ -521,9 +522,8 @@ class WorkflowRunner:
                     # (their cold starts overlap its whole execution) and
                     # hand the producer the pipes its put_stream writes to
                     pipes = open_pipes(name, current)
-                    threading.Thread(target=run_stage,
-                                     args=(name, current, pipes),
-                                     daemon=True).start()
+                    EXECUTOR.submit(run_stage, args=(name, current, pipes),
+                                    name=f"stage-{name}")
             # plan-aware pre-warming: a stage whose deps are ALL dispatched
             # triggers next wave — the fleet pool provisions its sandboxes
             # now, so the CSP ship lands in an already-provisioning sandbox
@@ -555,7 +555,14 @@ class WorkflowRunner:
         where they actually live — the multi-input fan-in hint."""
         if not sp.seed_output or not self.use_truffle:
             return
-        sr.digest = self._digest(sr.output)
+        rec = sr.record
+        if (self.cas_salt is None and rec.output_digest is not None
+                and rec.output_digest_bytes == len(sr.output)):
+            # streamed producers folded the digest chunk-by-chunk during
+            # put_stream — no re-hash of the joined blob here
+            sr.digest = rec.output_digest
+        else:
+            sr.digest = self._digest(sr.output)
         node = self.cluster.nodes.get(sr.record.node)
         if node is not None:
             publish_content(node, sr.output, sr.digest)

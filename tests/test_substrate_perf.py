@@ -1,0 +1,216 @@
+"""Runtime-substrate regression tests: the raw-speed properties the
+event-driven rework bought, pinned at test scale.
+
+Four families:
+- speedup floors: the new substrate must beat the frozen pre-refactor
+  hot paths (``benchmarks/_legacy_substrate.py``) even at tiny scale,
+  with floors far below the benchmark gate's (small runs are noisy);
+- bounded memory: the per-topic bus retains a bounded window under a
+  200-wave publish soak (the legacy bus grew its one global log forever);
+- copy-free digests: ``content_digest`` hashes a memoryview without
+  materializing the payload, and the incremental hasher matches the
+  joined-blob digest bit-for-bit;
+- a concurrency slice that hammers the batched scheduler, batched grants,
+  and sharded bus from many threads at once — run under
+  ``TRUFFLE_LOCKCHECK=1`` (conftest) it doubles as the lock-discipline
+  witness for the new substrate paths.
+"""
+import pytest
+
+from repro.core.buffer import IncrementalDigest, content_digest
+from repro.runtime.clock import Clock
+from repro.runtime.events import EventBus
+from repro.runtime.executor import EXECUTOR
+from repro.runtime.function import FunctionSpec
+from repro.runtime.netsim import Channel, LinkTelemetry
+from repro.runtime.scheduler import Scheduler
+
+
+def _bench():
+    """The benchmark module doubles as the test fixture (same workloads,
+    same frozen legacy baseline) — resolved lazily so a broken bench
+    import fails the perf tests, not collection of the whole file."""
+    from benchmarks import substrate_bench
+    return substrate_bench
+
+
+# ------------------------------------------------------- speedup floors
+def _best_speedup(new_fn, legacy_fn, attempts: int = 3) -> float:
+    """Best-of-N ratio: micro-runs on shared CI boxes see multi-ms noise
+    spikes; the property under test is capability, not a tight CI SLA."""
+    best = 0.0
+    for _ in range(attempts):
+        t_new = new_fn()
+        t_legacy = legacy_fn()
+        if t_new > 0:
+            best = max(best, t_legacy / t_new)
+    return best
+
+
+def test_placement_speedup_floor():
+    sb = _bench()
+    s = _best_speedup(lambda: sb._bench_place_new(200),
+                      lambda: sb._bench_place_legacy(200))
+    # benchmark gate demands 5x at 1k; at n=200 demand a conservative 1.5x
+    assert s >= 1.5, f"placement speedup {s:.2f}x < 1.5x floor"
+
+
+def test_grant_speedup_floor():
+    sb = _bench()
+    s = _best_speedup(lambda: sb._bench_grant_new(4096),
+                      lambda: sb._bench_grant_legacy(4096))
+    assert s >= 1.5, f"grant speedup {s:.2f}x < 1.5x floor"
+
+
+def test_digest_speedup_and_equality():
+    sb = _bench()
+    t_new, t_legacy, _ = sb._bench_digest(total_mb=8)
+    # the equality assert lives inside _bench_digest; here pin that the
+    # incremental fold is at least not SLOWER than join+copy+rehash
+    assert t_new <= t_legacy * 1.25, \
+        f"incremental digest slower than legacy: {t_new:.4f}s vs {t_legacy:.4f}s"
+
+
+# ------------------------------------------------------- bounded memory
+def test_bus_memory_bounded_over_soak():
+    """200 publish waves on a fixed topic set: retained events stay at the
+    per-topic cap (aged-out events are dropped and counted), and the
+    allocation footprint stops growing once the windows are full — the
+    legacy bus grew by wave_events × waves forever."""
+    import tracemalloc
+
+    retain = 64
+    topics = 8
+    waves, wave_events = 200, 200
+    bus = EventBus(retain=retain)
+    names = [f"soak.t{i}" for i in range(topics)]
+
+    def wave(w: int) -> None:
+        for i in range(wave_events):
+            bus.publish(names[i % topics], {"wave": w, "i": i})
+
+    for w in range(waves // 2):           # fill every window to its cap
+        wave(w)
+    tracemalloc.start()
+    base, _ = tracemalloc.get_traced_memory()
+    for w in range(waves // 2, waves):
+        wave(w)
+    grown, _ = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    stats = bus.stats()
+    assert stats["retained"] <= retain * topics
+    assert stats["dropped"] > 0           # the soak actually aged events out
+    total = waves * wave_events
+    assert stats["dropped"] == total - stats["retained"]
+    # steady-state waves must not accumulate: allow slack for allocator
+    # noise, but nothing near the ~100k events published after the mark
+    assert grown - base < 256 * 1024, \
+        f"bus grew {(grown - base) / 1024:.0f} KiB during steady-state soak"
+    # late-joiner semantics hold over the retained window only
+    assert bus.wait_for(names[0], lambda e: e["wave"] == waves - 1,
+                        timeout=1.0) is not None
+    assert bus.wait_for(names[0], lambda e: e["wave"] == 0,
+                        timeout=0.05) is None
+
+
+# ----------------------------------------------------- copy-free digest
+def test_content_digest_copy_free():
+    """Digesting an 8 MiB memoryview must not materialize the payload:
+    the legacy path's ``bytes(data)`` peaked at +payload bytes."""
+    import tracemalloc
+
+    payload = bytes(8 << 20)
+    view = memoryview(payload)
+    content_digest(view)                  # warm hashlib internals
+    tracemalloc.start()
+    d = content_digest(view)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert d == content_digest(payload)   # view and bytes agree
+    assert peak < (1 << 20), \
+        f"content_digest allocated {peak >> 10} KiB for an 8 MiB view"
+
+
+def test_incremental_digest_matches_blob():
+    chunks = [bytes([i]) * 1337 for i in range(32)]
+    h = IncrementalDigest()
+    for c in chunks:
+        h.update(memoryview(c))
+    assert h.hexdigest() == content_digest(b"".join(chunks))
+    assert h.n_bytes == sum(len(c) for c in chunks)
+
+
+# -------------------------------------------- concurrency / lock slice
+class _Node:
+    __slots__ = ("name", "alive")
+
+    def __init__(self, name):
+        self.name = name
+        self.alive = True
+
+
+class _MiniCluster:
+    def __init__(self):
+        self.clock = Clock(0.0)
+        self.bus = EventBus()
+        self.node_list = [_Node(f"n{i}") for i in range(4)]
+
+
+def test_substrate_concurrency_slice():
+    """Hammer every new substrate path from many threads at once: batched
+    placements (flat-combining leader election), batched chunk grants +
+    closed-form telemetry folds, sharded publishes with parked waiters,
+    and pooled dispatch. Correctness asserts are exact counters — and
+    under TRUFFLE_LOCKCHECK=1 this doubles as the inversion witness."""
+    cluster = _MiniCluster()
+    sched = Scheduler(cluster, scheduling_s=0.0)
+    spec = FunctionSpec("slice", lambda d, inv: d)
+    tel = LinkTelemetry()
+    ch = Channel("slice", bandwidth=1e12, latency=0.0, clock=Clock(0.0),
+                 link_key=("a", "b"), tier_key=("edge", "edge"),
+                 telemetry=tel)
+    threads, per = 16, 50
+    errors = []
+
+    def one(tid: int) -> None:
+        try:
+            after = None
+            for i in range(per):
+                node = sched.schedule(spec, f"t{tid}-{i}")
+                deadlines, bw = ch.grant_chunks([2048] * 4, after=after)
+                after = deadlines[-1]
+                ch._observe_n(2048, 2048 / bw, 4)
+                cluster.bus.publish(f"slice.done.{tid}", {"i": i})
+                sched.release(node.name)
+            got = cluster.bus.wait_for(f"slice.done.{tid}",
+                                       lambda e: e["i"] == per - 1,
+                                       timeout=10.0)
+            assert got is not None
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    tasks = [EXECUTOR.submit(one, args=(t,), name=f"slice-{t}")
+             for t in range(threads)]
+    for t in tasks:
+        t.result(timeout=60.0)
+    assert not errors, errors
+    assert sched.stats["placements"] == threads * per
+    assert sched.stats["placement_batches"] <= sched.stats["placements"]
+    assert sum(sched._load.values()) == 0          # every release landed
+    est = tel.link(tiers=("edge", "edge"))
+    assert est is not None
+    assert est.samples == threads * per * 4        # batch folds count exact
+    assert est.bandwidth == pytest.approx(1e12)
+
+
+def test_scheduler_combining_matches_serial_pick():
+    """A batch leader's decisions must match what serial lock-per-placement
+    picks would have produced: round-robin across equally loaded nodes."""
+    cluster = _MiniCluster()
+    sched = Scheduler(cluster, scheduling_s=0.0)
+    spec = FunctionSpec("rr", lambda d, inv: d)
+    picked = [sched.schedule(spec, f"i{i}").name for i in range(8)]
+    # 4 nodes, no releases: every node charged twice, in node_list order
+    assert picked == ["n0", "n1", "n2", "n3"] * 2
+    assert sched.load_of("n0") == 2
